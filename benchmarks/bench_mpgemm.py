@@ -1,0 +1,67 @@
+"""Paper Table 7 / Figure 7 analogue: mpGEMM throughput ladder by format.
+
+The paper's headline is tokens/s vs bits-per-weight on CPUs.  On this
+container we (a) measure the XLA mpGEMM wall time per format at decode
+GEMV shapes, and (b) derive the TPU v5e roofline projection: decode is
+HBM-bound, so projected tokens/s = HBM_bw / bytes_per_token(format) — the
+exact mechanism behind the paper's Figure 7 ordering (b1.67 TL2 > b2 I2_S ≈
+TQ2 > b4 Q4 > b16 fp16).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mpgemm, quant
+from repro.core.qtensor import FORMAT_BPW, pack_ternary
+from repro.launch.roofline import HBM_BW, model_numbers
+from repro import configs
+
+FORMATS = ["fp", "int4", "i2s", "tl1", "tl2", "tq1"]
+SHAPES = [(3072, 8192), (4096, 11008)]  # (K, M): 3.8B / 7B FFN-ish layers
+
+
+def _time(fn, *args, reps=5) -> float:
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6  # µs
+
+
+def projected_tokens_per_s(arch: str, fmt: str) -> float:
+    """TPU v5e single-chip decode roofline: HBM_bw / model bytes per token."""
+    cfg = configs.get(arch)
+    n = model_numbers(cfg)["n_active"]
+    bpw = FORMAT_BPW[fmt]
+    weight_bytes = n * bpw / 8.0
+    return HBM_BW / weight_bytes
+
+
+def run() -> list:
+    rows = []
+    rng = np.random.default_rng(0)
+    for k, m in SHAPES:
+        w = jnp.asarray(rng.integers(-1, 2, size=(m, k)), jnp.int8)
+        x = jnp.asarray(rng.normal(size=(1, k)), jnp.float32)
+        x_q, sx = quant.absmax_int8(x)
+        for fmt in FORMATS:
+            if fmt == "fp":
+                pw = pack_ternary(w, jnp.float32(1.0), "int4")
+                pwf = jax.jit(lambda xq, s: mpgemm.mpgemm_xla(
+                    xq.astype(jnp.float32), s,
+                    type(pw)({"w": w.astype(jnp.bfloat16)}, jnp.float32(1.0), "fp", (m, k))))
+                us = _time(pwf, x_q, sx)
+            else:
+                pw = pack_ternary(w, jnp.float32(1.0), fmt)
+                f = jax.jit(lambda xq, s, pw=pw: mpgemm.mpgemm_xla(xq, s, pw))
+                us = _time(f, x_q, sx)
+            proj = projected_tokens_per_s("bitnet-b1.58-3.8b", fmt)
+            rows.append((f"mpgemm_gemv_{fmt}_K{k}_M{m}", us,
+                         f"b{FORMAT_BPW[fmt]:.2f}bpw_proj{proj:.0f}tok/s"))
+    return rows

@@ -1,0 +1,66 @@
+"""Paper Table 2 analogue: end-to-end inference quality per kernel/format.
+
+Trains a small model with the b1.58 QAT scheme on the synthetic pipeline,
+then evaluates held-out NLL (perplexity proxy) under every serving format.
+The paper's claim pattern must reproduce exactly:
+    Float16(=QAT forward) == I2_S == TL1_1 == TL2_1   (lossless)
+    TL1_0 / TL2_0 ≈ but not == (negligible loss)
+    Q8_K-block activations != (llama.cpp TQ semantics, not lossless)
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core.bitlinear import QuantConfig
+from repro.data.pipeline import DataConfig, DataIterator
+from repro.models import lm
+from repro.train import loop as train_loop
+
+VARIANTS = [
+    ("float16_qat", None),  # the QAT forward itself (paper's Float16 row)
+    ("i2s", QuantConfig(mode="quant", fmt="i2s")),
+    ("tl1_1", QuantConfig(mode="quant", fmt="tl1", lut="lossless")),
+    ("tl2_1", QuantConfig(mode="quant", fmt="tl2", lut="lossless")),
+    ("tl1_0", QuantConfig(mode="quant", fmt="tl1", lut="lossy")),
+    ("tl2_0", QuantConfig(mode="quant", fmt="tl2", lut="lossy")),
+    ("q8_block(TQ-like)", QuantConfig(mode="quant", fmt="i2s", act="block", act_block=48)),
+]
+
+
+def _nll(cfg, params, batches) -> float:
+    tot, n = 0.0, 0
+    for b in batches:
+        loss, _ = lm.loss_fn(params, b, cfg)
+        tot += float(loss)
+        n += 1
+    return tot / n
+
+
+def run() -> list:
+    cfg = configs.smoke("qwen1.5-0.5b").replace(dtype="float32")
+    tcfg = train_loop.TrainConfig(
+        opt=train_loop.opt.OptConfig(lr=3e-3, warmup_steps=5, total_steps=80))
+    dc = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8)
+    state, _ = train_loop.train(cfg, tcfg, DataIterator(dc), n_steps=40)
+    held = [next(DataIterator(DataConfig(vocab=cfg.vocab, seq_len=32,
+                                         global_batch=8, seed=99))) for _ in range(4)]
+    rows = []
+    base = None
+    for name, qcfg in VARIANTS:
+        t0 = time.perf_counter()
+        if qcfg is None:
+            nll = _nll(cfg, state["params"], held)
+        else:
+            c = cfg.replace(quant=qcfg)
+            nll = _nll(c, lm.pack(state["params"], c), held)
+        us = (time.perf_counter() - t0) * 1e6
+        if base is None:
+            base = nll
+        rows.append((f"quality_{name}", us, f"nll{nll:.6f}_delta{nll-base:+.2e}"))
+    return rows

@@ -1,0 +1,61 @@
+"""Roofline aggregation: turn results/dryrun/*.json into the §Roofline table.
+
+One row per (arch × shape × mesh): three terms, dominant bound, model-flops
+ratio, and the step-time estimate.  Writes results/roofline.md for
+EXPERIMENTS.md inclusion and returns CSV rows for the bench harness.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load(out_dir: str = "results/dryrun") -> list:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def fraction(rec: dict) -> float:
+    """Roofline fraction: useful model-flops time / modeled step time."""
+    ideal = rec["model"]["model_flops_per_device"] / 197e12
+    return ideal / max(rec["terms"]["step_s"], 1e-12)
+
+
+def markdown(recs: list) -> str:
+    lines = [
+        "| arch | shape | mesh | compute s | memory s | collective s | bound "
+        "| step s | useful-flop frac | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], len(r["mesh"]))):
+        t = r["terms"]
+        tag = f" [{r['tag']}]" if r.get("tag") else ""
+        lines.append(
+            f"| {r['arch']}{tag} | {r['shape']} | {'×'.join(map(str, r['mesh']))} "
+            f"| {t['compute_s']:.3g} | {t['memory_s']:.3g} | {t['collective_s']:.3g} "
+            f"| {t['bound'].replace('_s','')} | {t['step_s']:.3g} "
+            f"| {r['model']['useful_flop_frac']:.2f} | {fraction(r):.3f} |"
+        )
+    return "\n".join(lines)
+
+
+def run() -> list:
+    recs = load()
+    os.makedirs("results", exist_ok=True)
+    with open("results/roofline.md", "w") as f:
+        f.write(markdown(recs) + "\n")
+    rows = []
+    for r in recs:
+        mesh = "pod2" if len(r["mesh"]) == 3 else "pod1"
+        tag = f"_{r['tag']}" if r.get("tag") else ""
+        rows.append((
+            f"roofline_{r['arch']}_{r['shape']}_{mesh}{tag}",
+            r["terms"]["step_s"] * 1e6,
+            f"bound={r['terms']['bound'].replace('_s','')}_frac{fraction(r):.3f}",
+        ))
+    return rows

@@ -1,0 +1,49 @@
+"""Paper Figure 8 / Appendix A-B analogue: the compute-memory trade-off.
+
+The paper sweeps thread counts; the TPU-relevant axis is ARITHMETIC
+INTENSITY: we sweep the GEMM batch N (decode→prefill transition) and report
+per-token cost per format.  Expected shape (and what validates the analysis
+in Appendix A): at N=1 everything is memory-bound and sub-2-bpw formats win
+by bytes; as N grows the MAD/MXU paths flatten to compute-bound while the
+LUT path's extra lookup arithmetic shows up — the ELUT C^g/g overhead the
+paper bounds against register length.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mpgemm, quant
+from repro.core.qtensor import pack_ternary
+
+
+def _time(fn, *args, reps=3) -> float:
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run() -> list:
+    rows = []
+    rng = np.random.default_rng(0)
+    k, m = 2048, 2048
+    w = jnp.asarray(rng.integers(-1, 2, size=(m, k)), jnp.int8)
+    pw_i2s = pack_ternary(w, jnp.float32(1.0), "i2s")
+    pw_tl1 = pack_ternary(w, jnp.float32(1.0), "tl1")
+    for n in (1, 8, 64, 256):
+        x = jnp.asarray(rng.normal(size=(n, k)), jnp.float32)
+        x_q, sx = quant.absmax_int8(x)
+        mad = jax.jit(lambda xq, s: mpgemm.mpgemm_xla(xq, s, pw_i2s))
+        lut = jax.jit(lambda xq, s: mpgemm.tl1_lut(xq, s, pw_tl1, lossless=True))
+        us_mad = _time(mad, x_q, sx)
+        us_lut = _time(lut, x_q, sx)
+        rows.append((f"tradeoff_mad_N{n}", us_mad, f"per_tok{us_mad/n:.1f}us"))
+        rows.append((f"tradeoff_lut_N{n}", us_lut, f"per_tok{us_lut/n:.1f}us"))
+    return rows

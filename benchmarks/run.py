@@ -1,0 +1,29 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  bench_mpgemm   — Table 7 / Fig 7: format speed ladder + TPU projections
+  bench_quality  — Table 2: lossless / lossy inference quality
+  bench_tradeoff — Fig 8 / Appendix A-B: compute-memory trade-off vs batch
+  bench_roofline — §Roofline: aggregated dry-run terms per (arch × shape)
+
+Prints ``name,us_per_call,derived`` CSV.
+"""
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import bench_mpgemm, bench_quality, bench_roofline, bench_tradeoff
+
+    print("name,us_per_call,derived")
+    for mod in (bench_mpgemm, bench_quality, bench_tradeoff, bench_roofline):
+        try:
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception:
+            traceback.print_exc()
+            print(f"{mod.__name__},-1,FAILED", file=sys.stdout)
+
+
+if __name__ == '__main__':
+    main()

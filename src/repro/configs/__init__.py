@@ -1,0 +1,74 @@
+"""Architecture registry: ``--arch <id>`` → ModelConfig, plus smoke reducers.
+
+Full configs are exercised only through the dry-run (ShapeDtypeStruct, no
+allocation); ``smoke(arch)`` returns a same-family reduced config that runs a
+real forward/train step on CPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+from repro.configs import (  # noqa: F401
+    bitnet_b158,
+    deepseek_coder_33b,
+    gemma3_4b,
+    llama4_maverick_400b_a17b,
+    mamba2_1_3b,
+    moonshot_v1_16b_a3b,
+    phi3_vision_4_2b,
+    qwen1_5_0_5b,
+    qwen3_4b,
+    recurrentgemma_2b,
+    seamless_m4t_medium,
+)
+
+ARCHS = {
+    "phi-3-vision-4.2b": phi3_vision_4_2b.CONFIG,
+    "deepseek-coder-33b": deepseek_coder_33b.CONFIG,
+    "gemma3-4b": gemma3_4b.CONFIG,
+    "qwen3-4b": qwen3_4b.CONFIG,
+    "qwen1.5-0.5b": qwen1_5_0_5b.CONFIG,
+    "moonshot-v1-16b-a3b": moonshot_v1_16b_a3b.CONFIG,
+    "llama4-maverick-400b-a17b": llama4_maverick_400b_a17b.CONFIG,
+    "recurrentgemma-2b": recurrentgemma_2b.CONFIG,
+    "seamless-m4t-medium": seamless_m4t_medium.CONFIG,
+    "mamba2-1.3b": mamba2_1_3b.CONFIG,
+    "bitnet-b1.58-700m": bitnet_b158.make("700m"),
+    "bitnet-b1.58-3.8b": bitnet_b158.make("3.8b"),
+    "bitnet-b1.58-100b": bitnet_b158.make("100b"),
+}
+
+ASSIGNED = [k for k in ARCHS if not k.startswith("bitnet")]
+
+
+def get(name: str) -> ModelConfig:
+    return ARCHS[name]
+
+
+def smoke(name: str) -> ModelConfig:
+    """Reduced same-family config: small widths, few experts, tiny vocab."""
+    cfg = ARCHS[name]
+    pat = len(cfg.block_pattern)
+    return dataclasses.replace(
+        cfg,
+        n_layers=max(2 * pat + min(1, cfg.n_layers % pat), pat + 1),  # scan + remainder coverage
+        d_model=192,
+        n_heads=4,
+        n_kv_heads=max(1, min(cfg.n_kv_heads, 2)),
+        d_head=48,
+        d_ff=0 if cfg.d_ff == 0 else 288,
+        vocab=512,
+        n_experts=min(cfg.n_experts, 4) if cfg.n_experts else 0,
+        top_k=min(cfg.top_k, 2) if cfg.top_k else 0,
+        d_inner=192 if cfg.d_inner else 0,
+        ssm_state=16 if cfg.ssm_state else 0,
+        ssm_heads=4 if cfg.ssm_heads else 0,
+        enc_layers=2 if cfg.enc_layers else 0,
+        enc_seq=16 if cfg.enc_seq else 0,
+        frontend_tokens=6 if cfg.frontend_tokens else 0,
+        window=32,
+        attn_block=64,
+    )

@@ -1,0 +1,39 @@
+"""BitNet b1.58 model family — the paper's own evaluation ladder.
+
+Sizes follow (Wang et al., 2024b) "1-bit AI Infra Part 1.1" / paper Table 7:
+700M, 1.5B, 3.8B, 7B, 13B, 30B, 70B, 100B.  Llama-shaped dense transformers
+trained with the b1.58 QAT scheme (absmean ternary weights, per-tensor int8
+activations) — the models Bitnet.cpp serves losslessly.
+"""
+
+from repro.models.config import ModelConfig
+
+_LADDER = {
+    # name: (layers, d_model, heads, kv, d_ff)
+    "700m": (24, 1536, 16, 16, 4096),
+    "1.5b": (24, 2048, 16, 16, 5460),
+    "3.8b": (32, 3072, 32, 32, 8192),
+    "7b": (32, 4096, 32, 32, 11008),
+    "13b": (40, 5120, 40, 40, 13824),
+    "30b": (60, 6656, 52, 52, 17920),
+    "70b": (80, 8192, 64, 8, 28672),
+    "100b": (110, 8192, 64, 8, 28672),
+}
+
+
+def make(size: str) -> ModelConfig:
+    layers, d, h, kv, ff = _LADDER[size]
+    return ModelConfig(
+        name=f"bitnet-b1.58-{size}",
+        n_layers=layers,
+        d_model=d,
+        n_heads=h,
+        n_kv_heads=kv,
+        d_head=d // h,
+        d_ff=ff,
+        vocab=32002,
+        rope_theta=10_000.0,
+    )
+
+
+CONFIG = make("700m")  # default: the bitnet_b1_58-large-scale model of Table 2

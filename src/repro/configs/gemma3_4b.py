@@ -1,0 +1,22 @@
+"""gemma3-4b [dense]: 34L d_model=2560 8H (GQA kv=4) d_ff=10240 vocab=262144,
+5:1 local:global layer pattern, 128k context [hf:google/gemma-3-*].
+
+The dominant local layers are sliding-window (1024) → ring-buffer KV caches;
+this is what makes the long_500k cell feasible (DESIGN.md §4).
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-4b",
+    n_layers=34,
+    d_model=2560,
+    n_heads=8,
+    n_kv_heads=4,
+    d_head=256,
+    d_ff=10240,
+    vocab=262144,
+    block_pattern=("local", "local", "local", "local", "local", "attn"),
+    window=1024,
+    rope_theta=1_000_000.0,
+)

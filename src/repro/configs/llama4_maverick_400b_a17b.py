@@ -1,0 +1,27 @@
+"""llama4-maverick-400b-a17b [moe]: 48L d_model=5120 40H (GQA kv=8)
+d_ff=8192/expert vocab=202048, MoE 128 experts top-1, early-fusion multimodal
+[hf:meta-llama/Llama-4-*].
+
+Simplifications vs the production model (noted per DESIGN.md): every layer is
+MoE (no dense interleave / shared expert); early fusion is the stub vision
+frontend prepending patch embeddings.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=8192,
+    vocab=202048,
+    ffn_kind="moe",
+    n_experts=128,
+    top_k=1,
+    frontend="vision",
+    frontend_tokens=144,
+    rope_theta=500_000.0,
+)

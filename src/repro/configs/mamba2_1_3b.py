@@ -1,0 +1,25 @@
+"""mamba2-1.3b [ssm]: 48L d_model=2048, attention-free SSD (state-space
+duality), ssm_state=128, vocab=50280 [arXiv:2405.21060].
+
+d_ff=0: SSD blocks have no separate FFN (the mixer IS the block).  The
+ternary technique applies to in/out projections; the SSD recurrence itself is
+weight-free (DESIGN.md §Arch-applicability).  O(1) state → long_500k eligible.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-1.3b",
+    n_layers=48,
+    d_model=2048,
+    n_heads=1,            # no attention heads (attn-free)
+    n_kv_heads=1,
+    d_head=64,
+    d_ff=0,
+    vocab=50280,
+    block_pattern=("ssd",),
+    d_inner=4096,         # 2 × d_model
+    ssm_state=128,
+    ssm_heads=64,         # head dim P = 64
+    conv_width=4,
+)

@@ -1,0 +1,19 @@
+"""moonshot-v1-16b-a3b [moe]: 48L d_model=2048 16H (GQA kv=16) d_ff=1408/expert
+vocab=163840, MoE 64 experts top-6 (kimi/moonlight) [hf:moonshotai/Moonlight-16B-A3B]."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="moonshot-v1-16b-a3b",
+    n_layers=48,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_head=128,
+    d_ff=1408,
+    vocab=163840,
+    ffn_kind="moe",
+    n_experts=64,
+    top_k=6,
+    rope_theta=50_000.0,
+)

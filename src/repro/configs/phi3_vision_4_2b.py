@@ -1,0 +1,22 @@
+"""phi-3-vision-4.2b [vlm]: phi3-mini backbone + CLIP frontend (stub).
+
+32L d_model=3072 32H (GQA kv=32) d_ff=8192 vocab=32064
+[hf:microsoft/Phi-3-vision-128k-instruct].  The vision tower is a modality
+stub per the brief: input_specs() supplies precomputed patch embeddings.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi-3-vision-4.2b",
+    n_layers=32,
+    d_model=3072,
+    n_heads=32,
+    n_kv_heads=32,
+    d_head=96,
+    d_ff=8192,
+    vocab=32064,
+    rope_theta=10_000.0,
+    frontend="vision",
+    frontend_tokens=576,   # 24×24 CLIP patch grid
+)

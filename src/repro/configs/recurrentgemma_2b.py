@@ -1,0 +1,21 @@
+"""recurrentgemma-2b [hybrid]: 26L d_model=2560 10H (GQA kv=1) d_ff=7680
+vocab=256000, RG-LRU + local attention in a (rec, rec, attn) 2:1 pattern
+[arXiv:2402.19427].  Sub-quadratic → long_500k eligible."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    n_layers=26,
+    d_model=2560,
+    n_heads=10,
+    n_kv_heads=1,
+    d_head=256,
+    d_ff=7680,
+    vocab=256000,
+    block_pattern=("rec", "rec", "local"),
+    window=2048,
+    d_inner=2560,
+    conv_width=4,
+    rope_theta=10_000.0,
+)

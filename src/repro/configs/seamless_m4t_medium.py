@@ -1,0 +1,24 @@
+"""seamless-m4t-medium [audio]: encoder-decoder, 12L enc + 12L dec,
+d_model=1024 16H (kv=16) d_ff=4096 vocab=256206 [arXiv:2308.11596].
+
+The speech frontend is a stub: input_specs() provides precomputed frame
+embeddings [B, enc_seq, d_model] consumed by the bidirectional encoder; the
+decoder is causal with per-layer cross-attention.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    n_layers=12,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_head=64,
+    d_ff=4096,
+    vocab=256206,
+    enc_layers=12,
+    enc_seq=1024,          # stub audio frames per sample
+    frontend="audio",
+    rope_theta=10_000.0,
+)

@@ -1,0 +1,14 @@
+"""Core: the paper's contribution — ternary quantization, packing, mpGEMM."""
+
+from repro.core.bitlinear import BitLinearParams, QuantConfig
+from repro.core.qtensor import FORMAT_BPW, PackedWeight, pack_ternary, pack_weight, unpack_weight
+
+__all__ = [
+    "BitLinearParams",
+    "QuantConfig",
+    "PackedWeight",
+    "FORMAT_BPW",
+    "pack_weight",
+    "pack_ternary",
+    "unpack_weight",
+]

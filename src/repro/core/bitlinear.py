@@ -1,0 +1,178 @@
+"""BitLinear: the paper's technique as a composable JAX module.
+
+A BitLinear is a drop-in linear layer with three operating modes:
+
+  * ``fp``    — plain high-precision matmul (the Float16 baseline).
+  * ``qat``   — BitNet b1.58 training forward: STE fake-quant of weights
+                (per-tensor absmean ternary) and activations (per-tensor
+                absmax int8), matmul in fp.  This is the scheme inference
+                must match bit-for-bit to be "lossless" (paper §2.1).
+  * ``quant`` — integer inference: the weight is a PackedWeight (i2s / tl1 /
+                tl2 / tq1 / int4), activations are quantized per the config,
+                and the contraction runs through ``repro.core.mpgemm``.
+
+Packing is generic over any parameter pytree: ``pack_tree`` rewrites every
+``BitLinearParams`` leaf in place, so whole models (dense / MoE / SSM /
+enc-dec) quantize with one call.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mpgemm, quant
+from repro.core.qtensor import PackedWeight, pack_weight
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """How BitLinears behave; threaded through model configs."""
+
+    mode: str = "quant"        # fp | qat | quant
+    fmt: str = "i2s"           # weight packing format for quantized inference
+    impl: str = "xla"          # xla | pallas
+    lut: str | None = None     # None (MAD/MXU) | "lossless" (TL*_1) | "lossy" (TL*_0)
+    act: str = "tensor"        # tensor | token | block   (activation quant)
+    act_block: int = 256
+    # FSDP: constrain the weight *slice* inside the layer scan to TP-only so
+    # the data-axis all-gather happens per layer (loop-local), instead of
+    # GSPMD hoisting one giant gather of the whole stacked parameter array
+    # out of the loop (which would materialize every layer's weights at once).
+    w_gather: str = ""         # "" | "tp"
+
+
+FP32 = jnp.float32
+
+
+@partial(jax.tree_util.register_dataclass, data_fields=["w", "b"], meta_fields=[])
+@dataclasses.dataclass
+class BitLinearParams:
+    """w: fp master weight [out, in] (train) or PackedWeight (inference)."""
+
+    w: Any
+    b: Any = None
+
+
+def init(key: jax.Array, d_in: int, d_out: int, *, bias: bool = False,
+         dtype=jnp.float32) -> BitLinearParams:
+    scale = 1.0 / (d_in ** 0.5)
+    w = jax.random.normal(key, (d_out, d_in), dtype) * scale
+    b = jnp.zeros((d_out,), dtype) if bias else None
+    return BitLinearParams(w=w, b=b)
+
+
+def _gather_tp(w: jax.Array) -> jax.Array:
+    """Constrain a weight (slice) to TP-only sharding: out-features on model,
+    everything else replicated — forces the FSDP gather to be loop-local."""
+    spec = jax.sharding.PartitionSpec("model", *([None] * (w.ndim - 1)))
+    return jax.lax.with_sharding_constraint(w, spec)
+
+
+def apply(p: BitLinearParams, x: jax.Array, cfg: QuantConfig) -> jax.Array:
+    """x: [..., d_in] -> [..., d_out], output in x.dtype."""
+    out_dtype = x.dtype
+    if isinstance(p.w, PackedWeight):
+        y = _apply_quantized(p.w, x, cfg)
+    else:
+        w = _gather_tp(p.w) if cfg.w_gather == "tp" else p.w
+        if cfg.mode == "qat":
+            w = quant.ternary_fake_quant(w)
+            x = quant.act_fake_quant(x)
+        elif cfg.mode == "qat_acts":
+            # weights were fake-quantized ONCE per step (hoisted out of the
+            # microbatch loop — see train.loop.prequantize_weights)
+            x = quant.act_fake_quant(x)
+        # mixed precision: matmul AND result in the activation dtype (bf16 at
+        # scale).  The MXU still accumulates f32 internally; emitting bf16
+        # keeps every backward cotangent bf16 — measured 8 GB/device of f32
+        # stacked-weight cotangent carriers otherwise (deepseek-33b train).
+        y = jax.lax.dot_general(
+            x, w.astype(x.dtype).T,
+            (((x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=x.dtype,
+        )
+    if p.b is not None:
+        y = y + p.b.astype(FP32)
+    return y.astype(out_dtype)
+
+
+def _apply_quantized(pw: PackedWeight, x: jax.Array, cfg: QuantConfig) -> jax.Array:
+    if pw.fmt == "fp":
+        return x.astype(FP32) @ pw.planes["w"].T.astype(FP32)
+    if cfg.act == "block":
+        x_q, s_b = quant.q8_block(x, cfg.act_block)
+        return mpgemm.mpgemm_q8_block(x_q, s_b, pw, cfg.act_block)
+    if cfg.act == "token":
+        x_q, s_x = quant.absmax_int8_per_token(x)
+    else:  # "tensor" — the lossless b1.58 scheme
+        x_q, s_x = quant.absmax_int8(x)
+    return mpgemm.mpgemm(x_q, s_x, pw, impl=cfg.impl, lut=cfg.lut)
+
+
+def is_bitlinear(x: Any) -> bool:
+    return isinstance(x, BitLinearParams)
+
+
+def prequantize_weights(params: Any) -> Any:
+    """STE fake-quant of every BitLinear master weight, once.
+
+    Perf iteration l4-2 / ds-5 (EXPERIMENTS §Perf): inside the train step the
+    master weights are constant across microbatches, yet tracing fake-quant
+    inside the loss made XLA recompute (and reshard, in f32) the whole
+    stacked-weight quantization chain EVERY microbatch — measured 3.3
+    TB/device/step of f32 weight gathers on llama4 train_4k.  Hoisting it
+    here runs it once; gradients still flow to the masters through the STE.
+    Per-matrix absmean scales are preserved via vmap over stack dims.
+    """
+
+    def _fq_nd(w: jax.Array) -> jax.Array:
+        if w.ndim == 2:
+            return quant.ternary_fake_quant(w)
+        return jax.vmap(_fq_nd)(w)
+
+    def _pre(p: Any) -> Any:
+        if not is_bitlinear(p) or isinstance(p.w, PackedWeight):
+            return p
+        return BitLinearParams(w=_fq_nd(p.w), b=p.b)
+
+    return jax.tree_util.tree_map(_pre, params, is_leaf=is_bitlinear)
+
+
+def pack_tree(params: Any, cfg: QuantConfig) -> Any:
+    """Rewrite every BitLinearParams leaf: fp master weight -> PackedWeight.
+
+    Weights may carry leading stack dims (pattern-scan repeats, MoE experts:
+    [n_rep, E, M, K]) — packing is vmapped over them, giving per-matrix
+    absmean scales (the per-tensor granularity of the b1.58 scheme).
+    """
+
+    def _pack_nd(w: jax.Array):
+        if w.ndim == 2:
+            return pack_weight(w, cfg.fmt)
+        return jax.vmap(_pack_nd)(w)
+
+    def _pack(p: Any) -> Any:
+        if not is_bitlinear(p) or isinstance(p.w, PackedWeight):
+            return p
+        return BitLinearParams(w=_pack_nd(p.w), b=p.b)
+
+    return jax.tree_util.tree_map(_pack, params, is_leaf=is_bitlinear)
+
+
+def packed_bits(params: Any) -> int:
+    """Total packed weight bits across a tree (roofline byte accounting)."""
+    total = 0
+
+    def _visit(p: Any) -> Any:
+        nonlocal total
+        if is_bitlinear(p) and isinstance(p.w, PackedWeight):
+            total += p.w.bits()
+        return p
+
+    jax.tree_util.tree_map(_visit, params, is_leaf=is_bitlinear)
+    return total

@@ -1,0 +1,181 @@
+"""mpGEMM: int8 activations × packed ternary weights (paper §3).
+
+Canonical semantics (all formats): y = (x_q @ W_t^T) · (s_x · s_w), with the
+contraction accumulated in int32 (the TPU MXU's native int8×int8→int32 path).
+This module holds the pure-XLA implementations; the Pallas TPU kernels in
+``repro.kernels`` implement the same contracts with fused in-VMEM decode and
+are validated against these references.
+
+Implementation choices (``impl``):
+  * "unpack8" — unpack packed bytes to int8 [M, K] then dot.  Semantically
+    canonical; materializes the unpacked operand at HLO level.
+  * "int4"    — weights stored as XLA-native int4; the dot consumes them with
+    no unpack intermediate (best XLA-only HBM traffic; 4 bpw).
+  * "pallas"  — fused decode+matmul Pallas kernel (2 / 1.67 bpw in HBM,
+    decode in VMEM).  TPU target; validated via interpret mode on CPU.
+
+The LUT-semantics functions (``tl*_lut``) follow Algorithms 3–4 exactly,
+including the lossy ``_0`` variants (LUT requantized to int8, the T-MAC
+scheme §3.2.1) and lossless ``_1`` variants (int16 pack-and-unpack → here the
+natural int32 accumulation).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.qtensor import PackedWeight, unpack_weight
+
+
+def _int_dot(x_q: jax.Array, w_t: jax.Array) -> jax.Array:
+    """int8 [..., K] × int8 [M, K] -> int32 [..., M]."""
+    return jax.lax.dot_general(
+        x_q,
+        w_t,
+        (((x_q.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def mpgemm_xla(x_q: jax.Array, s_x: jax.Array, pw: PackedWeight) -> jax.Array:
+    """Canonical reference: unpack + int dot + rescale.  Returns fp32 [..., M]."""
+    if pw.fmt == "fp":
+        return jnp.dot(x_q.astype(jnp.float32) * s_x, pw.planes["w"].T.astype(jnp.float32))
+    if pw.fmt == "int4":
+        # XLA-native sub-byte dtype: the dot consumes int4 directly.
+        y32 = jax.lax.dot_general(
+            x_q,
+            pw.planes["w4"],
+            (((x_q.ndim - 1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+    else:
+        y32 = _int_dot(x_q, unpack_weight(pw))
+    return y32.astype(jnp.float32) * (jnp.asarray(s_x, jnp.float32) * pw.scale)
+
+
+# ---------------------------------------------------------------------------
+# LUT-semantics references (Algorithms 3 & 4)
+# ---------------------------------------------------------------------------
+
+def tl1_lut(x_q: jax.Array, s_x: jax.Array, pw: PackedWeight, lossless: bool = True) -> jax.Array:
+    """TL1 mpGEMM via element-wise LUT (Algorithm 3).
+
+    lossless=True  -> TL1_1 (int16/int32 pack-and-unpack accumulation)
+    lossless=False -> TL1_0 (LUT requantized to int8; T-MAC-style, lossy)
+    """
+    if pw.fmt != "tl1":
+        raise ValueError(f"tl1_lut needs tl1 weights, got {pw.fmt}")
+    lut = packing.tl1_build_lut(x_q)               # [..., G, 9] int32
+    codes = packing.tl1_codes(pw.planes["p"])      # [M, G] uint8 in 0..8
+    y32, s_lut = _lut_accumulate(lut, codes.astype(jnp.int32), lossless)
+    return y32.astype(jnp.float32) * (s_lut * jnp.asarray(s_x, jnp.float32) * pw.scale)
+
+
+def tl2_lut(x_q: jax.Array, s_x: jax.Array, pw: PackedWeight, lossless: bool = True) -> jax.Array:
+    """TL2 mpGEMM via mirror-consolidated LUT + 1-bit sign op (Algorithm 4).
+
+    The ThreeK prefix uses the 14-entry unsigned LUT with the sign applied via
+    ``x = sign XOR (sign + x)`` (Eq. 5 — here expressed as a select, which is
+    what the XOR-ADD trick computes); the TwoK tail falls back to TL1
+    (block-fitting weight splitting).
+    """
+    if pw.fmt != "tl2":
+        raise ValueError(f"tl2_lut needs tl2 weights, got {pw.fmt}")
+    s_x = jnp.asarray(s_x, jnp.float32)
+    out = None
+    if pw.three_k:
+        x3 = x_q[..., : pw.three_k]
+        lut = packing.tl2_build_lut(x3)            # [..., G, 14] int32 (unsigned half)
+        idx, sign = packing.tl2_unpack_planes(pw.planes["idx"], pw.planes["sign"])
+        y32, s_lut = _lut_accumulate_signed(lut, idx.astype(jnp.int32), sign, lossless)
+        out = y32.astype(jnp.float32) * (s_lut * s_x * pw.scale)
+    if pw.three_k < pw.k:
+        x2 = x_q[..., pw.three_k:]
+        tail = PackedWeight({"p": pw.planes["tail"]}, pw.scale, "tl1", (pw.m, pw.k - pw.three_k))
+        y_tail = tl1_lut(x2, s_x, tail, lossless)
+        out = y_tail if out is None else out + y_tail
+    return out
+
+
+def _quantize_lut(lut: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """T-MAC-style int8 LUT requantization (per-tensor scale) — the lossy step."""
+    s = jnp.maximum(jnp.max(jnp.abs(lut)).astype(jnp.float32), 1.0) / 127.0
+    q = jnp.clip(jnp.round(lut.astype(jnp.float32) / s), -127, 127).astype(jnp.int32)
+    return q, s
+
+
+def _lut_accumulate(lut: jax.Array, codes: jax.Array, lossless: bool) -> tuple[jax.Array, jax.Array]:
+    """sum_g LUT[..., g, codes[m, g]] -> ([..., M] int32, lut scale)."""
+    if not lossless:
+        lut, s_lut = _quantize_lut(lut)
+    else:
+        s_lut = jnp.float32(1.0)
+    # Gather formulated as a small one-hot contraction — the MXU-friendly
+    # expression of "table lookup" (DESIGN.md §2): onehot [M, G, C] × lut.
+    onehot = jax.nn.one_hot(codes, lut.shape[-1], dtype=jnp.int8)  # [M, G, C]
+    y32 = jnp.einsum(
+        "...gc,mgc->...m", lut.astype(jnp.int32), onehot.astype(jnp.int32)
+    )
+    return y32, s_lut
+
+
+def _lut_accumulate_signed(
+    lut: jax.Array, idx: jax.Array, sign: jax.Array, lossless: bool
+) -> tuple[jax.Array, jax.Array]:
+    if not lossless:
+        lut, s_lut = _quantize_lut(lut)
+    else:
+        s_lut = jnp.float32(1.0)
+    onehot = jax.nn.one_hot(idx, lut.shape[-1], dtype=jnp.int8).astype(jnp.int32)
+    # Fold the 1-bit sign into the one-hot (equivalent to Eq. 5 post-lookup).
+    signed = onehot * (1 - 2 * sign.astype(jnp.int32))[..., None]
+    y32 = jnp.einsum("...gc,mgc->...m", lut.astype(jnp.int32), signed)
+    return y32, s_lut
+
+
+# ---------------------------------------------------------------------------
+# Per-block (Q8_K-style) activation variant — the lossy llama.cpp scheme
+# ---------------------------------------------------------------------------
+
+def mpgemm_q8_block(
+    x_q: jax.Array, s_x_blocks: jax.Array, pw: PackedWeight, block: int = 256
+) -> jax.Array:
+    """mpGEMM with per-256-block activation scales (TQ-kernel semantics).
+
+    x_q: int8 [..., K]; s_x_blocks: fp32 [..., K/block].  The per-block scale
+    must multiply each block's partial sum — this is what breaks bit-exact
+    alignment with the b1.58 per-tensor training scheme (paper §2.3).
+    """
+    w_t = unpack_weight(pw).astype(jnp.int8)
+    K = x_q.shape[-1]
+    nb = K // block
+    xb = x_q.reshape(*x_q.shape[:-1], nb, block)
+    wb = w_t.reshape(w_t.shape[0], nb, block)
+    # [..., nb, M] int32 partials, scaled per block, then summed.
+    p32 = jnp.einsum("...nk,mnk->...nm", xb.astype(jnp.int32), wb.astype(jnp.int32))
+    y = (p32.astype(jnp.float32) * s_x_blocks[..., None]).sum(axis=-2)
+    return y * pw.scale
+
+
+def mpgemm(
+    x_q: jax.Array,
+    s_x: jax.Array,
+    pw: PackedWeight,
+    impl: str = "xla",
+    lut: str | None = None,
+) -> jax.Array:
+    """Dispatch entry point used by BitLinear.
+
+    lut: None (MAD/MXU path), "lossless" (TL*_1), "lossy" (TL*_0).
+    """
+    if lut is not None and pw.fmt in ("tl1", "tl2"):
+        fn = tl1_lut if pw.fmt == "tl1" else tl2_lut
+        return fn(x_q, s_x, pw, lossless=(lut == "lossless"))
+    if impl == "pallas":
+        from repro.kernels import ops as kops  # lazy: keeps dryrun pallas-free
+
+        return kops.mpgemm_pallas(x_q, s_x, pw)
+    return mpgemm_xla(x_q, s_x, pw)

@@ -1,0 +1,285 @@
+"""Ternary weight packing formats (paper §3, Table 1).
+
+All formats store a weight matrix W of shape [M, K] with entries in
+{-1, 0, +1} (int8).  Packing is along K (the contraction axis) so each
+output row's packed bytes are contiguous — the TPU analogue of the paper's
+LUT-centric data layout (packed bytes stream HBM→VMEM in the same order the
+kernel consumes them).
+
+Formats
+-------
+i2s   2.00 bpw  4 trits / byte, 2-bit codes            (paper I2_S)
+tl1   2.00 bpw  2 trits → 4-bit code (3^2=9<16), 2 codes / byte  (paper TL1)
+tl2   1.67 bpw  3 trits → 1-bit sign + 4-bit index (3^3/2=13.5<16)
+                index plane: 2 idx / byte; sign plane: 8 signs / byte
+                                                        (paper TL2, element-wise
+                                                         mirror consolidation +
+                                                         signed-unsigned split)
+tq1   1.60 bpw  5 trits / byte, base-3 (3^5=243<256)    (llama.cpp TQ1_0-like
+                                                         baseline, idealized)
+
+``tl2`` requires K % 24 == 0; general K is handled by block-fitting weight
+splitting (paper §3.1.2): ``tl2_split_k`` statically divides K into a ThreeK
+part (multiple of 24, packed tl2) and a TwoK tail (packed tl1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+TL2_CENTER = 13  # base-3 value of (0,0,0); values 0..13 keep sign=0, 14..26 mirror.
+
+
+def _check_ternary(w: jax.Array) -> jax.Array:
+    return w.astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# I2_S — 2-bit codes, 4 per byte
+# ---------------------------------------------------------------------------
+
+def i2s_pack(w: jax.Array) -> jax.Array:
+    """[M, K] ternary int8 -> [M, K//4] uint8 (codes = w+1, little-endian)."""
+    w = _check_ternary(w)
+    M, K = w.shape
+    if K % 4 != 0:
+        raise ValueError(f"i2s_pack needs K % 4 == 0, got K={K}")
+    c = (w + 1).astype(jnp.uint8).reshape(M, K // 4, 4)
+    return (c[..., 0] | (c[..., 1] << 2) | (c[..., 2] << 4) | (c[..., 3] << 6))
+
+
+def i2s_unpack(p: jax.Array, k: int) -> jax.Array:
+    """[M, K//4] uint8 -> [M, K] int8 in {-1,0,1}."""
+    parts = [((p >> (2 * i)) & 0x3).astype(jnp.int8) - 1 for i in range(4)]
+    w = jnp.stack(parts, axis=-1)  # [M, K//4, 4]
+    return w.reshape(p.shape[0], -1)[:, :k]
+
+
+# ---------------------------------------------------------------------------
+# TL1 — base-3 pairs, 4-bit codes, 2 per byte
+# ---------------------------------------------------------------------------
+
+def tl1_pack(w: jax.Array) -> jax.Array:
+    """[M, K] ternary -> [M, K//4] uint8; each nibble encodes 2 trits (0..8)."""
+    w = _check_ternary(w)
+    M, K = w.shape
+    if K % 4 != 0:
+        raise ValueError(f"tl1_pack needs K % 4 == 0, got K={K}")
+    t = (w + 1).astype(jnp.uint8).reshape(M, K // 2, 2)
+    code = t[..., 0] * 3 + t[..., 1]            # 0..8, fits a nibble
+    code = code.reshape(M, K // 4, 2)
+    return code[..., 0] | (code[..., 1] << 4)
+
+
+def tl1_unpack(p: jax.Array, k: int) -> jax.Array:
+    lo = (p & 0xF).astype(jnp.int8)
+    hi = ((p >> 4) & 0xF).astype(jnp.int8)
+    code = jnp.stack([lo, hi], axis=-1).reshape(p.shape[0], -1)  # [M, K//2]
+    w0 = code // 3 - 1
+    w1 = code % 3 - 1
+    w = jnp.stack([w0, w1], axis=-1).reshape(p.shape[0], -1)
+    return w[:, :k].astype(jnp.int8)
+
+
+def tl1_codes(p: jax.Array) -> jax.Array:
+    """[M, K//4] packed bytes -> [M, K//2] 4-bit group codes (0..8)."""
+    lo = (p & 0xF).astype(jnp.uint8)
+    hi = ((p >> 4) & 0xF).astype(jnp.uint8)
+    return jnp.stack([lo, hi], axis=-1).reshape(p.shape[0], -1)
+
+
+# ---------------------------------------------------------------------------
+# TL2 — element-wise mirror consolidation: sign plane + index plane
+# ---------------------------------------------------------------------------
+
+def tl2_encode_groups(w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """[M, K] (K%3==0) -> (idx uint8 [M, K//3] in 0..13, sign uint8 [M, K//3])."""
+    w = _check_ternary(w)
+    M, K = w.shape
+    if K % 3 != 0:
+        raise ValueError(f"tl2 groups need K % 3 == 0, got K={K}")
+    t = (w + 1).astype(jnp.int32).reshape(M, K // 3, 3)
+    v = t[..., 0] * 9 + t[..., 1] * 3 + t[..., 2]          # 0..26
+    sign = (v > TL2_CENTER).astype(jnp.uint8)               # mirror half
+    idx = jnp.where(sign == 1, 26 - v, v).astype(jnp.uint8)  # 0..13
+    return idx, sign
+
+
+def tl2_pack(w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """[M, K] ternary (K%24==0) -> (idx_plane [M, K//6] u8, sign_plane [M, K//24] u8).
+
+    5 bits / 3 weights = 1.67 bpw, stored as two separately aligned planes —
+    the paper's signed-unsigned weight splitting, which avoids the misaligned
+    5-bit contiguous layout.
+    """
+    M, K = w.shape
+    if K % 24 != 0:
+        raise ValueError(f"tl2_pack needs K % 24 == 0, got K={K}")
+    idx, sign = tl2_encode_groups(w)
+    g = K // 3
+    idx2 = idx.reshape(M, g // 2, 2)
+    idx_plane = idx2[..., 0] | (idx2[..., 1] << 4)
+    s8 = sign.reshape(M, g // 8, 8)
+    sign_plane = jnp.zeros((M, g // 8), jnp.uint8)
+    for b in range(8):
+        sign_plane = sign_plane | (s8[..., b] << b)
+    return idx_plane, sign_plane
+
+
+def tl2_unpack_planes(idx_plane: jax.Array, sign_plane: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Planes -> (idx [M, G] 0..13, sign [M, G] 0/1)."""
+    M = idx_plane.shape[0]
+    lo = (idx_plane & 0xF).astype(jnp.uint8)
+    hi = ((idx_plane >> 4) & 0xF).astype(jnp.uint8)
+    idx = jnp.stack([lo, hi], axis=-1).reshape(M, -1)
+    bits = [(sign_plane >> b) & 1 for b in range(8)]
+    sign = jnp.stack(bits, axis=-1).reshape(M, -1).astype(jnp.uint8)
+    return idx, sign
+
+
+def tl2_unpack(idx_plane: jax.Array, sign_plane: jax.Array, k: int) -> jax.Array:
+    """Planes -> [M, K] int8 ternary."""
+    idx, sign = tl2_unpack_planes(idx_plane, sign_plane)
+    v = jnp.where(sign == 1, 26 - idx.astype(jnp.int32), idx.astype(jnp.int32))
+    d0 = v // 9 - 1
+    d1 = (v // 3) % 3 - 1
+    d2 = v % 3 - 1
+    w = jnp.stack([d0, d1, d2], axis=-1).reshape(idx.shape[0], -1)
+    return w[:, :k].astype(jnp.int8)
+
+
+def tl2_split_k(k: int, bk3: int = 24) -> tuple[int, int]:
+    """Block-fitting weight splitting (paper §3.1.2, Figure 6).
+
+    Returns (three_k, two_k): three_k is the largest multiple of ``bk3``
+    (itself a multiple of 24) ≤ K, handled by TL2; the remainder is handled
+    by TL1.  Requires K % 4 == 0 so the TL1 tail packs cleanly.
+    """
+    if bk3 % 24 != 0:
+        raise ValueError("bk3 must be a multiple of 24")
+    if k % 4 != 0:
+        raise ValueError(f"tl2_split_k needs K % 4 == 0, got K={k}")
+    three_k = (k // bk3) * bk3
+    return three_k, k - three_k
+
+
+# ---------------------------------------------------------------------------
+# TL2 kernel layout ("tl2k") — the TPU analogue of the paper's LUT-centric
+# data layout.  Same 1.67 bpw planes, but groups are permuted per K-tile so
+# the Pallas kernel decodes with static lane slices only (no interleaves):
+#   * index plane: within a tile of G groups, byte j packs (idx[j], idx[G/2+j])
+#     → the lo/hi nibble planes are each a *contiguous* half of the tile.
+#   * sign plane: bit b of byte j is the sign of group b·G/8 + j
+#     → ((plane >> b) & 1) is a contiguous G/8-wide lane slice.
+# ---------------------------------------------------------------------------
+
+TL2K_GTILE = 256  # groups per kernel K-tile (768 weights); deploy default 1024.
+
+
+def tl2k_pack(w: jax.Array, g_tile: int = TL2K_GTILE) -> tuple[jax.Array, jax.Array]:
+    """[M, K] ternary (K % (3·g_tile) == 0) -> (idx_plane [M, K/6], sign_plane [M, K/24])."""
+    M, K = w.shape
+    if g_tile % 8 != 0:
+        raise ValueError("g_tile must be a multiple of 8")
+    if K % (3 * g_tile) != 0:
+        raise ValueError(f"tl2k_pack needs K % {3 * g_tile} == 0, got K={K}")
+    idx, sign = tl2_encode_groups(w)
+    g_total = K // 3
+    t = g_total // g_tile
+    idx_t = idx.reshape(M, t, 2, g_tile // 2)
+    idx_plane = (idx_t[:, :, 0] | (idx_t[:, :, 1] << 4)).reshape(M, t * (g_tile // 2))
+    sign_t = sign.reshape(M, t, 8, g_tile // 8)
+    sign_plane = jnp.zeros((M, t, g_tile // 8), jnp.uint8)
+    for b in range(8):
+        sign_plane = sign_plane | (sign_t[:, :, b] << b)
+    return idx_plane, sign_plane.reshape(M, t * (g_tile // 8))
+
+
+def tl2k_unpack(idx_plane: jax.Array, sign_plane: jax.Array, k: int,
+                g_tile: int = TL2K_GTILE) -> jax.Array:
+    """Inverse of tl2k_pack -> [M, K] int8 ternary."""
+    M = idx_plane.shape[0]
+    g_total = k // 3
+    t = g_total // g_tile
+    ip = idx_plane.reshape(M, t, g_tile // 2)
+    lo = (ip & 0xF).astype(jnp.uint8)
+    hi = ((ip >> 4) & 0xF).astype(jnp.uint8)
+    idx = jnp.concatenate([lo, hi], axis=-1).reshape(M, g_total)  # tile order restored
+    sp = sign_plane.reshape(M, t, g_tile // 8)
+    bits = [(sp >> b) & 1 for b in range(8)]
+    sign = jnp.concatenate(bits, axis=-1).reshape(M, g_total).astype(jnp.int32)
+    v = idx.astype(jnp.int32) * (1 - 2 * sign) + 26 * sign  # mirror decode
+    d0 = v // 9 - 1
+    d1 = (v // 3) % 3 - 1
+    d2 = v % 3 - 1
+    return jnp.stack([d0, d1, d2], axis=-1).reshape(M, k).astype(jnp.int8)
+
+
+def tl2k_split_k(k: int, g_tile: int = TL2K_GTILE) -> tuple[int, int]:
+    """Block-fitting split for the kernel layout: ThreeK % (3·g_tile) == 0."""
+    if k % 4 != 0:
+        raise ValueError(f"tl2k_split_k needs K % 4 == 0, got K={k}")
+    bk3 = 3 * g_tile
+    three_k = (k // bk3) * bk3
+    return three_k, k - three_k
+
+
+# ---------------------------------------------------------------------------
+# TQ1-like — 5 trits per byte (idealized llama.cpp TQ1_0 baseline, 1.6 bpw)
+# ---------------------------------------------------------------------------
+
+def tq1_pack(w: jax.Array) -> jax.Array:
+    """[M, K] ternary -> [M, ceil(K/5)] uint8 base-3 (zero padded)."""
+    w = _check_ternary(w)
+    M, K = w.shape
+    pad = (-K) % 5
+    t = jnp.pad((w + 1).astype(jnp.int32), ((0, 0), (0, pad)), constant_values=1)
+    t = t.reshape(M, -1, 5)
+    v = t[..., 0]
+    for i in range(1, 5):
+        v = v * 3 + t[..., i]
+    return v.astype(jnp.uint8)
+
+
+def tq1_unpack(p: jax.Array, k: int) -> jax.Array:
+    v = p.astype(jnp.int32)
+    digits = []
+    for _ in range(5):
+        digits.append(v % 3 - 1)
+        v = v // 3
+    w = jnp.stack(digits[::-1], axis=-1).reshape(p.shape[0], -1)
+    return w[:, :k].astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# eLUT construction (paper Eq. 3 / Algorithms 3–4)
+# ---------------------------------------------------------------------------
+
+def tl1_build_lut(a_q: jax.Array) -> jax.Array:
+    """int8 activations [..., K] (K%2==0) -> eLUT [..., K//2, 9] int32.
+
+    Entry c of group k is dot(a[2k:2k+2], digits(c)) where digits(c) enumerate
+    the 3^2 ternary pairs — the element-wise LUT of Algorithm 3.
+    """
+    k = a_q.shape[-1]
+    a = a_q.astype(jnp.int32).reshape(*a_q.shape[:-1], k // 2, 2)
+    codes = jnp.arange(9, dtype=jnp.int32)
+    d0 = codes // 3 - 1
+    d1 = codes % 3 - 1
+    return a[..., 0:1] * d0 + a[..., 1:2] * d1
+
+
+def tl2_build_lut(a_q: jax.Array) -> jax.Array:
+    """int8 activations [..., K] (K%3==0) -> unsigned eLUT [..., K//3, 14] int32.
+
+    14 entries via element-wise mirror consolidation (3^3/2 rounded up to the
+    self-mirrored center); the sign bit is applied after lookup (Eq. 5).
+    """
+    k = a_q.shape[-1]
+    a = a_q.astype(jnp.int32).reshape(*a_q.shape[:-1], k // 3, 3)
+    v = jnp.arange(14, dtype=jnp.int32)  # unsigned half: 0..13
+    d0 = v // 9 - 1
+    d1 = (v // 3) % 3 - 1
+    d2 = v % 3 - 1
+    return a[..., 0:1] * d0 + a[..., 1:2] * d1 + a[..., 2:3] * d2

@@ -1,0 +1,138 @@
+"""Packed-weight container used across the framework.
+
+A ``PackedWeight`` holds the HBM representation of one ternary weight matrix
+in one of the library formats (DESIGN.md §2), plus its per-tensor absmean
+scale.  It is a registered pytree so it can flow through jit/pjit/scan and be
+sharded with NamedSharding like any other parameter.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing, quant
+
+# Formats and their bits-per-weight (paper Table 1 + our int4 XLA-native path).
+FORMAT_BPW = {
+    "fp": 16.0,     # bf16 baseline (paper's Float16 baseline)
+    "int4": 4.0,    # XLA-native int4 storage (TPU dot consumes int4 directly)
+    "i2s": 2.0,     # paper I2_S
+    "tl1": 2.0,     # paper TL1
+    "tl2": 5.0 / 3.0,   # paper TL2 (1.67)
+    "tl2k": 5.0 / 3.0,  # TL2 in the Pallas kernel layout (same bpw)
+    "tq1": 1.6,     # idealized llama.cpp TQ1_0 baseline
+}
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["planes", "scale"],
+    meta_fields=["fmt", "shape", "three_k"],
+)
+@dataclasses.dataclass
+class PackedWeight:
+    """Packed ternary weight of logical shape [M, K] (output-major)."""
+
+    planes: dict  # str -> jax.Array
+    scale: jax.Array  # fp32 scalar (absmean)
+    fmt: str
+    shape: tuple  # (M, K)
+    three_k: int = 0  # tl2 only: K prefix handled by the g=3 path
+
+    @property
+    def m(self) -> int:
+        return self.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.shape[1]
+
+    def bits(self) -> int:
+        """Total packed bits actually stored (for roofline byte accounting).
+
+        int4 is a true sub-byte dtype in HBM on TPU (2 elems/byte) even though
+        host numpy reports itemsize 1 — account 4 bits per element.
+        """
+        total = 0
+        for p in self.planes.values():
+            if p.dtype == jnp.int4:
+                total += int(p.size) * 4
+            else:
+                total += int(p.size) * p.dtype.itemsize * 8
+        return total
+
+    def bpw(self) -> float:
+        return self.bits() / (self.m * self.k)
+
+
+def pack_weight(w: jax.Array, fmt: str) -> PackedWeight:
+    """Quantize an fp master weight [M, K] to ternary and pack as ``fmt``."""
+    M, K = w.shape
+    if fmt == "fp":
+        return PackedWeight({"w": w.astype(jnp.bfloat16)}, jnp.float32(1.0), "fp", (M, K))
+    w_t, s = quant.ternary_quant(w)
+    return pack_ternary(w_t, s, fmt)
+
+
+def pack_ternary(w_t: jax.Array, scale: jax.Array, fmt: str) -> PackedWeight:
+    """Pack an already-ternary int8 matrix (values in {-1,0,1})."""
+    M, K = w_t.shape
+    scale = jnp.asarray(scale, jnp.float32)
+    if fmt == "int4":
+        return PackedWeight({"w4": w_t.astype(jnp.int4)}, scale, fmt, (M, K))
+    if fmt == "i2s":
+        return PackedWeight({"p": packing.i2s_pack(w_t)}, scale, fmt, (M, K))
+    if fmt == "tl1":
+        return PackedWeight({"p": packing.tl1_pack(w_t)}, scale, fmt, (M, K))
+    if fmt == "tq1":
+        return PackedWeight({"p": packing.tq1_pack(w_t)}, scale, fmt, (M, K))
+    if fmt == "tl2":
+        three_k, two_k = packing.tl2_split_k(K)
+        planes = {}
+        if three_k:
+            idx_plane, sign_plane = packing.tl2_pack(w_t[:, :three_k])
+            planes["idx"] = idx_plane
+            planes["sign"] = sign_plane
+        if two_k:
+            planes["tail"] = packing.tl1_pack(w_t[:, three_k:])
+        return PackedWeight(planes, scale, fmt, (M, K), three_k=three_k)
+    if fmt == "tl2k":
+        # Kernel layout (block-fitting split sized to the Pallas K-tile).
+        three_k, two_k = packing.tl2k_split_k(K)
+        planes = {}
+        if three_k:
+            idx_plane, sign_plane = packing.tl2k_pack(w_t[:, :three_k])
+            planes["idx"] = idx_plane
+            planes["sign"] = sign_plane
+        if two_k:
+            planes["tail"] = packing.tl1_pack(w_t[:, three_k:])
+        return PackedWeight(planes, scale, fmt, (M, K), three_k=three_k)
+    raise ValueError(f"unknown format {fmt!r}")
+
+
+def unpack_weight(pw: PackedWeight) -> jax.Array:
+    """Recover the int8 ternary matrix [M, K] (fp format returns bf16)."""
+    M, K = pw.shape
+    if pw.fmt == "fp":
+        return pw.planes["w"]
+    if pw.fmt == "int4":
+        return pw.planes["w4"].astype(jnp.int8)
+    if pw.fmt == "i2s":
+        return packing.i2s_unpack(pw.planes["p"], K)
+    if pw.fmt == "tl1":
+        return packing.tl1_unpack(pw.planes["p"], K)
+    if pw.fmt == "tq1":
+        return packing.tq1_unpack(pw.planes["p"], K)
+    if pw.fmt in ("tl2", "tl2k"):
+        unpack3 = packing.tl2_unpack if pw.fmt == "tl2" else packing.tl2k_unpack
+        parts = []
+        if pw.three_k:
+            parts.append(unpack3(pw.planes["idx"], pw.planes["sign"], pw.three_k))
+        if pw.three_k < K:
+            parts.append(packing.tl1_unpack(pw.planes["tail"], K - pw.three_k))
+        return jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+    raise ValueError(f"unknown format {pw.fmt!r}")

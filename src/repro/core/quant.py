@@ -1,0 +1,107 @@
+"""Quantization schemes for ternary LLMs (BitNet b1.58 alignment).
+
+The paper's losslessness argument (§2.1, Figure 2) is that BitNet b1.58 is
+trained with QAT under two exact constraints:
+
+  * weights:     per-tensor absmean ternary  w_q = clip(round(w/s_w), -1, 1),
+                 s_w = mean(|w|)
+  * activations: per-tensor absmax int8      x_q = clip(round(x/s_x), -128, 127),
+                 s_x = max(|x|) / 127
+
+If inference reproduces exactly this quantized forward (integer accumulation,
+same scale granularity), the inference logits are bit-identical to the QAT
+training forward — "lossless" in the paper's sense.  llama.cpp's TQ kernels
+break the activation constraint (per-256-block Q8_K quantization); we
+implement that scheme too (``q8_block``) as the lossy baseline.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# BitNet b1.58 uses the symmetric int8 range for activations.
+ACT_QMAX = 127.0
+EPS = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Weight quantization: per-tensor absmean ternary (BitNet b1.58 training rule)
+# ---------------------------------------------------------------------------
+
+def absmean_scale(w: jax.Array) -> jax.Array:
+    """Per-tensor weight scale: mean of absolute values (scalar, fp32)."""
+    return jnp.maximum(jnp.mean(jnp.abs(w.astype(jnp.float32))), EPS)
+
+
+def ternary_quant(w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Quantize weights to ternary {-1, 0, 1} with a per-tensor absmean scale.
+
+    Returns (w_t int8 in {-1,0,1}, scale fp32 scalar).  Dequant: w ≈ w_t * s.
+    """
+    s = absmean_scale(w)
+    w_t = jnp.clip(jnp.round(w.astype(jnp.float32) / s), -1.0, 1.0)
+    return w_t.astype(jnp.int8), s
+
+
+def ternary_fake_quant(w: jax.Array) -> jax.Array:
+    """Straight-through-estimator fake quant used during QAT training.
+
+    Forward: dequantized ternary weights.  Backward: identity (STE).
+    """
+    w_t, s = ternary_quant(w)
+    w_dq = w_t.astype(w.dtype) * s.astype(w.dtype)
+    return w + jax.lax.stop_gradient(w_dq - w)
+
+
+# ---------------------------------------------------------------------------
+# Activation quantization
+# ---------------------------------------------------------------------------
+
+def absmax_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-tensor absmax int8 quantization (the lossless scheme).
+
+    Returns (x_q int8, scale fp32 scalar) with x ≈ x_q * scale.
+    """
+    x32 = x.astype(jnp.float32)
+    s = jnp.maximum(jnp.max(jnp.abs(x32)), EPS) / ACT_QMAX
+    x_q = jnp.clip(jnp.round(x32 / s), -ACT_QMAX, ACT_QMAX)
+    return x_q.astype(jnp.int8), s
+
+
+def absmax_int8_per_token(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-token (last-dim-grouped) absmax int8 quantization.
+
+    Not the b1.58 training scheme — provided for the throughput/quality
+    trade-off study; scale has shape x.shape[:-1] + (1,).
+    """
+    x32 = x.astype(jnp.float32)
+    s = jnp.maximum(jnp.max(jnp.abs(x32), axis=-1, keepdims=True), EPS) / ACT_QMAX
+    x_q = jnp.clip(jnp.round(x32 / s), -ACT_QMAX, ACT_QMAX)
+    return x_q.astype(jnp.int8), s
+
+
+def q8_block(x: jax.Array, block: int = 256) -> tuple[jax.Array, jax.Array]:
+    """llama.cpp Q8_K-style per-block activation quantization (lossy baseline).
+
+    The last dim is split into ``block``-sized groups, each with its own
+    absmax scale.  This is the scheme that prevents TQ1_0/TQ2_0 from being
+    lossless for BitNet b1.58 (paper §2.3).  Requires last dim % block == 0.
+    """
+    if x.shape[-1] % block != 0:
+        raise ValueError(f"q8_block needs last dim % {block} == 0, got {x.shape}")
+    x32 = x.astype(jnp.float32)
+    g = x32.reshape(*x32.shape[:-1], x32.shape[-1] // block, block)
+    s = jnp.maximum(jnp.max(jnp.abs(g), axis=-1, keepdims=True), EPS) / ACT_QMAX
+    q = jnp.clip(jnp.round(g / s), -ACT_QMAX, ACT_QMAX).astype(jnp.int8)
+    return q.reshape(x.shape), s.squeeze(-1)
+
+
+def act_fake_quant(x: jax.Array) -> jax.Array:
+    """STE fake quant of activations (per-tensor absmax), for QAT training.
+
+    Preserves x.dtype (bf16 at scale) so the backward residuals stay compact.
+    """
+    x_q, s = absmax_int8(x)
+    x_dq = (x_q.astype(jnp.float32) * s).astype(x.dtype)
+    return x + jax.lax.stop_gradient(x_dq - x)

@@ -1,0 +1,86 @@
+"""Deterministic synthetic LM data pipeline.
+
+Design goals for the production setting:
+  * host-sharded: each host generates only its slice of the global batch;
+  * checkpointable: the iterator state is a single step counter — batch(t) is
+    a pure function of (seed, step, host_slice), so restore is exact and
+    elastic (a different host count replays the same global stream);
+  * preemption-safe: no hidden buffer state to lose.
+
+The token stream is a seeded Markov-ish mixture so models can actually learn
+(loss decreases) rather than uniform noise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_hosts: int = 1
+    host_id: int = 0
+
+
+@dataclasses.dataclass
+class DataState:
+    step: int = 0
+
+
+def _host_slice(cfg: DataConfig) -> tuple[int, int]:
+    per = cfg.global_batch // cfg.n_hosts
+    return cfg.host_id * per, per
+
+
+def make_batch(cfg: DataConfig, step: int) -> dict:
+    """Pure function (seed, step) -> host-local batch dict.
+
+    Learnable structure: tokens live in a small active sub-vocabulary and
+    follow the deterministic successor t[i+1] = (t[i] + 7) mod V_active with
+    10% uniform noise — a model that learns the bigram drops well below the
+    uniform-entropy floor within tens of steps.
+    """
+    start, per = _host_slice(cfg)
+    rng = np.random.default_rng((cfg.seed, step))
+    va = min(cfg.vocab, 64)
+    t0 = rng.integers(0, va, size=(cfg.global_batch, 1))
+    toks = [t0]
+    for _ in range(cfg.seq_len):
+        nxt = (toks[-1] + 7) % va
+        noise = rng.integers(0, va, size=(cfg.global_batch, 1))
+        use_noise = rng.random((cfg.global_batch, 1)) < 0.1
+        toks.append(np.where(use_noise, noise, nxt))
+    seq = np.concatenate(toks, axis=1)
+    seq = seq[start : start + per]
+    return {
+        "tokens": jnp.asarray(seq[:, :-1], jnp.int32),
+        "labels": jnp.asarray(seq[:, 1:], jnp.int32),
+    }
+
+
+class DataIterator:
+    """Checkpointable iterator: state == step counter."""
+
+    def __init__(self, cfg: DataConfig, state: DataState | None = None):
+        self.cfg = cfg
+        self.state = state or DataState()
+
+    def __next__(self) -> dict:
+        b = make_batch(self.cfg, self.state.step)
+        self.state.step += 1
+        return b
+
+    def checkpoint(self) -> dict:
+        return {"step": self.state.step}
+
+    @classmethod
+    def restore(cls, cfg: DataConfig, ckpt: dict) -> "DataIterator":
+        return cls(cfg, DataState(step=int(ckpt["step"])))

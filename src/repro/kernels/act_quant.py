@@ -1,0 +1,60 @@
+"""Fused per-tensor absmax int8 activation quantization (paper Phase 1).
+
+Two Pallas passes (a global reduction cannot be one pass):
+  1. tile-wise |x| max reduction -> partial maxima grid,
+  2. quantize x with the combined scalar scale.
+
+The scalar combine between passes is a trivial jnp.max on the tiny partial
+array.  Matches ``repro.core.quant.absmax_int8`` bit-for-bit (same rounding).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ACT_QMAX = 127.0
+EPS = 1e-6
+
+
+def _absmax_kernel(x_ref, out_ref):
+    out_ref[0, 0] = jnp.max(jnp.abs(x_ref[...].astype(jnp.float32)))
+
+
+def _quant_kernel(x_ref, s_ref, out_ref):
+    s = s_ref[0, 0]
+    q = jnp.clip(jnp.round(x_ref[...].astype(jnp.float32) / s), -ACT_QMAX, ACT_QMAX)
+    out_ref[...] = q.astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bk", "interpret"))
+def act_quant(
+    x: jax.Array, *, bn: int = 256, bk: int = 512, interpret: bool = False
+) -> tuple[jax.Array, jax.Array]:
+    """fp [N, K] -> (int8 [N, K], fp32 scalar scale). N % bn == K % bk == 0."""
+    n, k = x.shape
+    grid = (n // bn, k // bk)
+    partial_max = pl.pallas_call(
+        _absmax_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bn, bk), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(grid, jnp.float32),
+        interpret=interpret,
+    )(x)
+    scale = (jnp.maximum(jnp.max(partial_max), EPS) / ACT_QMAX).reshape(1, 1)
+    x_q = pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, bk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.int8),
+        interpret=interpret,
+    )(x, scale)
+    return x_q, scale[0, 0]

@@ -1,0 +1,86 @@
+"""I2_S fused decode+matmul Pallas TPU kernel (paper §3.2.2, TPU-adapted).
+
+Contract:  y_int32[N, M] = x_q[N, K] (int8) · W_t[M, K]^T,
+with W stored packed 4 ternary digits / byte (2 bpw in HBM).
+
+TPU adaptation (DESIGN.md §2): the packed bytes stream HBM→VMEM and are
+decoded *in VMEM* with shift/mask on the VPU — the unpacked int8 operand
+never exists in HBM, which is exactly the property that makes the 2 bpw
+memory-roofline real.  To avoid lane-dim reshuffles entirely, the kernel
+uses a split-plane formulation:
+
+    byte b packs digits c0..c3 of weights w[4k..4k+3];
+    digit plane i:  D_i[m, k4] = ((p >> 2i) & 3) - 1         (shape [M, K/4])
+    activation plane i:  X_i[n, k4] = x[n, 4·k4 + i]          (shape [N, K/4])
+    y = Σ_i  X_i · D_i^T        (four int8 MXU dots, K/4 contraction each)
+
+The X planes are produced once by the ops.py wrapper (a cheap strided view);
+inside the kernel there is no reshape, repeat, gather, or iota — only
+shifts, masks, subtracts and dots, all natively layout-friendly.
+
+Grid: (N/bn, M/bm, K4/bk4) with the contraction axis innermost; the int32
+accumulator tile lives in the output VMEM block across the k steps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _i2s_kernel(x0, x1, x2, x3, p_ref, out_ref):
+    """One (bn, bm) output tile, one bk4-wide slice of the contraction."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    p = p_ref[...]  # uint8 [bm, bk4]
+    acc = out_ref[...]
+    for i, x_ref in enumerate((x0, x1, x2, x3)):
+        d = (((p >> (2 * i)) & 0x3).astype(jnp.int8) - 1)  # [bm, bk4] in {-1,0,1}
+        acc = acc + jax.lax.dot_general(
+            x_ref[...], d,
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bm", "bk4", "interpret"))
+def i2s_matmul(
+    x_planes: tuple[jax.Array, jax.Array, jax.Array, jax.Array],
+    packed: jax.Array,
+    *,
+    bn: int = 128,
+    bm: int = 128,
+    bk4: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """x_planes: 4 × int8 [N, K/4] (deinterleaved); packed: uint8 [M, K/4].
+
+    Returns int32 [N, M].  Requires N % bn == M % bm == (K/4) % bk4 == 0
+    (the ops.py wrapper pads).  bm, bn multiples of 128 keep the MXU dims
+    hardware-aligned; bk4=128 puts a full 128-lane packed tile in VMEM
+    (VMEM per step: bm·bk4 packed bytes + 4·bn·bk4 act bytes + 4·bn·bm acc).
+    """
+    n, k4 = x_planes[0].shape
+    m = packed.shape[0]
+    grid = (n // bn, m // bm, k4 // bk4)
+
+    x_spec = pl.BlockSpec((bn, bk4), lambda i, j, k: (i, k))
+    p_spec = pl.BlockSpec((bm, bk4), lambda i, j, k: (j, k))
+    o_spec = pl.BlockSpec((bn, bm), lambda i, j, k: (i, j))
+
+    return pl.pallas_call(
+        _i2s_kernel,
+        grid=grid,
+        in_specs=[x_spec, x_spec, x_spec, x_spec, p_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.int32),
+        interpret=interpret,
+    )(*x_planes, packed)

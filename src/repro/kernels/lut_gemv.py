@@ -1,0 +1,102 @@
+"""True element-wise-LUT mpGEMV on the MXU (paper Algorithm 3; TL1_0 / TL1_1).
+
+This kernel keeps the paper's *table-lookup* computation model rather than
+decoding weights: the wrapper precomputes the 9-entry eLUT of every
+activation pair group (paper Phase 1 / ``tl1_build_lut``), and the kernel
+accumulates ``Σ_g LUT[g, code[m, g]]``.
+
+TPU adaptation of the lookup (DESIGN.md §2): there is no `vpshufb`, so the
+lookup is expressed as a compare-and-accumulate contraction — for each code
+value c, ``(codes == c)`` forms a 0/1 int8 mask that multiplies LUT column c
+on the MXU.  Napkin math: this inflates MXU work by ~C²/g ≈ 4.5× over the
+arithmetic-decode kernels, so it only wins in the *extremely* memory-bound
+regime (batch-1 decode GEMV, where the MXU idles anyway and HBM bytes are
+everything).  That is precisely the regime the paper targets on CPU.
+
+Losslessness (paper §3.2.1): eLUT entries of int8 pairs need int16.
+  * TL1_1 (lossless): the int16 LUT is split into low/high byte planes and
+    looked up twice, then recombined as ``acc_hi·256 + acc_lo`` — the
+    **pack-and-unpack** technique, mapped to two int8 MXU contractions.
+  * TL1_0 (lossy): the wrapper requantizes the LUT to int8 (T-MAC style,
+    per-tensor scale) and the kernel does a single contraction.
+
+Weight layout: original tl1 bytes (code pair (2t, 2t+1) per byte) — the lo
+nibble plane is the even groups, the hi plane the odd groups, so the wrapper
+supplies the eLUT deinterleaved into even/odd group tables.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lut_gemv_kernel(lut_even, lut_odd, p_ref, out_ref, *, lossless: bool):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    p = p_ref[...].astype(jnp.int16)  # [bm, gb/2] packed code bytes
+    lo = p & 0xF                      # codes of even groups
+    hi = (p >> 4) & 0xF               # codes of odd groups
+    acc = out_ref[...]
+    for codes, lut_ref in ((lo, lut_even), (hi, lut_odd)):
+        lut = lut_ref[...]            # [gb/2, 9] int32 (int16-range values)
+        for c in range(9):
+            mask = (codes == c).astype(jnp.int8)            # [bm, gb/2]
+            col = lut[:, c]                                  # [gb/2]
+            if lossless:
+                # pack-and-unpack: two int8-range lookups, recombined exactly.
+                col_lo = (col & 0xFF).astype(jnp.int32)      # unsigned low byte
+                col_hi = (col >> 8).astype(jnp.int32)        # arithmetic high
+                acc_lo = jnp.dot(mask.astype(jnp.int32), col_lo,
+                                 preferred_element_type=jnp.int32)
+                acc_hi = jnp.dot(mask.astype(jnp.int32), col_hi,
+                                 preferred_element_type=jnp.int32)
+                acc = acc + (acc_hi * 256 + acc_lo)[:, None]
+            else:
+                acc = acc + jnp.dot(
+                    mask.astype(jnp.int32), col,
+                    preferred_element_type=jnp.int32,
+                )[:, None]
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "g_blk", "lossless", "interpret"))
+def tl1_lut_gemv(
+    lut_even: jax.Array,
+    lut_odd: jax.Array,
+    packed: jax.Array,
+    *,
+    bm: int = 128,
+    g_blk: int = 256,
+    lossless: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    """lut_even/odd: int32 [G/2, 9] (eLUT of even/odd activation pair groups);
+    packed: uint8 [M, G/2] tl1 bytes (G = K/2 groups).  Returns int32 [M, 1].
+
+    Requires M % bm == 0 and (G/2) % (g_blk/2) == 0.
+    """
+    m = packed.shape[0]
+    gh = packed.shape[1]  # G/2 bytes per row
+    ghb = g_blk // 2
+    grid = (m // bm, gh // ghb)
+
+    lut_spec = pl.BlockSpec((ghb, 9), lambda i, k: (k, 0))
+    p_spec = pl.BlockSpec((bm, ghb), lambda i, k: (i, k))
+    o_spec = pl.BlockSpec((bm, 1), lambda i, k: (i, 0))
+
+    return pl.pallas_call(
+        functools.partial(_lut_gemv_kernel, lossless=lossless),
+        grid=grid,
+        in_specs=[lut_spec, lut_spec, p_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((m, 1), jnp.int32),
+        interpret=interpret,
+    )(lut_even, lut_odd, packed)

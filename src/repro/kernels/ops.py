@@ -1,0 +1,167 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Responsibilities: flatten batch dims, pad N to the tile size (zero activation
+rows are exact no-ops), deinterleave activations into digit planes, dispatch
+on the PackedWeight format, and apply the (s_x · s_w) rescale.  The kernels
+themselves only ever see aligned tiles.
+
+``interpret`` defaults to True off-TPU (the kernel body runs in Python on
+CPU for validation); on a real TPU backend it compiles to Mosaic.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qtensor import PackedWeight
+from repro.kernels.act_quant import act_quant as _act_quant
+from repro.kernels.i2s_matmul import i2s_matmul
+from repro.kernels.lut_gemv import tl1_lut_gemv
+from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
+from repro.kernels.tl1_matmul import tl1_matmul
+from repro.kernels.tl2_matmul import tl2_matmul
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_rows(x: jax.Array, bn: int) -> tuple[jax.Array, int]:
+    n = x.shape[0]
+    pad = (-n) % bn
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    return x, n
+
+
+def _pick(block: int, extent: int) -> int:
+    """Largest tile ≤ block that divides extent (extents here are ≥ 8-aligned)."""
+    b = min(block, extent)
+    while extent % b:
+        b //= 2
+    return max(b, 1)
+
+
+def _quad_planes(x: jax.Array) -> tuple[jax.Array, ...]:
+    """[N, K] -> 4 × [N, K/4] with plane i holding x[:, i::4]."""
+    n, k = x.shape
+    r = x.reshape(n, k // 4, 4)
+    return tuple(r[:, :, i] for i in range(4))
+
+
+def _tri_planes(x: jax.Array) -> tuple[jax.Array, ...]:
+    n, k = x.shape
+    r = x.reshape(n, k // 3, 3)
+    return tuple(r[:, :, i] for i in range(3))
+
+
+def mpgemm_pallas(
+    x_q: jax.Array,
+    s_x: jax.Array,
+    pw: PackedWeight,
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """int8 [..., K] × PackedWeight [M, K] -> fp32 [..., M] (fused decode kernels)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    lead = x_q.shape[:-1]
+    k = x_q.shape[-1]
+    x2 = x_q.reshape(-1, k)
+    m = pw.m
+
+    if pw.fmt == "i2s":
+        y32 = _i2s_like(x2, pw.planes["p"], m, i2s_matmul, interpret)
+    elif pw.fmt == "tl1":
+        y32 = _i2s_like(x2, pw.planes["p"], m, tl1_matmul, interpret)
+    elif pw.fmt == "tl2k":
+        y32 = _tl2k(x2, pw, interpret)
+    else:
+        raise ValueError(f"no pallas kernel for format {pw.fmt!r}")
+
+    y = y32.astype(jnp.float32) * (jnp.asarray(s_x, jnp.float32) * pw.scale)
+    return y.reshape(*lead, m)
+
+
+def _i2s_like(x2, packed, m, kernel, interpret):
+    bn = _pick(128, ((x2.shape[0] + 127) // 128) * 128)
+    x2p, n = _pad_rows(x2, bn)
+    planes = _quad_planes(x2p)
+    k4 = planes[0].shape[1]
+    y = kernel(
+        planes, packed,
+        bn=bn, bm=_pick(128, m), bk4=_pick(128, k4),
+        interpret=interpret,
+    )
+    return y[:n]
+
+
+def _tl2k(x2, pw, interpret):
+    from repro.core import packing
+
+    gt = packing.TL2K_GTILE
+    y = None
+    if pw.three_k:
+        bn = _pick(128, ((x2.shape[0] + 127) // 128) * 128)
+        x3, n = _pad_rows(x2[:, : pw.three_k], bn)
+        planes = _tri_planes(x3)
+        y = tl2_matmul(
+            planes, pw.planes["idx"], pw.planes["sign"],
+            bn=bn, bm=_pick(128, pw.m), g_tile=gt,
+            interpret=interpret,
+        )[:n]
+    if pw.three_k < pw.k:
+        tail = _i2s_like(x2[:, pw.three_k:], pw.planes["tail"], pw.m, tl1_matmul, interpret)
+        y = tail if y is None else y + tail
+    return y
+
+
+def act_quant(x: jax.Array, *, interpret: bool | None = None):
+    """fp [..., K] -> (int8 [..., K], fp32 scalar) via the fused Pallas pass."""
+    if interpret is None:
+        interpret = _default_interpret()
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    bn = _pick(256, ((x2.shape[0] + 255) // 256) * 256)
+    x2p, n = _pad_rows(x2, bn)
+    x_q, s = _act_quant(x2p, bn=bn, bk=_pick(512, k), interpret=interpret)
+    return x_q[:n].reshape(*lead, k), s
+
+
+def lut_gemv(
+    x_q: jax.Array,
+    s_x: jax.Array,
+    pw: PackedWeight,
+    *,
+    lossless: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """True-LUT decode GEMV (TL1_0/TL1_1): int8 [K] × tl1 [M, K] -> fp32 [M]."""
+    if interpret is None:
+        interpret = _default_interpret()
+    if pw.fmt != "tl1":
+        raise ValueError("lut_gemv needs tl1 weights")
+    from repro.core import packing
+
+    lut = packing.tl1_build_lut(x_q[None, :])[0]  # [G, 9] int32
+    s_lut = jnp.float32(1.0)
+    if not lossless:
+        s_lut = jnp.maximum(jnp.max(jnp.abs(lut)).astype(jnp.float32), 1.0) / 127.0
+        lut = jnp.clip(jnp.round(lut / s_lut), -127, 127).astype(jnp.int32)
+    lut_even, lut_odd = lut[0::2], lut[1::2]
+    m = pw.m
+    ghb = _pick(128, x_q.shape[0] // 4)  # bytes per k-step tile
+    y32 = tl1_lut_gemv(
+        lut_even, lut_odd, pw.planes["p"],
+        bm=_pick(128, m), g_blk=2 * ghb,
+        lossless=lossless, interpret=interpret,
+    )[:, 0]
+    return y32.astype(jnp.float32) * (s_lut * jnp.asarray(s_x, jnp.float32) * pw.scale)
+
+
+def ssd_scan(a_log, xbar, b, c, *, chunk: int = 64, interpret: bool | None = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _ssd_scan(a_log, xbar, b, c, chunk=chunk, interpret=interpret)

@@ -1,0 +1,127 @@
+"""Pure-jnp / numpy oracles for every Pallas kernel.
+
+Two layers of assurance:
+  * the canonical pure-jnp semantics live in ``repro.core`` (mpgemm / quant /
+    packing) and are re-exported here as the primary oracles;
+  * ``*_naive`` numpy loop implementations are fully independent (no shared
+    code with either the kernels or core) for tiny-shape spot checks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mpgemm as _mpgemm
+from repro.core import packing as _packing
+from repro.core import quant as _quant
+from repro.core.qtensor import PackedWeight, unpack_weight
+
+# ---------------------------------------------------------------------------
+# Canonical oracles (shared semantics with repro.core)
+# ---------------------------------------------------------------------------
+
+
+def mpgemm_int32(x_q: jax.Array, w_t: jax.Array) -> jax.Array:
+    """int8 [N, K] × ternary int8 [M, K] -> int32 [N, M]."""
+    return jax.lax.dot_general(
+        x_q, w_t, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+
+def mpgemm_packed(x_q: jax.Array, pw: PackedWeight) -> jax.Array:
+    return mpgemm_int32(x_q, unpack_weight(pw).astype(jnp.int8))
+
+
+def absmax_int8(x: jax.Array):
+    return _quant.absmax_int8(x)
+
+
+def tl1_lut_int32(x_q: jax.Array, pw: PackedWeight, lossless: bool) -> jax.Array:
+    """Algorithm 3 semantics, int32 result before scaling (N=1 gemv oracle)."""
+    y = _mpgemm.tl1_lut(x_q, jnp.float32(1.0), pw, lossless=lossless)
+    if lossless:
+        return jnp.round(y).astype(jnp.int32)
+    return y  # lossy variant has a non-integer LUT scale folded in
+
+
+def ssd_sequential(a_log, xbar, b, c):
+    """O(L) sequential recurrence oracle: y_t = C_t · (a_t h_{t-1} + B_t ⊗ x̄_t)."""
+
+    def step(h, inp):
+        al, xb, bm, cm = inp
+        h = jnp.exp(al) * h + jnp.outer(xb, bm)  # [P, S]
+        return h, h @ cm
+
+    bh, L = a_log.shape
+    p, s = xbar.shape[-1], b.shape[-1]
+
+    def per_seq(al, xb, bm, cm):
+        h0 = jnp.zeros((p, s), jnp.float32)
+        _, y = jax.lax.scan(step, h0, (al, xb, bm, cm))
+        return y
+
+    return jax.vmap(per_seq)(a_log, xbar, b, c)
+
+
+# ---------------------------------------------------------------------------
+# Independent numpy loop oracles (tiny shapes only)
+# ---------------------------------------------------------------------------
+
+
+def ternary_matmul_naive(x_q: np.ndarray, w_t: np.ndarray) -> np.ndarray:
+    """Triple loop, no vectorization, no shared code."""
+    n, k = x_q.shape
+    m = w_t.shape[0]
+    out = np.zeros((n, m), np.int64)
+    for i in range(n):
+        for j in range(m):
+            acc = 0
+            for t in range(k):
+                acc += int(x_q[i, t]) * int(w_t[j, t])
+            out[i, j] = acc
+    return out.astype(np.int32)
+
+
+def tl2_pack_naive(w_row: np.ndarray) -> tuple[list[int], list[int]]:
+    """Paper Table 6 semantics for one row (groups of 3 -> (sign, idx))."""
+    signs, idxs = [], []
+    for g in range(0, len(w_row), 3):
+        v = (w_row[g] + 1) * 9 + (w_row[g + 1] + 1) * 3 + (w_row[g + 2] + 1)
+        if v > 13:
+            signs.append(1)
+            idxs.append(26 - v)
+        else:
+            signs.append(0)
+            idxs.append(int(v))
+    return idxs, signs
+
+
+def lut_gemv_naive(x_q: np.ndarray, w_t: np.ndarray) -> np.ndarray:
+    """Algorithm 3 executed literally: enumerate the 9-entry eLUT, look up."""
+    k = x_q.shape[0]
+    m = w_t.shape[0]
+    lut = np.zeros((k // 2, 9), np.int64)
+    for g in range(k // 2):
+        for c in range(9):
+            d0, d1 = c // 3 - 1, c % 3 - 1
+            lut[g, c] = int(x_q[2 * g]) * d0 + int(x_q[2 * g + 1]) * d1
+    out = np.zeros(m, np.int64)
+    for j in range(m):
+        for g in range(k // 2):
+            code = (int(w_t[j, 2 * g]) + 1) * 3 + (int(w_t[j, 2 * g + 1]) + 1)
+            out[j] += lut[g, code]
+    return out.astype(np.int32)
+
+
+__all__ = [
+    "mpgemm_int32",
+    "mpgemm_packed",
+    "absmax_int8",
+    "tl1_lut_int32",
+    "ssd_sequential",
+    "ternary_matmul_naive",
+    "tl2_pack_naive",
+    "lut_gemv_naive",
+]

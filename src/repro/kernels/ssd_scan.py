@@ -1,0 +1,84 @@
+"""Mamba2 SSD chunked-scan Pallas TPU kernel (for the mamba2-1.3b arch).
+
+State-space duality (arXiv:2405.21060): within a chunk of Q steps the
+recurrence  h_t = a_t·h_{t-1} + B_t ⊗ x̄_t,  y_t = C_t·h_t  is computed as a
+decay-masked attention (MXU-friendly), and a [P, S] state carries between
+chunks.  The per-(batch·head) state lives in a VMEM scratch buffer that
+persists across the sequential chunk grid steps.
+
+This is activation math — the ternary technique applies to the surrounding
+in/out projections (DESIGN.md §Arch-applicability), so the kernel is fp32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(alog_ref, xbar_ref, b_ref, c_ref, y_ref, h_ref):
+    nc = pl.program_id(1)
+
+    @pl.when(nc == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = alog_ref[0]                     # [Q] log decay (dt·A, ≤ 0)
+    la = jnp.cumsum(a)                  # inclusive cumulative log decay
+    xb = xbar_ref[0]                    # [Q, P]
+    bm = b_ref[0]                       # [Q, S]
+    cm = c_ref[0]                       # [Q, S]
+    q = a.shape[0]
+
+    # Intra-chunk: decay-masked attention on the MXU.
+    scores = jnp.dot(cm, bm.T, preferred_element_type=jnp.float32)  # [Q, Q]
+    decay = jnp.exp(la[:, None] - la[None, :])
+    row = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    att = jnp.where(row >= col, scores * decay, 0.0)
+    y_intra = jnp.dot(att, xb, preferred_element_type=jnp.float32)  # [Q, P]
+
+    # Inter-chunk: contribution of the carried state.
+    h = h_ref[...]                                                  # [P, S]
+    y_inter = jnp.exp(la)[:, None] * jnp.dot(cm, h.T)               # [Q, P]
+    y_ref[0] = y_intra + y_inter
+
+    # State update: h' = a_chunk·h + Σ_j (Π_{k>j} a_k) x̄_j ⊗ B_j.
+    w = jnp.exp(la[-1] - la)                                        # [Q]
+    h_ref[...] = jnp.exp(la[-1]) * h + jnp.dot((xb * w[:, None]).T, bm)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    a_log: jax.Array,   # [BH, L]    log decay per step
+    xbar: jax.Array,    # [BH, L, P] dt-scaled inputs
+    b: jax.Array,       # [BH, L, S]
+    c: jax.Array,       # [BH, L, S]
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns y [BH, L, P].  Requires L % chunk == 0."""
+    bh, L = a_log.shape
+    p = xbar.shape[-1]
+    s = b.shape[-1]
+    grid = (bh, L // chunk)
+
+    return pl.pallas_call(
+        _ssd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk), lambda i, k: (i, k)),
+            pl.BlockSpec((1, chunk, p), lambda i, k: (i, k, 0)),
+            pl.BlockSpec((1, chunk, s), lambda i, k: (i, k, 0)),
+            pl.BlockSpec((1, chunk, s), lambda i, k: (i, k, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, p), lambda i, k: (i, k, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, L, p), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((p, s), jnp.float32)],
+        interpret=interpret,
+    )(a_log, xbar, b, c)

@@ -1,0 +1,83 @@
+"""TL1 fused decode+matmul Pallas TPU kernel (paper §3.1, Algorithm 3, TPU-adapted).
+
+Contract: y_int32[N, M] = x_q[N, K] (int8) · W_t[M, K]^T,
+with W stored as 4-bit base-3 pair codes, 2 codes / byte (2 bpw in HBM).
+
+Each byte packs codes (lo, hi) for weight pairs (w[4k], w[4k+1]) and
+(w[4k+2], w[4k+3]); code = (w0+1)·3 + (w1+1) ∈ 0..8.  The split-plane
+decode (DESIGN.md §2) extracts four digit planes with only shift / mask /
+div-mod-by-3 VPU ops (div/mod by the constant 3 lowers to multiply-shift):
+
+    lo = p & 0xF, hi = p >> 4
+    D_0 = lo // 3 - 1   (w[4k])      D_1 = lo % 3 - 1   (w[4k+1])
+    D_2 = hi // 3 - 1   (w[4k+2])    D_3 = hi % 3 - 1   (w[4k+3])
+    y = Σ_i  X_i · D_i^T                    (four int8 MXU dots)
+
+On CPU the paper realizes Algorithm 3 with a `vpshufb` 9-entry table; the
+TPU has no lane table-lookup, so the enumerated-LUT step is replaced by
+arithmetic base-3 decode — same element-wise format in HBM, same result.
+The true-LUT formulation (one-hot × eLUT on the MXU) is kept in
+``lut_gemv.py`` for the extreme memory-bound GEMV regime.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tl1_kernel(x0, x1, x2, x3, p_ref, out_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    p = p_ref[...].astype(jnp.int16)  # uint8 [bm, bk4] -> int16 for div/mod
+    lo = p & 0xF
+    hi = (p >> 4) & 0xF
+    planes = (lo // 3, lo % 3, hi // 3, hi % 3)
+    acc = out_ref[...]
+    for x_ref, d16 in zip((x0, x1, x2, x3), planes):
+        d = d16.astype(jnp.int8) - 1
+        acc = acc + jax.lax.dot_general(
+            x_ref[...], d,
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bm", "bk4", "interpret"))
+def tl1_matmul(
+    x_planes: tuple[jax.Array, jax.Array, jax.Array, jax.Array],
+    packed: jax.Array,
+    *,
+    bn: int = 128,
+    bm: int = 128,
+    bk4: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """x_planes: 4 × int8 [N, K/4]; packed: uint8 [M, K/4] TL1 bytes.
+
+    Returns int32 [N, M].  Same tiling contract as i2s_matmul.
+    """
+    n, k4 = x_planes[0].shape
+    m = packed.shape[0]
+    grid = (n // bn, m // bm, k4 // bk4)
+
+    x_spec = pl.BlockSpec((bn, bk4), lambda i, j, k: (i, k))
+    p_spec = pl.BlockSpec((bm, bk4), lambda i, j, k: (j, k))
+    o_spec = pl.BlockSpec((bn, bm), lambda i, j, k: (i, j))
+
+    return pl.pallas_call(
+        _tl1_kernel,
+        grid=grid,
+        in_specs=[x_spec, x_spec, x_spec, x_spec, p_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.int32),
+        interpret=interpret,
+    )(*x_planes, packed)

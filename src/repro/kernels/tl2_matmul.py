@@ -1,0 +1,107 @@
+"""TL2 fused decode+matmul Pallas TPU kernel (paper §3.1, Algorithm 4, TPU-adapted).
+
+Contract: y_int32[N, M] = x_q[N, K] (int8) · W_t[M, K]^T, with W stored at
+**1.67 bpw**: a 4-bit index plane + a 1-bit sign plane per group of 3 ternary
+weights (element-wise mirror consolidation + signed-unsigned weight
+splitting, paper §3.1.1–3.1.2), in the ``tl2k`` kernel layout
+(``repro.core.packing.tl2k_pack``) — the TPU analogue of the paper's
+LUT-centric data layout.
+
+Decode per K-tile of G groups (all static lane slices, no interleaves):
+
+    lo = idx & 0xF          # indices of groups [0, G/2)
+    hi = idx >> 4           # indices of groups [G/2, G)
+    for b in 0..7:          # sign bit-plane b covers groups [b·G/8, (b+1)·G/8)
+        s   = (sign >> b) & 1                       # [bm, G/8]
+        i_b = (lo | hi)[:, lane slice for b]        # [bm, G/8]
+        v   = i_b·(1 - 2s) + 26·s                   # mirror decode; arithmetic
+                                                    # equivalent of Eq. 5's
+                                                    # sign = XOR(sign, sign+x)
+        d0, d1, d2 = v//9 - 1, (v//3)%3 - 1, v%3 - 1    # base-3 digits (VPU
+                                                        # mul-shift div/mod)
+        acc += x0_b·d0ᵀ + x1_b·d1ᵀ + x2_b·d2ᵀ           # int8 MXU dots
+
+The activation is pre-deinterleaved by ops.py into three digit planes
+x_i[n, g] = x[n, 3g + i].  The paper's 9/14-entry `vpshufb` tables have no
+TPU analogue (DESIGN.md §2); arithmetic base-3 decode replaces them while
+preserving the 1.67 bpw HBM format — which is what the memory roofline sees.
+
+K handling: requires K % (3·g_tile) == 0; general K uses block-fitting
+weight splitting (paper §3.1.2) — ops.py routes the tail through tl1.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tl2_kernel(x0, x1, x2, idx_ref, sign_ref, out_ref, *, g_tile: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    idx = idx_ref[...].astype(jnp.int16)   # [bm, G/2] packed nibbles
+    sign = sign_ref[...]                   # [bm, G/8] packed sign bits (uint8)
+    lo = idx & 0xF
+    hi = (idx >> 4) & 0xF
+    w8 = g_tile // 8
+    acc = out_ref[...]
+    for b in range(8):
+        s = ((sign >> b) & 1).astype(jnp.int16)                 # [bm, G/8]
+        half = lo if b < 4 else hi
+        off = (b % 4) * w8
+        i_b = jax.lax.slice_in_dim(half, off, off + w8, axis=1)  # [bm, G/8]
+        v = i_b * (1 - 2 * s) + 26 * s                           # 0..26
+        digits = (v // 9, (v // 3) % 3, v % 3)
+        lane0 = b * w8
+        for x_ref, d16 in zip((x0, x1, x2), digits):
+            d = d16.astype(jnp.int8) - 1
+            xb = jax.lax.slice_in_dim(x_ref[...], lane0, lane0 + w8, axis=1)
+            acc = acc + jax.lax.dot_general(
+                xb, d, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.int32,
+            )
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bm", "g_tile", "interpret"))
+def tl2_matmul(
+    x_planes: tuple[jax.Array, jax.Array, jax.Array],
+    idx_plane: jax.Array,
+    sign_plane: jax.Array,
+    *,
+    bn: int = 128,
+    bm: int = 128,
+    g_tile: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """x_planes: 3 × int8 [N, K/3] (digit-deinterleaved, tile order);
+    idx_plane: uint8 [M, K/6]; sign_plane: uint8 [M, K/24] (tl2k layout).
+
+    Returns int32 [N, M].  One grid k-step covers one g_tile-group K-tile
+    (3·g_tile weights); VMEM per step ≈ bm·g_tile·(1/2 + 1/8) packed bytes +
+    3·bn·g_tile activation bytes + bn·bm·4 accumulator bytes.
+    """
+    n, g_total = x_planes[0].shape
+    m = idx_plane.shape[0]
+    grid = (n // bn, m // bm, g_total // g_tile)
+
+    x_spec = pl.BlockSpec((bn, g_tile), lambda i, j, k: (i, k))
+    i_spec = pl.BlockSpec((bm, g_tile // 2), lambda i, j, k: (j, k))
+    s_spec = pl.BlockSpec((bm, g_tile // 8), lambda i, j, k: (j, k))
+    o_spec = pl.BlockSpec((bn, bm), lambda i, j, k: (i, j))
+
+    return pl.pallas_call(
+        functools.partial(_tl2_kernel, g_tile=g_tile),
+        grid=grid,
+        in_specs=[x_spec, x_spec, x_spec, i_spec, s_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.int32),
+        interpret=interpret,
+    )(*x_planes, idx_plane, sign_plane)

@@ -1,0 +1,240 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST run before any jax import — jax locks the device
+count at first init.  512 host devices back both the 16×16 single-pod mesh
+(first 256) and the 2×16×16 multi-pod mesh.
+
+Per cell this script:
+  1. builds the production mesh and the cell's ShapeDtypeStruct input specs,
+  2. pjit-lowers the real step function (train_step / prefill / serve_step)
+     with explicit in/out shardings from repro.distributed.sharding,
+  3. compiles (proving the distribution config is coherent: no sharding
+     mismatches, no unsupported collectives, memory fits),
+  4. records memory_analysis, cost_analysis and the collective schedule
+     parsed from the optimized per-device HLO into a JSON artifact that
+     benchmarks/roofline.py and EXPERIMENTS.md consume.
+
+Usage:
+    python -m repro.launch.dryrun --arch gemma3-4b --shape train_4k [--multi-pod]
+    python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun]
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+
+from repro import configs
+from repro.distributed import sharding
+from repro.launch import hlocost, roofline, shapes
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.train import loop as train_loop
+
+
+def _out_unspecified(tree):
+    return None
+
+
+def lower_cell(arch: str, shape: str, *, multi_pod: bool, fmt: str = "i2s",
+               extra_cfg: dict | None = None, microbatches: int = 16):
+    """Build mesh + specs and return (lowered, cfg, cell, mesh)."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    jax.set_mesh(mesh)  # enables P-spec sharding constraints in the model body
+    cell = shapes.SHAPES[shape]
+    cfg = shapes.dryrun_config(configs.get(arch), cell.kind, fmt=fmt)
+    dp = ("pod", "data") if multi_pod else ("data",)
+    dp_size = 32 if multi_pod else 16
+    if cell.global_batch % dp_size == 0:
+        # d_model slice on "model" too: remat-saved residuals shard 16× (the
+        # per-layer all-gather this costs stays far under the compute term)
+        mdl = "model" if configs.get(arch).d_model % 16 == 0 else None
+        cfg = cfg.replace(act_shard=(dp, None, mdl))
+    elif cell.kind != "decode" and cell.seq_len % dp_size == 0:
+        cfg = cfg.replace(act_shard=(None, "data", None))  # SP fallback
+    if extra_cfg:
+        extra = dict(extra_cfg)
+        if "act_shard" in extra and extra["act_shard"] is not None:
+            extra["act_shard"] = tuple(
+                tuple(a) if isinstance(a, list) else a for a in extra["act_shard"]
+            )
+        cfg = cfg.replace(**extra)
+
+    if cell.kind == "train":
+        # grad accumulation bounds the live activation set; fsdp grad spec
+        # keeps the accumulator reduce-scattered (ZeRO gradient sharding)
+        tcfg = train_loop.TrainConfig(microbatches=microbatches, grad_spec="fsdp")
+        specs = shapes.input_specs(cfg, cell, tcfg)
+        step = train_loop.make_train_step(cfg, tcfg)
+        in_sh = (
+            sharding.shard_params(specs["state"], mesh, "train"),
+            sharding.shard_batch(specs["batch"], mesh),
+        )
+        out_sh = (sharding.shard_params(specs["state"], mesh, "train"), None)
+        lowered = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=(0,)).lower(
+            specs["state"], specs["batch"]
+        )
+    elif cell.kind == "prefill":
+        specs = shapes.input_specs(cfg, cell)
+
+        def prefill_fn(params, batch, state):
+            return lm.prefill(params, batch, cfg, state)
+
+        in_sh = (
+            sharding.shard_params(specs["params"], mesh, "infer"),
+            sharding.shard_batch(specs["batch"], mesh),
+            sharding.shard_state(specs["state"], mesh, batch=cell.global_batch),
+        )
+        out_sh = (None, sharding.shard_state(specs["state"], mesh, batch=cell.global_batch))
+        lowered = jax.jit(prefill_fn, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=(2,)).lower(
+            specs["params"], specs["batch"], specs["state"]
+        )
+    else:  # decode / serve_step
+        specs = shapes.input_specs(cfg, cell)
+
+        def serve_step(params, tok, pos, state):
+            return lm.decode_step(params, tok, pos, cfg, state)
+
+        st_sh = sharding.shard_state(specs["state"], mesh, batch=cell.global_batch)
+        in_sh = (
+            sharding.shard_params(specs["params"], mesh, "infer"),
+            sharding.shard_batch(specs["tok"], mesh),
+            None,
+            st_sh,
+        )
+        out_sh = (None, st_sh)
+        lowered = jax.jit(serve_step, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=(3,)).lower(
+            specs["params"], specs["tok"], specs["pos"], specs["state"]
+        )
+    return lowered, cfg, cell, mesh
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool, fmt: str = "i2s",
+             out_dir: str = "results/dryrun", extra_cfg: dict | None = None,
+             tag: str = "", microbatches: int = 16) -> dict:
+    t0 = time.time()
+    lowered, cfg, cell, mesh = lower_cell(arch, shape, multi_pod=multi_pod,
+                                          fmt=fmt, extra_cfg=extra_cfg,
+                                          microbatches=microbatches)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            mem_d[k] = int(getattr(mem, k, 0) or 0)
+    print(compiled.memory_analysis())
+
+    cost = compiled.cost_analysis() or {}
+    print({k: v for k, v in cost.items() if k in ("flops", "bytes accessed")})
+    xla_flops = float(cost.get("flops", 0.0))
+    xla_bytes = float(cost.get("bytes accessed", 0.0))
+
+    hlo = compiled.as_text()
+    # Primary accounting: trip-count-aware walker (XLA's cost_analysis counts
+    # while/scan bodies once — useless for scan-structured models).
+    hc = hlocost.analyze(hlo)
+    flops = hc["flops"]
+    bytes_acc = hc["bytes"]
+    coll = hc["collectives"]
+    coll.update({f"once_{k}": v for k, v in roofline.collective_bytes(hlo).items()
+                 if k.startswith("n_")})
+    terms = roofline.terms(flops, bytes_acc, coll["total"])
+
+    nums = roofline.model_numbers(cfg)
+    mflops = roofline.model_flops(cfg, cell, nums["n_active"])
+    chips = mesh.size
+
+    rec = {
+        "arch": arch, "shape": shape, "mesh": list(mesh.shape.values()),
+        "axes": list(mesh.axis_names), "chips": chips, "fmt": fmt, "tag": tag,
+        "kind": cell.kind,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops_per_device": flops, "bytes_per_device": bytes_acc,
+        "xla_once_flops": xla_flops, "xla_once_bytes": xla_bytes,
+        "collectives": coll, "memory_analysis": mem_d,
+        "terms": terms,
+        "model": {**nums, "model_flops_global": mflops,
+                  "model_flops_per_device": mflops / chips,
+                  "useful_flop_frac": (mflops / chips) / flops if flops else 0.0},
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    mesh_tag = "pod2" if multi_pod else "pod1"
+    suffix = f"_{tag}" if tag else ""
+    fname = f"{arch}_{shape}_{mesh_tag}{suffix}.json"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[dryrun] {arch} × {shape} × {mesh_tag}: compile ok in "
+          f"{t_compile:.1f}s; bound={terms['bound']} step={terms['step_s']*1e3:.2f}ms")
+    return rec
+
+
+def run_all(multi_pod: bool, out_dir: str, fmt: str, skip_existing: bool = True):
+    """Drive every applicable cell in an isolated subprocess."""
+    mesh_tag = "pod2" if multi_pod else "pod1"
+    failures = []
+    for arch in configs.ASSIGNED:
+        for shape in shapes.SHAPES:
+            if not shapes.applicable(arch, shape):
+                continue
+            fname = os.path.join(out_dir, f"{arch}_{shape}_{mesh_tag}.json")
+            if skip_existing and os.path.exists(fname):
+                print(f"[skip] {fname}")
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+                   "--shape", shape, "--out", out_dir, "--fmt", fmt]
+            if multi_pod:
+                cmd.append("--multi-pod")
+            print("[run]", " ".join(cmd), flush=True)
+            r = subprocess.run(cmd)
+            if r.returncode != 0:
+                failures.append((arch, shape))
+    if failures:
+        print("FAILURES:", failures)
+        sys.exit(1)
+    print("all cells compiled OK")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(shapes.SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--fmt", default="i2s")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--cfg-json", default=None,
+                    help="JSON dict of ModelConfig overrides (perf iteration)")
+    ap.add_argument("--mb", type=int, default=16, help="train microbatches")
+    args = ap.parse_args()
+
+    if args.all:
+        run_all(args.multi_pod, args.out, args.fmt)
+        return
+    extra = json.loads(args.cfg_json) if args.cfg_json else None
+    try:
+        run_cell(args.arch, args.shape, multi_pod=args.multi_pod, fmt=args.fmt,
+                 out_dir=args.out, extra_cfg=extra, tag=args.tag,
+                 microbatches=args.mb)
+    except Exception:
+        traceback.print_exc()
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Production mesh builders.
+
+Functions (never module-level constants) so importing this module never
+touches jax device state — the dry-run must set XLA_FLAGS before first init.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single pod (256 chips) or 2×16×16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple, axes: tuple):
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple:
+    """Mesh axes carrying the batch (DP): everything except 'model'."""
+    return tuple(a for a in mesh.axis_names if a != "model")

@@ -1,0 +1,136 @@
+"""Roofline term extraction from compiled dry-run artifacts.
+
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = collective_bytes_per_device / link_bw
+
+cost_analysis() runs on the post-SPMD per-device module, so its numbers are
+already per-chip.  Collective bytes are not in cost_analysis: we parse the
+optimized HLO text and sum the result-shape bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute (per-device
+payload, by the same per-device-module argument).
+
+Hardware model (TPU v5e, per the brief):
+    197 TFLOP/s bf16 · 819 GB/s HBM · ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import re
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> float:
+    """Sum bytes over every array in a (possibly tuple) HLO type string."""
+    total = 0.0
+    for dt, dims in _ARRAY_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device payload bytes by collective kind, from optimized HLO."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", stripped)
+        if not m:
+            continue
+        type_str, op = m.groups()
+        # normalize fused variants like all-gather-start / all-reduce-done
+        base = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-start"):
+                base = c
+                break
+        if base is None:
+            continue
+        out[base] += _shape_bytes(type_str)
+        counts[base] += 1
+    out_counts = {f"n_{k}": v for k, v in counts.items()}
+    return {**out, **out_counts, "total": sum(out[k] for k in _COLLECTIVES)}
+
+
+def terms(flops: float, bytes_accessed: float, coll_bytes: float) -> dict:
+    """Three roofline terms in seconds + the dominant one."""
+    t = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": bytes_accessed / HBM_BW,
+        "collective_s": coll_bytes / LINK_BW,
+    }
+    t["bound"] = max(("compute_s", "memory_s", "collective_s"), key=lambda k: t[k])
+    t["step_s"] = max(t["compute_s"], t["memory_s"], t["collective_s"])
+    return t
+
+
+def model_numbers(cfg) -> dict:
+    """Analytic parameter counts: total and active (MoE top-k)."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    kinds = cfg.layer_kinds()
+    per_attn = d * (h * dh) + 2 * d * (kv * dh) + (h * dh) * d
+    per_ffn_dense = 3 * d * f
+    total = active = v * d  # embedding (tied head)
+    for k in kinds + (["enc"] * cfg.enc_layers):
+        if k in ("attn", "local", "enc"):
+            total += per_attn
+            active += per_attn
+        elif k == "xattn":
+            total += 2 * per_attn
+            active += 2 * per_attn
+        elif k == "rec":
+            total += 2 * d * cfg.d_inner + cfg.d_inner * d
+            active += 2 * d * cfg.d_inner + cfg.d_inner * d
+        elif k == "ssd":
+            di, s, hh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+            n = d * (2 * di + 2 * s + hh) + di * d
+            total += n
+            active += n
+        if cfg.d_ff > 0 and k != "ssd":
+            if cfg.ffn_kind == "moe":
+                total += cfg.n_experts * per_ffn_dense
+                active += cfg.top_k * per_ffn_dense
+            else:
+                total += per_ffn_dense
+                active += per_ffn_dense
+    return {"n_total": total, "n_active": active}
+
+
+def model_flops(cfg, cell, n_active: int) -> float:
+    """6·N·D train / 2·N·D inference (+ decode attention over the cache)."""
+    if cell.kind == "train":
+        return 6.0 * n_active * cell.global_batch * cell.seq_len
+    if cell.kind == "prefill":
+        return 2.0 * n_active * cell.global_batch * cell.seq_len
+    flops = 2.0 * n_active * cell.global_batch
+    # decode attention reads the KV cache: 4·S_eff per layer-head-dim
+    for k in cfg.layer_kinds():
+        if k in ("attn", "xattn"):
+            s_eff = cell.seq_len
+        elif k == "local":
+            s_eff = min(cfg.window, cell.seq_len)
+        else:
+            continue
+        flops += 4.0 * cell.global_batch * s_eff * cfg.n_heads * cfg.d_head
+    return flops

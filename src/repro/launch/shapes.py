@@ -1,0 +1,121 @@
+"""Input-shape cells and ShapeDtypeStruct input specs for the dry-run.
+
+Four shapes per the brief (LM shapes are seq_len × global_batch):
+    train_4k     4,096 × 256     → train_step
+    prefill_32k  32,768 × 32     → prefill (serve)
+    decode_32k   one token, KV cache of 32,768, batch 128 → serve_step
+    long_500k    one token, KV cache of 524,288, batch 1  → serve_step
+                 (sub-quadratic archs only; skips recorded in DESIGN.md)
+
+Specs are ShapeDtypeStructs throughout — weak-type-correct, shardable, no
+device allocation: the full configs only ever exist abstractly on this host.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitlinear import QuantConfig
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.train import loop as train_loop
+from repro.train import optimizer as opt
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+# long_500k eligibility (DESIGN.md §Shape-cell skips)
+LONG_OK = {"mamba2-1.3b", "recurrentgemma-2b", "gemma3-4b"}
+
+
+def applicable(arch: str, shape: str) -> bool:
+    if shape == "long_500k":
+        return arch in LONG_OK
+    return True
+
+
+def dryrun_config(cfg: ModelConfig, kind: str, *, fmt: str = "i2s",
+                  impl: str = "xla") -> ModelConfig:
+    """Numerics for the production lowering: bf16 activations; QAT for train,
+    packed ternary inference otherwise; remat for the train graph."""
+    if kind == "train":
+        # w_gather left off: GSPMD's own FSDP propagation keeps the stacked
+        # weights and their scan-backward cotangents 256-way sharded (an
+        # explicit in-body TP constraint was measured to force TP-only f32
+        # cotangent carriers — +13 GB/device; see EXPERIMENTS.md §Dry-run)
+        return cfg.replace(dtype="bfloat16", remat=True,
+                           quant=QuantConfig(mode="qat"))
+    return cfg.replace(dtype="bfloat16",
+                       quant=QuantConfig(mode="quant", fmt=fmt, impl=impl))
+
+
+def abstract_params(cfg: ModelConfig, kind: str):
+    """ShapeDtypeStruct tree of the params this cell's step consumes."""
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    if kind == "train":
+        p = jax.eval_shape(lambda k: lm.init(k, cfg), key)
+        return p
+    return jax.eval_shape(lambda k: lm.pack(lm.init(k, cfg), cfg), key)
+
+
+def abstract_train_state(cfg: ModelConfig, tcfg: train_loop.TrainConfig):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(lambda k: train_loop.init_train_state(k, cfg, tcfg), key)
+
+
+def batch_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    b, s = cell.global_batch, cell.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    if cfg.frontend:
+        specs["frontend_emb"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.is_encdec():
+        specs["enc_emb"] = jax.ShapeDtypeStruct((b, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    b = cell.global_batch
+    state = jax.eval_shape(lambda: lm.init_state(cfg, b, cell.seq_len))
+    return {
+        "tok": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "state": state,
+    }
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell, tcfg=None) -> dict:
+    """All abstract inputs for the cell's step function."""
+    kind = cell.kind
+    if kind == "train":
+        tcfg = tcfg or train_loop.TrainConfig()
+        return {
+            "state": abstract_train_state(cfg, tcfg),
+            "batch": batch_specs(cfg, cell),
+        }
+    params = abstract_params(cfg, kind)
+    if kind == "prefill":
+        out = {"params": params, "batch": batch_specs(cfg, cell),
+               "state": jax.eval_shape(lambda: lm.init_state(cfg, cell.global_batch, cell.seq_len))}
+        out["batch"].pop("labels")
+        return out
+    return {"params": params, **decode_specs(cfg, cell)}

@@ -1,0 +1,98 @@
+"""Model configuration: one schema covering all assigned architecture families.
+
+``block_pattern`` is cycled over the layer stack (pattern-scan, DESIGN.md §3):
+e.g. gemma3's 5:1 local:global is ``("local",)*5 + ("attn",)`` and
+recurrentgemma's 1:2 is ``("rec", "rec", "attn")``.  Layers are stacked per
+pattern position and iterated with ``lax.scan``; the remainder
+(n_layers % len(pattern)) is unrolled.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.bitlinear import QuantConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+
+    # layer mix
+    block_pattern: tuple = ("attn",)  # attn | local | rec | ssd
+    window: int = 1024                # sliding window for "local" layers
+    ffn_kind: str = "dense"           # dense | moe
+
+    # attention options
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 1_000_000.0
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+
+    # SSM (mamba2) / RG-LRU (recurrentgemma)
+    d_inner: int = 0
+    ssm_state: int = 0
+    ssm_heads: int = 0
+    conv_width: int = 4
+
+    # encoder-decoder (seamless)
+    enc_layers: int = 0
+    enc_seq: int = 0                  # stub audio frontend: frames per sample
+
+    # modality frontend stub
+    frontend: str = ""                # "" | vision | audio
+    frontend_tokens: int = 0
+
+    # numerics / technique
+    quant: QuantConfig = QuantConfig(mode="qat")
+    kv_dtype: str = "int8"            # int8 (beyond-paper) | bf16
+    attn_block: int = 1024            # online-softmax KV block
+    norm_eps: float = 1e-6
+    dtype: str = "float32"            # compute dtype for tests; bf16 at scale
+    remat: bool = False               # activation checkpointing over blocks
+    # residual-stream sharding constraint [B, S, D] (None = GSPMD decides);
+    # e.g. (("pod","data"), None, "model") pins batch-DP (+ optional d_model
+    # TP slice).  Requires a mesh context (jax.set_mesh) at trace time.
+    act_shard: tuple = ()
+
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding rows padded to a 256 multiple so the vocab dim shards
+        cleanly on any mesh (standard practice; pad logits are masked)."""
+        return ((self.vocab + 255) // 256) * 256
+
+    def pattern_layers(self) -> tuple[int, int]:
+        """(n_scan_repeats, n_remainder_layers)."""
+        p = len(self.block_pattern)
+        return self.n_layers // p, self.n_layers % p
+
+    def layer_kinds(self) -> list:
+        reps, rem = self.pattern_layers()
+        return list(self.block_pattern) * reps + list(self.block_pattern[:rem])
+
+    def is_encdec(self) -> bool:
+        return self.enc_layers > 0
+
+    def is_subquadratic(self) -> bool:
+        """True if attention cost is windowed / recurrent (long_500k eligible)."""
+        kinds = set(self.block_pattern)
+        return kinds <= {"local", "rec", "ssd"} or "attn" not in kinds or (
+            "local" in kinds or "rec" in kinds or "ssd" in kinds
+        )
+
+    def with_quant(self, quant: QuantConfig) -> "ModelConfig":
+        return dataclasses.replace(self, quant=quant)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)

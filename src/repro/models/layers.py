@@ -1,0 +1,663 @@
+"""Layer zoo: attention (GQA / local / cross), SwiGLU FFN, MoE, RG-LRU, SSD.
+
+Every projection is a BitLinear (the paper's technique); norms, gates,
+routers and recurrence parameters stay fp32 (DESIGN.md §4).  All blocks share
+one calling convention so the pattern-scan stacker can mix kinds:
+
+    y, new_state = block_apply(kind, params, x, cfg, state=..., pos=...)
+
+state=None → stateless full-sequence forward (training);
+state=empty cache, pos=0 → prefill (fills the cache);
+state=cache, pos=t, x of seq-len 1 → one decode step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitlinear
+from repro.core.bitlinear import BitLinearParams
+from repro.models.config import ModelConfig
+
+F32 = jnp.float32
+NEG = -1e30
+
+
+def cdt(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms & RoPE
+# ---------------------------------------------------------------------------
+
+
+def rms_norm_init(d: int):
+    return {"w": jnp.ones((d,), F32)}
+
+
+def rms_norm(p, x, eps: float):
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * p["w"]).astype(x.dtype)
+
+
+def rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, dh]; pos: [B, S] int32 absolute positions (per sequence)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(half, dtype=F32) / half)
+    ang = pos.astype(F32)[..., None] * freq                    # [B, S, half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(F32), x[..., half:].astype(F32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (int8-quantized option — beyond-paper: ternary weights make decode
+# KV-traffic-dominated, so the cache gets the same bits-per-byte treatment)
+# ---------------------------------------------------------------------------
+
+
+def _cache_len(cfg: ModelConfig, kind: str, max_seq: int) -> int:
+    if kind == "local":
+        return min(cfg.window, max_seq)  # ring buffer: local layers never
+        # need more than `window` slots (what makes gemma3 long_500k fit)
+    return max_seq
+
+
+def attn_state_init(cfg: ModelConfig, kind: str, batch: int, max_seq: int) -> dict:
+    # +1 trash slot: writes for paused sequences (position < 0) land there and
+    # are excluded from reads by the pos >= 0 mask — lets one jitted decode
+    # step serve continuous-batching slots in different phases.
+    # Length padded to a 256 multiple so the sequence dim shards cleanly on
+    # any mesh axis (ring modulus is unchanged; pad slots stay pos=-1).
+    w = -(-(_cache_len(cfg, kind, max_seq) + 1) // 256) * 256
+    kvh, dh = cfg.n_kv_heads, cfg.d_head
+    if cfg.kv_dtype == "int8":
+        z = jnp.zeros((batch, w, kvh, dh), jnp.int8)
+        s = jnp.zeros((batch, w, kvh), F32)
+        cache = {"k": z, "v": z, "ks": s, "vs": s}
+    else:
+        z = jnp.zeros((batch, w, kvh, dh), jnp.bfloat16)
+        cache = {"k": z, "v": z}
+    cache["pos"] = jnp.full((batch, w), -1, jnp.int32)  # absolute pos per slot
+    return cache
+
+
+def _kv_quant(v: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """[B, S, KV, dh] fp -> (int8, per-[B,S,KV] scale)."""
+    s = jnp.maximum(jnp.max(jnp.abs(v.astype(F32)), axis=-1), 1e-6) / 127.0
+    q = jnp.clip(jnp.round(v.astype(F32) / s[..., None]), -127, 127)
+    return q.astype(jnp.int8), s
+
+
+def _cache_write(cache: dict, k, v, positions: jax.Array, kind: str, cfg: ModelConfig) -> dict:
+    """Write S new kv rows at per-sequence positions [B, S] (ring for local).
+
+    Negative positions (paused continuous-batching slots) write to the trash
+    slot (index w) and record pos = -1 → invisible to attention.
+    """
+    b, wp1 = cache["k"].shape[:2]
+    w = wp1 - 1
+    s = k.shape[1]
+    if s > w:  # ring buffer shorter than the write: only the tail survives
+        k, v = k[:, -w:], v[:, -w:]
+        positions = positions[:, -w:]
+        s = w
+    active = positions >= 0
+    slots = jnp.where(active, positions % w, w)             # [B, S]
+    positions = jnp.where(active, positions, -1)
+    bi = jnp.arange(b)[:, None]
+    out = dict(cache)
+    if "ks" in cache:
+        kq, ks = _kv_quant(k)
+        vq, vs = _kv_quant(v)
+        out["k"] = cache["k"].at[bi, slots].set(kq)
+        out["v"] = cache["v"].at[bi, slots].set(vq)
+        out["ks"] = cache["ks"].at[bi, slots].set(ks)
+        out["vs"] = cache["vs"].at[bi, slots].set(vs)
+    else:
+        out["k"] = cache["k"].at[bi, slots].set(k.astype(cache["k"].dtype))
+        out["v"] = cache["v"].at[bi, slots].set(v.astype(cache["v"].dtype))
+    out["pos"] = cache["pos"].at[bi, slots].set(positions)
+    return out
+
+
+def _cache_read(cache: dict, dtype) -> tuple[jax.Array, jax.Array, jax.Array]:
+    if "ks" in cache:
+        k = cache["k"].astype(dtype) * cache["ks"][..., None].astype(dtype)
+        v = cache["v"].astype(dtype) * cache["vs"][..., None].astype(dtype)
+    else:
+        k, v = cache["k"].astype(dtype), cache["v"].astype(dtype)
+    return k, v, cache["pos"]  # pos: [B, W]
+
+
+def _cache_read_raw(cache: dict):
+    """Raw cache + scales for block-local dequant: (k, v, ks, vs, pos).
+    ks/vs are None for the bf16 cache."""
+    return (cache["k"], cache["v"], cache.get("ks"), cache.get("vs"),
+            cache["pos"])
+
+
+# ---------------------------------------------------------------------------
+# Attention core: online-softmax blockwise (prefill/train) + cached decode
+# ---------------------------------------------------------------------------
+
+
+def blockwise_attention(
+    q: jax.Array,       # [B, H, Sq, dh]
+    k: jax.Array,       # [B, KV, Skv, dh]  (fp, or int8 with k_scale)
+    v: jax.Array,
+    *,
+    q_pos: jax.Array,   # [B, Sq] absolute positions (or None → bidirectional)
+    k_pos: jax.Array,   # [B, Skv]
+    causal: bool,
+    window: int | None,
+    block_k: int,
+    k_scale: jax.Array | None = None,  # [B, KV, Skv] int8-KV dequant scales
+    v_scale: jax.Array | None = None,
+) -> jax.Array:
+    """FlashAttention-style online softmax over KV blocks: O(Sq·block) memory.
+
+    Required for the 32k-prefill and 500k shapes — the naive [Sq, Skv] score
+    tensor would be hundreds of GiB at those sizes.  Positions are per
+    sequence ([B, ...]) so continuous-batching decode (slots at different
+    positions) shares one step function.
+    """
+    b, h, sq, dh = q.shape
+    kvh = k.shape[1]
+    g = h // kvh
+    scale = 1.0 / math.sqrt(dh)
+    qf = q.reshape(b, kvh, g, sq, dh).astype(F32)
+
+    bk = min(block_k, k.shape[2])
+    nb = k.shape[2] // bk
+    rem = k.shape[2] - nb * bk
+
+    def attend(carry, kb, vb, kpb, ksb=None, vsb=None):
+        # kb/vb: [B, KV, bk, dh]; kpb: [B, bk]; ksb/vsb: [B, KV, bk]
+        # Block-local int8-KV dequant (perf iteration q3-1, EXPERIMENTS §Perf):
+        # only a [bk]-sized f32 tile ever materializes — the full-cache f32
+        # copy cost 4× the cache bytes per decode step AND forced GSPMD
+        # reshards of cache-sized tensors when kv_heads ∤ model axis.
+        m, l, acc = carry
+        kf = kb.astype(F32) * ksb[..., None] if ksb is not None else kb.astype(F32)
+        vf = vb.astype(F32) * vsb[..., None] if vsb is not None else vb.astype(F32)
+        s = jnp.einsum("bkgsd,bktd->bkgst", qf, kf) * scale
+        if q_pos is not None:
+            mask = kpb[:, None, :] >= 0
+            if causal:
+                mask = mask & (kpb[:, None, :] <= q_pos[:, :, None])
+            if window is not None:
+                mask = mask & (q_pos[:, :, None] - kpb[:, None, :] < window)
+            mask = mask[:, None, None]                     # [B,1,1,Sq,bk]
+        else:
+            mask = jnp.ones((1, 1, 1, 1, 1), bool)
+        s = jnp.where(mask, s, NEG)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgst,bktd->bkgsd", p, vf
+        )
+        return m_new, l_new, acc_new
+
+    init = (
+        jnp.full((b, kvh, g, sq), NEG, F32),
+        jnp.zeros((b, kvh, g, sq), F32),
+        jnp.zeros((b, kvh, g, sq, dh), F32),
+    )
+    zp = jnp.zeros((b, bk), jnp.int32)
+    has_scale = k_scale is not None
+    if nb > 0:
+        kb_s = jnp.moveaxis(k[:, :, : nb * bk].reshape(b, kvh, nb, bk, dh), 2, 0)
+        vb_s = jnp.moveaxis(v[:, :, : nb * bk].reshape(b, kvh, nb, bk, dh), 2, 0)
+        kp_s = (
+            jnp.moveaxis(k_pos[:, : nb * bk].reshape(b, nb, bk), 1, 0)
+            if q_pos is not None
+            else jnp.zeros((nb, b, bk), jnp.int32)
+        )
+        xs = (kb_s, vb_s, kp_s)
+        if has_scale:
+            xs = xs + (
+                jnp.moveaxis(k_scale[:, :, : nb * bk].reshape(b, kvh, nb, bk), 2, 0),
+                jnp.moveaxis(v_scale[:, :, : nb * bk].reshape(b, kvh, nb, bk), 2, 0),
+            )
+
+        # remat the block body: backward recomputes per-block probabilities
+        # instead of saving [Sq, Skv]-worth of them — this is what keeps the
+        # flash-attention memory bound in training too.
+        @jax.checkpoint
+        def body(c, xs):
+            return attend(c, *xs), None
+
+        init, _ = jax.lax.scan(body, init, xs)
+    if rem:
+        init = attend(
+            init,
+            k[:, :, nb * bk:],
+            v[:, :, nb * bk:],
+            k_pos[:, nb * bk:] if q_pos is not None else zp[:, :rem],
+            k_scale[:, :, nb * bk:] if has_scale else None,
+            v_scale[:, :, nb * bk:] if has_scale else None,
+        )
+    m, l, acc = init
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, h, sq, dh)
+
+
+# ---------------------------------------------------------------------------
+# Attention block
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, cfg: ModelConfig, cross: bool = False) -> dict:
+    ks = jax.random.split(key, 6)
+    d, h, kvh, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    p = {
+        "q": bitlinear.init(ks[0], d, h * dh, bias=cfg.qkv_bias),
+        "k": bitlinear.init(ks[1], d, kvh * dh, bias=cfg.qkv_bias),
+        "v": bitlinear.init(ks[2], d, kvh * dh, bias=cfg.qkv_bias),
+        "o": bitlinear.init(ks[3], h * dh, d),
+    }
+    if cfg.qk_norm:
+        p["qn"] = rms_norm_init(dh)
+        p["kn"] = rms_norm_init(dh)
+    return p
+
+
+def _project_qkv(p, x, xkv, cfg: ModelConfig):
+    b, s, _ = x.shape
+    skv = xkv.shape[1]
+    q = bitlinear.apply(p["q"], x, cfg.quant).reshape(b, s, cfg.n_heads, cfg.d_head)
+    k = bitlinear.apply(p["k"], xkv, cfg.quant).reshape(b, skv, cfg.n_kv_heads, cfg.d_head)
+    v = bitlinear.apply(p["v"], xkv, cfg.quant).reshape(b, skv, cfg.n_kv_heads, cfg.d_head)
+    if cfg.qk_norm:
+        q = rms_norm(p["qn"], q, cfg.norm_eps)
+        k = rms_norm(p["kn"], k, cfg.norm_eps)
+    return q, k, v
+
+
+def attn_apply(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    kind: str,
+    *,
+    state: dict | None = None,
+    pos: jax.Array | None = None,
+    bidirectional: bool = False,
+):
+    """Self-attention ('attn' global causal, 'local' windowed, encoder bidi).
+
+    pos: None (train, 0-based), scalar (prefill / lockstep decode), or [B]
+    (continuous-batching decode with per-slot positions).
+    """
+    b, s, _ = x.shape
+    window = cfg.window if kind == "local" else None
+    pos0 = jnp.asarray(0 if pos is None else pos, jnp.int32)
+    if pos0.ndim == 0:
+        pos0 = jnp.broadcast_to(pos0, (b,))
+    positions = pos0[:, None] + jnp.arange(s, dtype=jnp.int32)[None]  # [B, S]
+
+    q, k, v = _project_qkv(p, x, x, cfg)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    new_state = state
+    if state is not None:
+        new_state = _cache_write(state, k, v, positions, kind, cfg)
+        if s == 1:  # decode: attend over the cache
+            # Direct (non-scan) attention: one einsum over the cache length.
+            # Unlike the KV-block scan this partitions cleanly when the cache
+            # seq dim is sharded (perf iteration q-2: the scan's reshape +
+            # moveaxis forced GSPMD to all-gather the whole stacked cache —
+            # 19.3 GB/device/step on qwen3 decode_32k).
+            kc, vc, ks, vs, kp = _cache_read_raw(new_state)
+            out = _decode_attention(q, kc, vc, ks, vs, kp, positions, window)
+            return _attn_out(p, out, cfg, b, s), new_state
+    out = blockwise_attention(
+        jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+        q_pos=None if bidirectional else positions,
+        k_pos=positions, causal=not bidirectional, window=window,
+        block_k=cfg.attn_block,
+    )
+    return _attn_out(p, out, cfg, b, s), new_state
+
+
+def _decode_attention(q, kc, vc, ks, vs, kp, positions, window):
+    """One-token attention over the whole cache, GSPMD-partition-friendly.
+
+    q: [B, 1, H, dh]; kc/vc: [B, S, KV, dh] (int8 or bf16); ks/vs: [B, S, KV]
+    scales or None; kp: [B, S] absolute positions; positions: [B, 1].
+    Every op is elementwise or a contraction over dh / S — a seq- or
+    kv-head-sharded cache partitions into local partials + one tiny
+    all-reduce (softmax max/sum and the [B, H, dh] output).
+    """
+    b, _, h, dh = q.shape
+    kvh = kc.shape[2]
+    g = h // kvh
+    scale = 1.0 / math.sqrt(dh)
+    # convert the int8 cache to the COMPUTE dtype (bf16 at scale), not f32:
+    # the converted operand is the dominant decode HBM traffic (perf
+    # iteration q-3: 2 B instead of 4 B per cached element; accumulation
+    # stays f32 via preferred_element_type)
+    ct = q.dtype
+    qf = q.reshape(b, kvh, g, dh)
+    s = jnp.einsum("bkgd,bskd->bkgs", qf, kc.astype(ct),
+                   preferred_element_type=F32) * scale              # [B,KV,G,S]
+    if ks is not None:
+        s = s * jnp.moveaxis(ks.astype(F32), 1, 2)[:, :, None, :]
+    mask = (kp >= 0) & (kp <= positions)                            # [B, S]
+    if window is not None:
+        mask = mask & (positions - kp < window)
+    mask = mask[:, None, None, :]
+    s = jnp.where(mask, s, NEG)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.where(mask, jnp.exp(s - m), 0.0)
+    l = jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    p = p / l
+    if vs is not None:
+        p = p * jnp.moveaxis(vs.astype(F32), 1, 2)[:, :, None, :]
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(ct), vc.astype(ct),
+                     preferred_element_type=F32)
+    return out.reshape(b, h, 1, dh)
+
+
+def _attn_out(p, out, cfg, b, s):
+    out = jnp.swapaxes(out, 1, 2).reshape(b, s, cfg.n_heads * cfg.d_head)
+    return bitlinear.apply(p["o"], out.astype(cdt(cfg)), cfg.quant)
+
+
+def cross_attn_apply(p, x, cfg: ModelConfig, enc_kv: tuple):
+    """Decoder cross-attention to precomputed encoder (k, v)."""
+    b, s, _ = x.shape
+    q = bitlinear.apply(p["q"], x, cfg.quant).reshape(b, s, cfg.n_heads, cfg.d_head)
+    if cfg.qk_norm:
+        q = rms_norm(p["qn"], q, cfg.norm_eps)
+    k, v = enc_kv
+    out = blockwise_attention(
+        jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+        q_pos=None, k_pos=jnp.arange(k.shape[1]), causal=False, window=None,
+        block_k=cfg.attn_block,
+    )
+    return _attn_out(p, out, cfg, b, s)
+
+
+def cross_kv(p, enc_out: jax.Array, cfg: ModelConfig):
+    b, s, _ = enc_out.shape
+    k = bitlinear.apply(p["k"], enc_out, cfg.quant).reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    v = bitlinear.apply(p["v"], enc_out, cfg.quant).reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    if cfg.qk_norm:
+        k = rms_norm(p["kn"], k, cfg.norm_eps)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# FFN: SwiGLU (dense) and MoE
+# ---------------------------------------------------------------------------
+
+
+def ffn_init(key, cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    ks = jax.random.split(key, 3)
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "gate": bitlinear.init(ks[0], d, f),
+        "up": bitlinear.init(ks[1], d, f),
+        "down": bitlinear.init(ks[2], f, d),
+    }
+
+
+def ffn_apply(p, x, cfg: ModelConfig):
+    g = bitlinear.apply(p["gate"], x, cfg.quant)
+    u = bitlinear.apply(p["up"], x, cfg.quant)
+    return bitlinear.apply(p["down"], (jax.nn.silu(g.astype(F32)) * u.astype(F32)).astype(x.dtype), cfg.quant)
+
+
+def moe_init(key, cfg: ModelConfig) -> dict:
+    kr, ke = jax.random.split(key)
+    # Router stays fp32 (tiny, accuracy-critical — DESIGN.md §4).
+    router = jax.random.normal(kr, (cfg.n_experts, cfg.d_model), F32) * 0.02
+    expert_keys = jax.random.split(ke, cfg.n_experts)
+    experts = jax.vmap(lambda k: ffn_init(k, cfg))(expert_keys)
+    return {"router": router, "experts": experts}
+
+
+def moe_apply(p, x, cfg: ModelConfig):
+    """Token-choice top-k with per-expert capacity (dropped-token semantics).
+
+    Dispatch is a single scatter into [E, C, D] buffers (EP shards E on the
+    model axis → the scatter/gather lower to all-to-alls), expert FFNs run
+    vmapped over stacked BitLinear params.
+    """
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    xf = x.reshape(t, d)
+
+    logits = xf.astype(F32) @ p["router"].T                    # [T, E]
+    gates = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(gates, k)                       # [T, k]
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(math.ceil(t * k / e * cfg.capacity_factor))
+    flat_e = topi.reshape(-1)                                  # [T·k]
+    flat_g = topv.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(t), k)
+
+    # Sort-based dispatch ranks (perf iteration l4-1, EXPERIMENTS §Perf):
+    # the one-hot cumsum costs O(T·k·E) flops and a [T·k, E] int32 buffer
+    # (0.5 GB/device at llama4 train_4k scale); an argsort + searchsorted
+    # computes identical ranks in O(T·k·log(T·k)).
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    first = jnp.searchsorted(sorted_e, jnp.arange(e))          # [E]
+    rank_sorted = jnp.arange(t * k) - first[sorted_e]
+    rank = jnp.zeros((t * k,), jnp.int32).at[order].set(rank_sorted)
+    keep = rank < cap
+    slot = jnp.where(keep, rank, cap)                          # cap → dropped
+
+    buf = jnp.zeros((e, cap + 1, d), x.dtype)
+    buf = buf.at[flat_e, slot].add(xf[flat_t])                 # [E, C+1, D]
+    y_buf = jax.vmap(lambda pe, xe: ffn_apply(pe, xe[None], cfg)[0])(
+        p["experts"], buf[:, :cap]
+    )                                                          # [E, C, D]
+    y_buf = jnp.concatenate([y_buf, jnp.zeros((e, 1, d), y_buf.dtype)], axis=1)
+    y = (y_buf[flat_e, slot].astype(F32) * flat_g[:, None]).reshape(t, k, d).sum(1)
+    return y.reshape(b, s, d).astype(x.dtype)
+
+
+def moe_aux_loss(p, x, cfg: ModelConfig):
+    """Load-balance auxiliary loss (Switch-style): E·Σ f_e·P_e."""
+    logits = x.reshape(-1, cfg.d_model).astype(F32) @ p["router"].T
+    probs = jax.nn.softmax(logits, -1)
+    top1 = jnp.argmax(probs, -1)
+    f = jnp.mean(jax.nn.one_hot(top1, cfg.n_experts, dtype=F32), axis=0)
+    pr = jnp.mean(probs, axis=0)
+    return cfg.n_experts * jnp.sum(f * pr)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block (recurrentgemma / Griffin)
+# ---------------------------------------------------------------------------
+
+
+def rglru_init(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 5)
+    d, dr = cfg.d_model, cfg.d_inner
+    return {
+        "in": bitlinear.init(ks[0], d, dr),
+        "gate": bitlinear.init(ks[1], d, dr),
+        "out": bitlinear.init(ks[2], dr, d),
+        "conv_w": jax.random.normal(ks[3], (cfg.conv_width, dr), F32) * 0.1,
+        # RG-LRU gates: elementwise fp32 (tiny) — DESIGN.md §Arch-applicability
+        "lam": jnp.ones((dr,), F32) * 2.0,       # a = sigmoid(lam) ≈ 0.88
+        "wr": jnp.zeros((dr,), F32), "br": jnp.zeros((dr,), F32),
+        "wi": jnp.zeros((dr,), F32), "bi": jnp.zeros((dr,), F32),
+    }
+
+
+def rglru_state_init(cfg: ModelConfig, batch: int) -> dict:
+    return {
+        "h": jnp.zeros((batch, cfg.d_inner), F32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_inner), F32),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, hist: jax.Array | None):
+    """Depthwise causal conv along time. x: [B, S, C]; w: [cw, C]."""
+    cw = w.shape[0]
+    if hist is None:
+        hist = jnp.zeros((x.shape[0], cw - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([hist, x.astype(F32)], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(cw))
+    new_hist = xp[:, -(cw - 1):] if cw > 1 else hist
+    return y, new_hist
+
+
+def rglru_apply(p, x, cfg: ModelConfig, *, state=None, pos=None):
+    xin = bitlinear.apply(p["in"], x, cfg.quant).astype(F32)     # [B, S, dr]
+    gate = bitlinear.apply(p["gate"], x, cfg.quant).astype(F32)
+    hist = state["conv"] if state is not None else None
+    xc, new_hist = _causal_conv(xin, p["conv_w"], hist)
+
+    r = jax.nn.sigmoid(xc * p["wr"] + p["br"])                   # recurrence gate
+    i = jax.nn.sigmoid(xc * p["wi"] + p["bi"])                   # input gate
+    log_a = 8.0 * r * jax.nn.log_sigmoid(p["lam"])               # a_t = a^(8 r_t)
+    a = jnp.exp(log_a)
+    bterm = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xc)
+
+    if state is not None and x.shape[1] == 1:
+        h = a[:, 0] * state["h"] + bterm[:, 0]
+        if pos is not None:  # paused continuous-batching slots keep their state
+            act = (jnp.broadcast_to(jnp.asarray(pos), (x.shape[0],)) >= 0)
+            h = jnp.where(act[:, None], h, state["h"])
+            new_hist = jnp.where(act[:, None, None], new_hist, state["conv"])
+        y = h[:, None]
+        new_state = {"h": h, "conv": new_hist}
+    else:
+        aa, bb = jax.lax.associative_scan(
+            lambda l, r_: (l[0] * r_[0], l[1] * r_[0] + r_[1]), (a, bterm), axis=1
+        )
+        y = bb
+        new_state = None if state is None else {"h": bb[:, -1], "conv": new_hist}
+    out = y * jax.nn.gelu(gate)
+    return bitlinear.apply(p["out"], out.astype(x.dtype), cfg.quant), new_state
+
+
+# ---------------------------------------------------------------------------
+# SSD block (mamba2)
+# ---------------------------------------------------------------------------
+
+
+def ssd_init(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    d, di, s, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * s
+    return {
+        "in": bitlinear.init(ks[0], d, 2 * di + 2 * s + h),
+        "out": bitlinear.init(ks[1], di, d),
+        "conv_w": jax.random.normal(ks[2], (cfg.conv_width, conv_ch), F32) * 0.1,
+        "A_log": jnp.zeros((h,), F32),          # A = -exp(A_log) = -1
+        "D": jnp.ones((h,), F32),
+        "dt_bias": jnp.zeros((h,), F32),
+        "norm": rms_norm_init(di),
+    }
+
+
+def ssd_state_init(cfg: ModelConfig, batch: int) -> dict:
+    ph = cfg.d_inner // cfg.ssm_heads
+    return {
+        "h": jnp.zeros((batch, cfg.ssm_heads, ph, cfg.ssm_state), F32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_inner + 2 * cfg.ssm_state), F32),
+    }
+
+
+def _ssd_chunked(a_log, xbar, bm, cm, chunk: int):
+    """Pure-jnp SSD (state-space duality), same math as kernels/ssd_scan.
+
+    a_log [B,L,H]; xbar [B,L,H,P]; bm/cm [B,L,S] (single group shared by
+    heads).  lax.scan over chunks carries the [B,H,P,S] state.
+    """
+    b, l, h = a_log.shape
+    p = xbar.shape[-1]
+    s = bm.shape[-1]
+    nc = l // chunk
+    al = a_log.reshape(b, nc, chunk, h)
+    xb = xbar.reshape(b, nc, chunk, h, p)
+    bmc = bm.reshape(b, nc, chunk, s)
+    cmc = cm.reshape(b, nc, chunk, s)
+    la = jnp.cumsum(al, axis=2)                                  # [B,NC,Q,H]
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    scores = jnp.einsum("bnis,bnjs->bnij", cmc, bmc)             # [B,NC,Q,Q]
+    decay = jnp.exp(la[:, :, :, None] - la[:, :, None, :, :])    # [B,NC,Q,Q,H]
+    att = jnp.where(tri[None, None, :, :, None], scores[..., None] * decay, 0.0)
+    y_intra = jnp.einsum("bnijh,bnjhp->bnihp", att, xb)
+
+    # chunk summaries
+    wdec = jnp.exp(la[:, :, -1:, :] - la)                        # [B,NC,Q,H]
+    s_chunk = jnp.einsum("bnjh,bnjs,bnjhp->bnhps", wdec, bmc, xb)
+    a_chunk = jnp.exp(la[:, :, -1])                              # [B,NC,H]
+
+    def step(hc, inp):
+        a_c, s_c = inp                                           # [B,H], [B,H,P,S]
+        out = hc
+        hc = a_c[:, :, None, None] * hc + s_c
+        return hc, out
+
+    h0 = jnp.zeros((b, h, p, s), F32)
+    h_last, h_in = jax.lax.scan(
+        step, h0, (jnp.moveaxis(a_chunk, 1, 0), jnp.moveaxis(s_chunk, 1, 0))
+    )
+    h_in = jnp.moveaxis(h_in, 0, 1)                              # [B,NC,H,P,S]
+    y_inter = jnp.einsum("bnih,bnis,bnhps->bnihp", jnp.exp(la), cmc, h_in)
+    y = (y_intra + y_inter).reshape(b, l, h, p)
+    return y, h_last
+
+
+def ssd_apply(p, x, cfg: ModelConfig, *, state=None, pos=None, chunk: int = 64):
+    b, l, _ = x.shape
+    di, s, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ph = di // h
+    zxbcdt = bitlinear.apply(p["in"], x, cfg.quant).astype(F32)
+    z, xr, bmat, cmat, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + s, 2 * di + 2 * s], axis=-1)
+
+    hist = state["conv"] if state is not None else None
+    xbc, new_hist = _causal_conv(jnp.concatenate([xr, bmat, cmat], -1), p["conv_w"], hist)
+    xbc = jax.nn.silu(xbc)
+    xr, bmat, cmat = jnp.split(xbc, [di, di + s], axis=-1)
+
+    dt = jax.nn.softplus(dt + p["dt_bias"])                      # [B,L,H]
+    a_log = -jnp.exp(p["A_log"]) * dt
+    xh = xr.reshape(b, l, h, ph)
+    xbar = xh * dt[..., None]
+
+    if state is not None and l == 1:
+        hprev = state["h"]
+        hnew = jnp.exp(a_log[:, 0])[:, :, None, None] * hprev + jnp.einsum(
+            "bhp,bs->bhps", xbar[:, 0], bmat[:, 0]
+        )
+        if pos is not None:  # paused continuous-batching slots keep their state
+            act = (jnp.broadcast_to(jnp.asarray(pos), (b,)) >= 0)
+            hnew = jnp.where(act[:, None, None, None], hnew, hprev)
+            new_hist = jnp.where(act[:, None, None], new_hist, state["conv"])
+        y = jnp.einsum("bs,bhps->bhp", cmat[:, 0], hnew)[:, None]
+        new_state = {"h": hnew, "conv": new_hist}
+    else:
+        y, h_last = _ssd_chunked(a_log, xbar, bmat, cmat, min(chunk, l))
+        new_state = None if state is None else {"h": h_last, "conv": new_hist}
+
+    y = y + p["D"][None, None, :, None] * xh                      # skip term
+    y = y.reshape(b, l, di) * jax.nn.silu(z)
+    y = rms_norm(p["norm"], y.astype(cdt(cfg)), cfg.norm_eps)
+    return bitlinear.apply(p["out"], y, cfg.quant), new_state

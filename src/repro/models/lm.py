@@ -1,0 +1,335 @@
+"""Model assembly: pattern-scanned layer stacks, LM / enc-dec heads, decode state.
+
+Entry points (all pure functions over a params pytree):
+  init(key, cfg)                      -> params
+  forward(params, batch, cfg)         -> (logits, aux)   teacher-forced
+  loss_fn(params, batch, cfg)         -> (loss, metrics)
+  init_state(cfg, batch, max_seq)     -> decode caches for every layer
+  prefill(params, batch, cfg, state)  -> (last_logits, state)
+  decode_step(params, tok, pos, cfg, state) -> (logits, state)
+
+Layer stacking uses pattern-scan (DESIGN.md §3): one lax.scan over
+``n_layers // len(pattern)`` repeats of the (possibly heterogeneous) pattern,
+remainder layers unrolled.  This keeps HLO size O(pattern) instead of
+O(n_layers) — the difference between minutes and hours of XLA compile time
+for the 512-chip dry-runs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitlinear
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def block_init(key, cfg: ModelConfig, kind: str) -> dict:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: dict = {"ln1": L.rms_norm_init(d)}
+    if kind in ("attn", "local", "enc", "xattn"):
+        p["attn"] = L.attn_init(ks[0], cfg)
+    if kind == "xattn":
+        p["lnx"] = L.rms_norm_init(d)
+        p["xattn"] = L.attn_init(ks[1], cfg)
+    if kind == "rec":
+        p["mix"] = L.rglru_init(ks[0], cfg)
+    if kind == "ssd":
+        p["mix"] = L.ssd_init(ks[0], cfg)
+    if cfg.d_ff > 0 and kind != "ssd":
+        p["ln2"] = L.rms_norm_init(d)
+        p["ffn"] = L.moe_init(ks[2], cfg) if cfg.ffn_kind == "moe" else L.ffn_init(ks[2], cfg)
+    return p
+
+
+def block_state_init(cfg: ModelConfig, kind: str, batch: int, max_seq: int):
+    if kind in ("attn", "local"):
+        return L.attn_state_init(cfg, kind, batch, max_seq)
+    if kind == "xattn":
+        st = L.attn_state_init(cfg, "attn", batch, max_seq)
+        kvshape = (batch, cfg.enc_seq, cfg.n_kv_heads, cfg.d_head)
+        st["ck"] = jnp.zeros(kvshape, jnp.bfloat16)
+        st["cv"] = jnp.zeros(kvshape, jnp.bfloat16)
+        return st
+    if kind == "enc":
+        return ()
+    if kind == "rec":
+        return L.rglru_state_init(cfg, batch)
+    if kind == "ssd":
+        return L.ssd_state_init(cfg, batch)
+    raise ValueError(kind)
+
+
+def constrain_acts(x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Pin the residual stream's sharding (needs jax.set_mesh at trace time)."""
+    if cfg.act_shard:
+        spec = jax.sharding.PartitionSpec(*cfg.act_shard[: x.ndim])
+        return jax.lax.with_sharding_constraint(x, spec)
+    return x
+
+
+def block_apply(kind, p, x, cfg: ModelConfig, *, state=None, pos=None, enc_out=None):
+    """Returns (x, new_state, aux)."""
+    aux = jnp.zeros((), F32)
+    x = constrain_acts(x, cfg)
+    if kind in ("attn", "local", "enc", "xattn"):
+        # re-constrain after the norm: its f32 internals must not become the
+        # resharding point (measured 1.75 TB/device of f32 gathers otherwise)
+        h = constrain_acts(L.rms_norm(p["ln1"], x, cfg.norm_eps), cfg)
+        a, new_state = L.attn_apply(
+            p["attn"], h, cfg, "local" if kind == "local" else "attn",
+            state=state if kind != "xattn" else _self_cache(state),
+            pos=pos, bidirectional=(kind == "enc"),
+        )
+        x = x + a
+        if kind == "xattn":
+            if state is not None:
+                new_state = dict(state, **(new_state or {}))
+                if enc_out is not None:  # prefill: compute & store cross kv
+                    ck, cv = L.cross_kv(p["xattn"], enc_out, cfg)
+                    new_state["ck"] = ck.astype(jnp.bfloat16)
+                    new_state["cv"] = cv.astype(jnp.bfloat16)
+                ckv = (new_state["ck"].astype(L.cdt(cfg)), new_state["cv"].astype(L.cdt(cfg)))
+            else:
+                ckv = L.cross_kv(p["xattn"], enc_out, cfg)
+            hx = L.rms_norm(p["lnx"], x, cfg.norm_eps)
+            x = x + L.cross_attn_apply(p["xattn"], hx, cfg, ckv)
+    elif kind == "rec":
+        h = constrain_acts(L.rms_norm(p["ln1"], x, cfg.norm_eps), cfg)
+        a, new_state = L.rglru_apply(p["mix"], h, cfg, state=state, pos=pos)
+        x = x + a
+    elif kind == "ssd":
+        h = constrain_acts(L.rms_norm(p["ln1"], x, cfg.norm_eps), cfg)
+        a, new_state = L.ssd_apply(p["mix"], h, cfg, state=state, pos=pos)
+        x = x + a
+    else:
+        raise ValueError(kind)
+
+    if "ffn" in p:
+        h = constrain_acts(L.rms_norm(p["ln2"], x, cfg.norm_eps), cfg)
+        if cfg.ffn_kind == "moe":
+            x = x + L.moe_apply(p["ffn"], h, cfg)
+            aux = aux + L.moe_aux_loss(p["ffn"], h, cfg)
+        else:
+            x = x + L.ffn_apply(p["ffn"], h, cfg)
+    return x, new_state, aux
+
+
+def _self_cache(state):
+    if state is None:
+        return None
+    return {k: v for k, v in state.items() if k in ("k", "v", "ks", "vs", "pos")}
+
+
+# ---------------------------------------------------------------------------
+# Pattern-scanned stack
+# ---------------------------------------------------------------------------
+
+
+def stack_init(key, cfg: ModelConfig, pattern=None, n_layers=None) -> dict:
+    pattern = pattern or cfg.block_pattern
+    n_layers = n_layers or cfg.n_layers
+    reps, rem = n_layers // len(pattern), n_layers % len(pattern)
+    scanned = []
+    for i, kind in enumerate(pattern):
+        keys = jax.random.split(jax.random.fold_in(key, i), max(reps, 1))
+        scanned.append(jax.vmap(lambda k: block_init(k, cfg, kind))(keys) if reps else None)
+    rest = [
+        block_init(jax.random.fold_in(key, 10_000 + i), cfg, pattern[i])
+        for i in range(rem)
+    ]
+    return {"scan": tuple(scanned), "rest": rest}
+
+
+def stack_state_init(cfg: ModelConfig, batch: int, max_seq: int, pattern=None, n_layers=None):
+    pattern = pattern or cfg.block_pattern
+    n_layers = n_layers or cfg.n_layers
+    reps, rem = n_layers // len(pattern), n_layers % len(pattern)
+
+    def stacked(kind):
+        one = block_state_init(cfg, kind, batch, max_seq)
+        return jax.tree_util.tree_map(lambda a: jnp.broadcast_to(a, (reps,) + a.shape), one)
+
+    scan_states = tuple(stacked(k) for k in pattern) if reps else tuple(None for _ in pattern)
+    rest_states = [block_state_init(cfg, pattern[i], batch, max_seq) for i in range(rem)]
+    return {"scan": scan_states, "rest": rest_states}
+
+
+def stack_apply(params, x, cfg: ModelConfig, *, states=None, pos=None,
+                enc_out=None, pattern=None):
+    pattern = pattern or cfg.block_pattern
+    reps = None
+    for s in params["scan"]:
+        if s is not None:
+            reps = jax.tree_util.tree_leaves(s)[0].shape[0]
+    new_scan_states = None
+
+    if reps:
+        if states is None:
+            def body(carry, xs):
+                x, aux = carry
+                for i, kind in enumerate(pattern):
+                    x, _, a = block_apply(kind, xs[i], x, cfg, enc_out=enc_out)
+                    aux = aux + a
+                return (x, aux), None
+
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), F32)), params["scan"])
+        else:
+            def body(carry, xs):
+                x, aux = carry
+                ps, ss = xs
+                new_ss = []
+                for i, kind in enumerate(pattern):
+                    x, ns, a = block_apply(kind, ps[i], x, cfg, state=ss[i],
+                                           pos=pos, enc_out=enc_out)
+                    aux = aux + a
+                    new_ss.append(ns)
+                return (x, aux), tuple(new_ss)
+
+            (x, aux), new_scan_states = jax.lax.scan(
+                body, (x, jnp.zeros((), F32)), (params["scan"], states["scan"])
+            )
+    else:
+        aux = jnp.zeros((), F32)
+
+    new_rest = []
+    for i, p in enumerate(params["rest"]):
+        kind = pattern[i]
+        st = states["rest"][i] if states is not None else None
+        x, ns, a = block_apply(kind, p, x, cfg, state=st, pos=pos, enc_out=enc_out)
+        aux = aux + a
+        new_rest.append(ns)
+
+    new_states = None
+    if states is not None:
+        new_states = {"scan": new_scan_states, "rest": new_rest}
+    return x, new_states, aux
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+
+def init(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 5)
+    params = {
+        "emb": jax.random.normal(ks[0], (cfg.padded_vocab, cfg.d_model), F32) * 0.02,
+        "ln_f": L.rms_norm_init(cfg.d_model),
+        "stack": stack_init(ks[1], cfg),
+    }
+    if cfg.is_encdec():
+        params["enc_stack"] = stack_init(ks[2], cfg, pattern=("enc",), n_layers=cfg.enc_layers)
+        params["enc_ln_f"] = L.rms_norm_init(cfg.d_model)
+        # decoder layers are self+cross
+        params["stack"] = stack_init(ks[1], cfg, pattern=("xattn",), n_layers=cfg.n_layers)
+    return params
+
+
+def _embed(params, tokens, cfg: ModelConfig, frontend_emb=None):
+    # cast the (vocab-sharded) table before the gather: the [B, S, D] result
+    # materializes in compute dtype, not f32
+    x = params["emb"].astype(jnp.dtype(cfg.dtype))[tokens]
+    if frontend_emb is not None:
+        x = jnp.concatenate([frontend_emb.astype(x.dtype), x], axis=1)
+    return x
+
+
+def _head(params, x, cfg: ModelConfig):
+    x = L.rms_norm(params["ln_f"], x, cfg.norm_eps)
+    logits = jax.lax.dot_general(
+        x, params["emb"].astype(x.dtype),
+        (((x.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=F32,
+    )  # tied head; vocab padded to a 256 multiple for sharding
+    if cfg.padded_vocab != cfg.vocab:
+        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab
+        logits = jnp.where(pad_mask, logits, -1e30)
+    if cfg.act_shard:
+        spec = jax.sharding.PartitionSpec(cfg.act_shard[0], None, "model")
+        logits = jax.lax.with_sharding_constraint(logits, spec)
+    return logits
+
+
+def encode(params, enc_emb, cfg: ModelConfig):
+    """Encoder pass (seamless): stub frontend embeddings -> memory."""
+    x = enc_emb.astype(jnp.dtype(cfg.dtype))
+    x, _, _ = stack_apply(params["enc_stack"], x, cfg, pattern=("enc",))
+    return L.rms_norm(params["enc_ln_f"], x, cfg.norm_eps)
+
+
+def forward(params, batch: dict, cfg: ModelConfig):
+    """Teacher-forced forward. batch: tokens [B,S] (+ frontend_emb / enc_emb)."""
+    enc_out = None
+    if cfg.is_encdec():
+        enc_out = encode(params, batch["enc_emb"], cfg)
+        x = _embed(params, batch["tokens"], cfg)
+        x, _, aux = stack_apply(params["stack"], x, cfg, enc_out=enc_out, pattern=("xattn",))
+    else:
+        x = _embed(params, batch["tokens"], cfg, batch.get("frontend_emb"))
+        x, _, aux = stack_apply(params["stack"], x, cfg)
+    return _head(params, x, cfg), aux
+
+
+def loss_fn(params, batch: dict, cfg: ModelConfig):
+    logits, aux = forward(params, batch, cfg)
+    labels = batch["labels"]
+    n_front = logits.shape[1] - labels.shape[1]
+    if n_front:
+        logits = logits[:, n_front:]
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("mask", jnp.ones_like(labels, F32))
+    loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    total = loss + 0.01 * aux
+    return total, {"nll": loss, "moe_aux": aux}
+
+
+def init_state(cfg: ModelConfig, batch: int, max_seq: int):
+    pattern = ("xattn",) if cfg.is_encdec() else None
+    return stack_state_init(cfg, batch, max_seq, pattern=pattern)
+
+
+def prefill(params, batch: dict, cfg: ModelConfig, state):
+    """Fill caches from a prompt; returns (last-position logits, state)."""
+    enc_out = None
+    pattern = None
+    if cfg.is_encdec():
+        enc_out = encode(params, batch["enc_emb"], cfg)
+        pattern = ("xattn",)
+        x = _embed(params, batch["tokens"], cfg)
+    else:
+        x = _embed(params, batch["tokens"], cfg, batch.get("frontend_emb"))
+    x, state, _ = stack_apply(params["stack"], x, cfg, states=state, pos=0,
+                              enc_out=enc_out, pattern=pattern)
+    return _head(params, x[:, -1:], cfg), state
+
+
+def decode_step(params, tok: jax.Array, pos: jax.Array, cfg: ModelConfig, state):
+    """One token [B, 1] at absolute position pos -> (logits [B,1,V], state)."""
+    pattern = ("xattn",) if cfg.is_encdec() else None
+    x = _embed(params, tok, cfg)
+    x, state, _ = stack_apply(params["stack"], x, cfg, states=state, pos=pos,
+                              pattern=pattern)
+    return _head(params, x, cfg), state
+
+
+def pack(params, cfg: ModelConfig):
+    """Quantize+pack every BitLinear for inference (the paper's convert step)."""
+    return bitlinear.pack_tree(params, cfg.quant)
+
+
+def param_count(params) -> int:
+    leaves = jax.tree_util.tree_leaves(params)
+    return sum(l.size for l in leaves if hasattr(l, "size"))

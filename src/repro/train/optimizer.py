@@ -1,0 +1,99 @@
+"""AdamW + schedules, implemented directly over pytrees (no optax dependency).
+
+Optimizer state shards like the parameters (ZeRO-1 falls out of pjit
+out_shardings matching the param shardings).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    grad_clip: float = 1.0
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup → cosine decay to 10%."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0
+    )
+    cos = 0.1 + 0.45 * (1.0 + jnp.cos(math.pi * prog))
+    return cfg.lr * warm * cos
+
+
+def init(params: Any) -> dict:
+    """Adam moments + f32 master copy.  The step function sees bf16 params;
+    the f32 master lives here (FSDP-sharded) — mixed-precision at scale."""
+    zeros = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, F32), params)
+    return {"mu": zeros, "nu": jax.tree_util.tree_map(jnp.zeros_like, zeros),
+            "master": jax.tree_util.tree_map(lambda p: p.astype(F32), params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(F32) ** 2) for l in leaves))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    # keep the leaf dtype: a f32 scalar must not promote bf16 grads (that
+    # would double every gradient buffer at 33B scale)
+    return jax.tree_util.tree_map(lambda x: x * scale.astype(x.dtype), grads), g
+
+
+def _decay_mask(path) -> bool:
+    """No weight decay on norms/biases/scalars (1-D params)."""
+    return True  # resolved per-leaf by ndim below
+
+
+def update(cfg: OptConfig, params: Any, grads: Any, state: dict) -> tuple[Any, dict, dict]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** step.astype(F32)
+    bc2 = 1.0 - b2 ** step.astype(F32)
+
+    def upd(p, g, mu, nu, master):
+        g = g.astype(F32)
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        step_dir = (mu / bc1) / (jnp.sqrt(nu / bc2) + cfg.eps)
+        wd = cfg.weight_decay if p.ndim >= 2 else 0.0
+        new_master = master - lr * (step_dir + wd * master)
+        return new_master.astype(p.dtype), mu, nu, new_master
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    flat_ma = treedef.flatten_up_to(state["master"])
+    out = [upd(p, g, m, n, ma) for p, g, m, n, ma
+           in zip(flat_p, flat_g, flat_mu, flat_nu, flat_ma)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_state = {
+        "mu": jax.tree_util.tree_unflatten(treedef, [o[1] for o in out]),
+        "nu": jax.tree_util.tree_unflatten(treedef, [o[2] for o in out]),
+        "master": jax.tree_util.tree_unflatten(treedef, [o[3] for o in out]),
+        "step": step,
+    }
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,198 @@
+"""Core library tests: packing roundtrips, mpGEMM equivalence, losslessness.
+
+The paper's central claims, as testable invariants:
+  * every packing format is a bijection on ternary matrices (roundtrip);
+  * all formats compute the identical mpGEMM (bit-exact int32 accumulation);
+  * LUT-based lossless (TL*_1) == MAD-based exactly (paper §3.2.1);
+  * the lossy `_0` variants and the Q8_K block scheme deviate boundedly;
+  * the quantized integer forward reproduces the QAT fake-quant forward
+    (the "lossless inference for BitNet b1.58" claim, Figure 2).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bitlinear, mpgemm, packing, quant
+from repro.core.qtensor import FORMAT_BPW, pack_ternary, pack_weight, unpack_weight
+
+FORMATS = ["i2s", "tl1", "tl2", "tl2k", "tq1", "int4"]
+
+
+def random_ternary(rng: np.random.Generator, m: int, k: int) -> jnp.ndarray:
+    return jnp.asarray(rng.integers(-1, 2, size=(m, k)), jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# Packing roundtrips (property-based)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 9),
+    k_units=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+    fmt=st.sampled_from(FORMATS),
+)
+def test_pack_roundtrip_property(m, k_units, seed, fmt):
+    k = 768 * k_units  # satisfies every format's alignment (24 | 768, 4 | 768)
+    rng = np.random.default_rng(seed)
+    w = random_ternary(rng, m, k)
+    pw = pack_ternary(w, jnp.float32(1.0), fmt)
+    rt = unpack_weight(pw)
+    np.testing.assert_array_equal(np.asarray(rt, np.int8), np.asarray(w))
+
+
+def test_bpw_accounting():
+    rng = np.random.default_rng(0)
+    w = random_ternary(rng, 64, 768)
+    for fmt in FORMATS:
+        pw = pack_ternary(w, jnp.float32(1.0), fmt)
+        assert pw.bpw() == pytest.approx(FORMAT_BPW[fmt], rel=0.05), fmt
+
+
+def test_tl2_mirror_consolidation_table():
+    """Paper Table 6: sign+idx encoding covers 0..26 with idx ≤ 13."""
+    w = jnp.array([[a, b, c] for a in (-1, 0, 1) for b in (-1, 0, 1) for c in (-1, 0, 1)], jnp.int8)
+    idx, sign = packing.tl2_encode_groups(w)
+    assert int(idx.max()) <= 13  # fits a nibble: 3^3/2 < 2^4 (paper §3.1.1)
+    # center (0,0,0) is self-mirrored with sign 0
+    center = 13
+    assert int(idx[center, 0]) == 13 and int(sign[center, 0]) == 0
+    # mirror symmetry: w and -w share idx, differ in sign (except center)
+    for i in range(27):
+        j = 26 - i
+        assert int(idx[i, 0]) == int(idx[j, 0])
+        if i != center:
+            assert int(sign[i, 0]) != int(sign[j, 0])
+
+
+def test_tl2_split_k_block_fitting():
+    three_k, two_k = packing.tl2_split_k(1000)
+    assert three_k % 24 == 0 and three_k + two_k == 1000 and two_k % 4 == 0
+    with pytest.raises(ValueError):
+        packing.tl2_split_k(1001)  # K must be 4-aligned
+
+
+# ---------------------------------------------------------------------------
+# mpGEMM equivalence across formats (bit-exact)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 5))
+def test_mpgemm_formats_bit_identical(seed, n):
+    rng = np.random.default_rng(seed)
+    k, m = 768, 32
+    w = random_ternary(rng, m, k)
+    x_q = jnp.asarray(rng.integers(-127, 128, size=(n, k)), jnp.int8)
+    ys = {}
+    for fmt in FORMATS:
+        pw = pack_ternary(w, jnp.float32(1.0), fmt)
+        ys[fmt] = np.asarray(mpgemm.mpgemm_xla(x_q, jnp.float32(1.0), pw))
+    base = ys["i2s"]
+    for fmt, y in ys.items():
+        np.testing.assert_array_equal(y, base, err_msg=fmt)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_lut_lossless_equals_mad(seed):
+    """TL1_1 / TL2_1 (pack-and-unpack) are bit-identical to the MAD path."""
+    rng = np.random.default_rng(seed)
+    k, m, n = 768, 24, 3
+    w = random_ternary(rng, m, k)
+    x_q = jnp.asarray(rng.integers(-127, 128, size=(n, k)), jnp.int8)
+    ref = np.asarray(mpgemm.mpgemm_xla(x_q, jnp.float32(1.0), pack_ternary(w, jnp.float32(1.0), "i2s")))
+    y1 = np.asarray(mpgemm.tl1_lut(x_q, 1.0, pack_ternary(w, jnp.float32(1.0), "tl1"), lossless=True))
+    y2 = np.asarray(mpgemm.tl2_lut(x_q, 1.0, pack_ternary(w, jnp.float32(1.0), "tl2"), lossless=True))
+    np.testing.assert_array_equal(y1, ref)
+    np.testing.assert_array_equal(y2, ref)
+
+
+def test_lut_lossy_bounded():
+    """TL*_0 (int8-requantized LUT) deviate, but boundedly (paper Table 2)."""
+    rng = np.random.default_rng(3)
+    k, m, n = 1536, 64, 4
+    w = random_ternary(rng, m, k)
+    x_q = jnp.asarray(rng.integers(-127, 128, size=(n, k)), jnp.int8)
+    ref = np.asarray(mpgemm.mpgemm_xla(x_q, jnp.float32(1.0), pack_ternary(w, jnp.float32(1.0), "i2s")))
+    for fmt, fn in (("tl1", mpgemm.tl1_lut), ("tl2", mpgemm.tl2_lut)):
+        y0 = np.asarray(fn(x_q, 1.0, pack_ternary(w, jnp.float32(1.0), fmt), lossless=False))
+        rel = np.abs(y0 - ref).max() / np.abs(ref).max()
+        assert 0 < rel < 0.05, (fmt, rel)  # lossy but small
+
+
+# ---------------------------------------------------------------------------
+# Quantization scheme properties
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_ternary_quant_range_and_scale(seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(16, 64)), jnp.float32)
+    w_t, s = quant.ternary_quant(w)
+    assert set(np.unique(np.asarray(w_t))) <= {-1, 0, 1}
+    assert float(s) == pytest.approx(float(jnp.mean(jnp.abs(w))), rel=1e-6)
+
+
+def test_act_quant_per_tensor_vs_block_differ():
+    """Q8_K-style block quant ≠ per-tensor quant — the paper's lossless gap."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(4, 512)) * np.linspace(0.1, 10, 512), jnp.float32)
+    q_t, _ = quant.absmax_int8(x)
+    q_b, _ = quant.q8_block(x, 256)
+    assert np.abs(np.asarray(q_t, np.int32) - np.asarray(q_b, np.int32)).max() > 0
+
+
+def test_ste_gradients_flow():
+    w = jnp.ones((8, 8)) * 0.3
+    g = jax.grad(lambda w: jnp.sum(quant.ternary_fake_quant(w) ** 2))(w)
+    assert np.all(np.isfinite(np.asarray(g))) and float(jnp.abs(g).max()) > 0
+
+
+# ---------------------------------------------------------------------------
+# Lossless inference for BitNet b1.58 (Figure 2): QAT forward == integer path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fmt", ["i2s", "tl1", "tl2", "tl2k", "int4"])
+def test_bitlinear_quant_matches_qat(fmt):
+    key = jax.random.PRNGKey(0)
+    p = bitlinear.init(key, 768, 128)
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, 768))
+    y_qat = bitlinear.apply(p, x, bitlinear.QuantConfig(mode="qat"))
+    cfg = bitlinear.QuantConfig(mode="quant", fmt=fmt)
+    y_q = bitlinear.apply(bitlinear.pack_tree(p, cfg), x, cfg)
+    # identical up to fp32 reassociation of the final (tiny) rescale
+    np.testing.assert_allclose(np.asarray(y_q), np.asarray(y_qat), atol=2e-5, rtol=1e-5)
+
+
+def test_bitlinear_block_act_is_lossy():
+    """Per-block activations (TQ semantics) break QAT alignment (paper §2.3)."""
+    key = jax.random.PRNGKey(0)
+    p = bitlinear.init(key, 512, 64)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 512)) * jnp.linspace(0.01, 5.0, 512)
+    y_qat = bitlinear.apply(p, x, bitlinear.QuantConfig(mode="qat"))
+    cfg = bitlinear.QuantConfig(mode="quant", fmt="i2s", act="block")
+    y_b = bitlinear.apply(bitlinear.pack_tree(p, cfg), x, cfg)
+    assert float(jnp.abs(y_b - y_qat).max()) > 1e-4  # measurably not lossless
+
+
+def test_pack_tree_generic():
+    key = jax.random.PRNGKey(0)
+    params = {
+        "attn": {"qkv": bitlinear.init(key, 256, 768), "o": bitlinear.init(key, 256, 256)},
+        "norm": jnp.ones((256,)),
+    }
+    cfg = bitlinear.QuantConfig(fmt="i2s")
+    packed = bitlinear.pack_tree(params, cfg)
+    assert packed["attn"]["qkv"].w.fmt == "i2s"
+    assert isinstance(packed["norm"], jax.Array)
+    assert bitlinear.packed_bits(packed) == 2 * (256 * 768 + 256 * 256)

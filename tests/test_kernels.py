@@ -1,0 +1,119 @@
+"""Per-kernel validation: interpret-mode Pallas vs pure-jnp/numpy oracles.
+
+Every kernel is swept over shapes (including non-tile-aligned N, block-fitting
+K splits) and checked allclose/bit-exact against ``repro.kernels.ref``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import quant
+from repro.core.qtensor import pack_ternary
+from repro.kernels import ops, ref
+
+INTERPRET = True  # CPU container: kernel bodies execute in Python
+
+
+def _data(seed, n, k, m):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.integers(-1, 2, size=(m, k)), jnp.int8)
+    x_q = jnp.asarray(rng.integers(-127, 128, size=(n, k)), jnp.int8)
+    return x_q, w
+
+
+MATMUL_SWEEP = [
+    # (n, k, m) — aligned, row-padded, multi-k-tile, tl1-tail split
+    (8, 768, 128),
+    (3, 768, 256),      # n padded to tile
+    (130, 1536, 128),   # n > one tile and padded
+    (16, 2304, 384),    # 3 k-tiles (tl2), m not 128-multiple
+    (5, 1600, 128),     # tl2 block-fitting: three_k=1536, tl1 tail=64
+]
+
+
+@pytest.mark.parametrize("fmt", ["i2s", "tl1", "tl2k"])
+@pytest.mark.parametrize("n,k,m", MATMUL_SWEEP)
+def test_mpgemm_kernels_vs_oracle(fmt, n, k, m):
+    x_q, w = _data(42 + n + k + m, n, k, m)
+    y_ref = np.asarray(ref.mpgemm_int32(x_q, w))
+    pw = pack_ternary(w, jnp.float32(0.5), fmt)
+    y = ops.mpgemm_pallas(x_q, jnp.float32(2.0), pw, interpret=INTERPRET)
+    # scales 0.5 * 2.0 = 1.0 → result equals raw int32 accumulation exactly
+    np.testing.assert_array_equal(np.asarray(y, np.int64), y_ref.astype(np.int64))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), fmt=st.sampled_from(["i2s", "tl1", "tl2k"]))
+def test_mpgemm_kernels_property(seed, fmt):
+    x_q, w = _data(seed, 4, 768, 128)
+    pw = pack_ternary(w, jnp.float32(1.0), fmt)
+    y = ops.mpgemm_pallas(x_q, jnp.float32(1.0), pw, interpret=INTERPRET)
+    np.testing.assert_array_equal(
+        np.asarray(y, np.int64), np.asarray(ref.mpgemm_int32(x_q, w), np.int64)
+    )
+
+
+def test_mpgemm_kernel_vs_naive_loop():
+    """Tiny shape against the fully independent numpy triple loop."""
+    x_q, w = _data(7, 2, 768, 8)
+    pw = pack_ternary(w, jnp.float32(1.0), "i2s")
+    y = ops.mpgemm_pallas(x_q, jnp.float32(1.0), pw, interpret=INTERPRET)
+    np.testing.assert_array_equal(
+        np.asarray(y, np.int64),
+        ref.ternary_matmul_naive(np.asarray(x_q), np.asarray(w)).astype(np.int64),
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(8, 512), (3, 1024), (260, 512)])
+def test_act_quant_kernel(shape, dtype):
+    x = (jax.random.normal(jax.random.PRNGKey(0), shape) * 3).astype(dtype)
+    q_k, s_k = ops.act_quant(x, interpret=INTERPRET)
+    q_r, s_r = ref.absmax_int8(x)
+    np.testing.assert_array_equal(np.asarray(q_k), np.asarray(q_r))
+    assert float(s_k) == pytest.approx(float(s_r), rel=1e-6)
+
+
+@pytest.mark.parametrize("lossless", [True, False])
+@pytest.mark.parametrize("k,m", [(512, 128), (1024, 256), (512, 64)])
+def test_lut_gemv_kernel(k, m, lossless):
+    rng = np.random.default_rng(k + m)
+    w = jnp.asarray(rng.integers(-1, 2, size=(m, k)), jnp.int8)
+    x_q = jnp.asarray(rng.integers(-127, 128, size=(k,)), jnp.int8)
+    pw = pack_ternary(w, jnp.float32(1.0), "tl1")
+    y = ops.lut_gemv(x_q, jnp.float32(1.0), pw, lossless=lossless, interpret=INTERPRET)
+    y_ref = np.asarray(ref.mpgemm_int32(x_q[None], w))[0]
+    if lossless:
+        np.testing.assert_array_equal(np.asarray(y, np.int64), y_ref.astype(np.int64))
+    else:
+        rel = np.abs(np.asarray(y) - y_ref).max() / max(np.abs(y_ref).max(), 1)
+        assert rel < 0.05
+
+
+def test_lut_gemv_matches_algorithm3_literal():
+    rng = np.random.default_rng(11)
+    w = jnp.asarray(rng.integers(-1, 2, size=(16, 256)), jnp.int8)
+    x_q = jnp.asarray(rng.integers(-127, 128, size=(256,)), jnp.int8)
+    pw = pack_ternary(w, jnp.float32(1.0), "tl1")
+    y = ops.lut_gemv(x_q, jnp.float32(1.0), pw, lossless=True, interpret=INTERPRET)
+    np.testing.assert_array_equal(
+        np.asarray(y, np.int64),
+        ref.lut_gemv_naive(np.asarray(x_q), np.asarray(w)).astype(np.int64),
+    )
+
+
+@pytest.mark.parametrize("chunk", [32, 64])
+@pytest.mark.parametrize("bh,L,p,s", [(2, 128, 16, 8), (4, 256, 32, 16)])
+def test_ssd_scan_kernel(bh, L, p, s, chunk):
+    keys = jax.random.split(jax.random.PRNGKey(bh * L), 4)
+    a_log = -jnp.abs(jax.random.normal(keys[0], (bh, L))) * 0.1
+    xbar = jax.random.normal(keys[1], (bh, L, p))
+    b = jax.random.normal(keys[2], (bh, L, s)) * 0.3
+    c = jax.random.normal(keys[3], (bh, L, s)) * 0.3
+    y_k = ops.ssd_scan(a_log, xbar, b, c, chunk=chunk, interpret=INTERPRET)
+    y_r = ref.ssd_sequential(a_log, xbar, b, c)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), rtol=3e-4, atol=3e-4)

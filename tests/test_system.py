@@ -1,0 +1,115 @@
+"""End-to-end system behaviour: the paper's claims as executable assertions.
+
+  1. QAT training converges on the synthetic pipeline (substrate works).
+  2. LOSSLESS INFERENCE (paper Figure 2 / Table 2): packing the QAT model to
+     i2s / tl1_1 / tl2_1 and serving reproduces the QAT forward's logits;
+     the lossy variants (TL*_0, Q8_K block activations) measurably deviate.
+  3. Quantized greedy generations are identical across all lossless formats.
+  4. Checkpoint -> restart training continues bit-exactly.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.bitlinear import QuantConfig
+from repro.data.pipeline import DataConfig, DataIterator
+from repro.infer.engine import generate
+from repro.models import lm
+from repro.train import loop as train_loop
+
+
+@pytest.fixture(scope="module")
+def trained():
+    cfg = configs.smoke("qwen1.5-0.5b").replace(dtype="float32")
+    tcfg = train_loop.TrainConfig(
+        opt=train_loop.opt.OptConfig(lr=3e-3, warmup_steps=5, total_steps=60))
+    dc = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8)
+    state, hist = train_loop.train(cfg, tcfg, DataIterator(dc), n_steps=30)
+    return cfg, tcfg, state, hist, dc
+
+
+def test_training_converges(trained):
+    _, _, _, hist, _ = trained
+    assert hist[-1]["loss"] < hist[0]["loss"] - 1.0
+
+
+def _logits(cfg, params, toks):
+    out, _ = lm.forward(params, {"tokens": toks, "labels": toks}, cfg)
+    return np.asarray(out)
+
+
+def test_lossless_inference_formats(trained):
+    """The paper's Table 2, as a bit-level claim on our trained model."""
+    cfg, _, state, _, dc = trained
+    toks = next(DataIterator(dc))["tokens"][:2]
+    qat = _logits(cfg, state["params"], toks)  # the QAT training forward
+
+    # lossless: integer mpGEMM with per-tensor act quant reproduces QAT
+    for fmt in ("i2s", "tl1", "tl2", "tl2k", "int4"):
+        qcfg = QuantConfig(mode="quant", fmt=fmt)
+        packed = lm.pack(state["params"], cfg.replace(quant=qcfg))
+        got = _logits(cfg.replace(quant=qcfg), packed, toks)
+        np.testing.assert_allclose(got, qat, atol=5e-4, rtol=1e-4)
+
+    # lossless LUT variants (pack-and-unpack): TL1_1 / TL2_1
+    for fmt in ("tl1", "tl2"):
+        qcfg = QuantConfig(mode="quant", fmt=fmt, lut="lossless")
+        packed = lm.pack(state["params"], cfg.replace(quant=qcfg))
+        got = _logits(cfg.replace(quant=qcfg), packed, toks)
+        np.testing.assert_allclose(got, qat, atol=5e-4, rtol=1e-4)
+
+
+def test_lossy_variants_deviate_boundedly(trained):
+    cfg, _, state, _, dc = trained
+    toks = next(DataIterator(dc))["tokens"][:2]
+    qat = _logits(cfg, state["params"], toks)
+    scale = np.abs(qat).max()
+
+    # TL*_0: int8-requantized LUT (T-MAC style)
+    qcfg = QuantConfig(mode="quant", fmt="tl2", lut="lossy")
+    got = _logits(cfg.replace(quant=qcfg), lm.pack(state["params"], cfg.replace(quant=qcfg)), toks)
+    rel0 = np.abs(got - qat).max() / scale
+    assert 0 < rel0 < 0.1
+
+    # Q8_K-style per-block activations (llama.cpp TQ semantics)
+    qcfg = QuantConfig(mode="quant", fmt="i2s", act="block", act_block=48)
+    got = _logits(cfg.replace(quant=qcfg), lm.pack(state["params"], cfg.replace(quant=qcfg)), toks)
+    relb = np.abs(got - qat).max() / scale
+    assert relb > 1e-6  # measurably NOT lossless (the paper's TQ critique)
+
+
+def test_greedy_generation_identical_across_lossless_formats(trained):
+    cfg, _, state, _, _ = trained
+    outs = {}
+    for fmt in ("i2s", "tl1", "tl2k"):
+        qcfg = QuantConfig(mode="quant", fmt=fmt)
+        c = cfg.replace(quant=qcfg)
+        outs[fmt] = generate(lm.pack(state["params"], c), c, [[5, 6, 7, 8]],
+                             max_new_tokens=8, max_seq=48)
+    assert outs["i2s"] == outs["tl1"] == outs["tl2k"]
+
+
+def test_checkpoint_restart_bit_exact(tmp_path, trained):
+    cfg, tcfg, _, _, dc = trained
+    from repro.ckpt import store
+
+    it = DataIterator(dc)
+    state = train_loop.init_train_state(jax.random.PRNGKey(1), cfg, tcfg)
+    step = jax.jit(train_loop.make_train_step(cfg, tcfg))
+    for _ in range(3):
+        state, _ = step(state, next(it))
+    store.save(state, str(tmp_path), 3, extra={"data_step": it.state.step})
+
+    # run 2 more, then restart from the checkpoint and replay the same 2
+    for _ in range(2):
+        state, m = step(state, next(it))
+    ref = float(m["loss"])
+
+    restored, extra = store.restore(state, str(tmp_path), 3)
+    it2 = DataIterator.restore(dc, {"step": extra["data_step"]})
+    for _ in range(2):
+        restored, m2 = step(restored, next(it2))
+    assert float(m2["loss"]) == pytest.approx(ref, rel=1e-6)
