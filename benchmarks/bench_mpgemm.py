@@ -1,37 +1,43 @@
-"""Paper Table 7 / Figure 7 analogue: mpGEMM throughput ladder by format.
+"""Paper Table 7 / Figure 7 analogue: mpGEMM regime sweep through the registry.
 
-The paper's headline is tokens/s vs bits-per-weight on CPUs.  On this
-container we (a) measure the XLA mpGEMM wall time per format at decode
-GEMV shapes, and (b) derive the TPU v5e roofline projection: decode is
-HBM-bound, so projected tokens/s = HBM_bw / bytes_per_token(format) — the
-exact mechanism behind the paper's Figure 7 ordering (b1.67 TL2 > b2 I2_S ≈
-TQ2 > b4 Q4 > b16 fp16).
+For each (format × layer shape × regime N) cell we ask the dispatch registry
+for its capable lossless kernels, measure each (XLA kernels everywhere;
+Pallas kernels only on a real TPU — off-TPU they run in interpret mode,
+which benchmarks Python, not the kernel), and record:
+
+  * the registry's *selected* kernel (plan override → autotune → heuristic),
+  * the measured winner among benchable candidates,
+  * the TPU v5e roofline projection (decode is HBM-bound, so projected
+    tokens/s = HBM_bw / bytes_per_token — the mechanism behind the paper's
+    Figure 7 ordering b1.67 TL2 > b2 I2_S ≈ TQ2 > b4 Q4 > b16 fp16),
+  * a measured tokens/s-equivalent (calls/s scaled to the model's active
+    parameter count) so later PRs have a perf trajectory.
+
+Emits ``BENCH_mpgemm.json`` next to the CWD in addition to the CSV rows.
 """
 
 from __future__ import annotations
 
-import time
+import json
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import mpgemm, quant
-from repro.core.qtensor import FORMAT_BPW, pack_ternary
-from repro.launch.roofline import HBM_BW, model_numbers
 from repro import configs
+from repro.core import dispatch, quant
+from repro.core.dispatch import _time_call as _time
+from repro.core.qtensor import FORMAT_BPW, PackedWeight, pack_ternary
+from repro.launch.roofline import HBM_BW, model_numbers
 
-FORMATS = ["fp", "int4", "i2s", "tl1", "tl2", "tq1"]
-SHAPES = [(3072, 8192), (4096, 11008)]  # (K, M): 3.8B / 7B FFN-ish layers
-
-
-def _time(fn, *args, reps=5) -> float:
-    fn(*args).block_until_ready()
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn(*args)
-    out.block_until_ready()
-    return (time.perf_counter() - t0) / reps * 1e6  # µs
+FORMATS = ["fp", "int4", "i2s", "tl1", "tl2", "tl2k", "tq1"]
+# (K, M) layer shapes: paper-scale FFN layers on TPU, a same-structure
+# reduced sweep on hosts (the XLA LUT one-hot at batched N is CPU-hostile).
+SHAPES_TPU = [(3072, 8192), (4096, 11008)]  # 3.8B / 7B FFN-ish layers
+SHAPES_HOST = [(768, 2048), (1536, 4096)]
+BATCHES = [1, 16, 128]                  # flattened N: decode GEMV → prefill GEMM
+ARTIFACT = "BENCH_mpgemm.json"
+PROJ_ARCH = "bitnet-b1.58-3.8b"
 
 
 def projected_tokens_per_s(arch: str, fmt: str) -> float:
@@ -43,25 +49,67 @@ def projected_tokens_per_s(arch: str, fmt: str) -> float:
     return HBM_BW / weight_bytes
 
 
+def _benchable(spec, hw: str) -> bool:
+    # Off-TPU the Pallas kernels execute in interpret mode: correctness
+    # vehicles, meaningless (and extremely slow) as timings at these shapes.
+    return spec.backend != "pallas" or hw == "tpu"
+
+
 def run() -> list:
     rows = []
+    cells = []
     rng = np.random.default_rng(0)
-    for k, m in SHAPES:
+    hw = jax.default_backend()
+    shapes = SHAPES_TPU if hw == "tpu" else SHAPES_HOST
+    n_active = model_numbers(configs.get(PROJ_ARCH))["n_active"]
+    for k, m in shapes:
         w = jnp.asarray(rng.integers(-1, 2, size=(m, k)), jnp.int8)
-        x = jnp.asarray(rng.normal(size=(1, k)), jnp.float32)
-        x_q, sx = quant.absmax_int8(x)
-        for fmt in FORMATS:
-            if fmt == "fp":
-                pw = pack_ternary(w, jnp.float32(1.0), "int4")
-                pwf = jax.jit(lambda xq, s: mpgemm.mpgemm_xla(
-                    xq.astype(jnp.float32), s,
-                    type(pw)({"w": w.astype(jnp.bfloat16)}, jnp.float32(1.0), "fp", (m, k))))
-                us = _time(pwf, x_q, sx)
-            else:
-                pw = pack_ternary(w, jnp.float32(1.0), fmt)
-                f = jax.jit(lambda xq, s, pw=pw: mpgemm.mpgemm_xla(xq, s, pw))
-                us = _time(f, x_q, sx)
-            proj = projected_tokens_per_s("bitnet-b1.58-3.8b", fmt)
-            rows.append((f"mpgemm_gemv_{fmt}_K{k}_M{m}", us,
-                         f"b{FORMAT_BPW[fmt]:.2f}bpw_proj{proj:.0f}tok/s"))
+        for n in BATCHES:
+            x = jnp.asarray(rng.normal(size=(n, k)), jnp.float32)
+            x_q, sx = quant.absmax_int8(x)
+            regime = "gemv" if n == 1 else "gemm"
+            for fmt in FORMATS:
+                if fmt == "fp":
+                    pw = PackedWeight({"w": w.astype(jnp.bfloat16)},
+                                      jnp.float32(1.0), "fp", (m, k))
+                else:
+                    pw = pack_ternary(w, jnp.float32(1.0), fmt)
+                selected = dispatch.explain(fmt, n, k, m)
+                cands = dispatch.candidates(fmt, regime, n, k, m)
+                timings = {}
+                for spec in cands:
+                    if not _benchable(spec, hw):
+                        continue
+                    fn = jax.jit(lambda xq, s, spec=spec: spec.fn(xq, s, pw, None))
+                    timings[spec.name] = _time(fn, x_q, sx)
+                winner = min(timings, key=timings.get) if timings else None
+                us = timings.get(winner, float("nan")) if winner else float("nan")
+                # tokens/s-equivalent: this layer scaled to the whole model's
+                # active params (how many such GEMM-bytes one token costs).
+                tok_s = (1e6 / us) * (k * m / n_active) * n if timings else None
+                proj = projected_tokens_per_s(PROJ_ARCH, fmt)
+                cells.append({
+                    "fmt": fmt, "K": k, "M": m, "N": n, "regime": regime,
+                    "selected": selected["kernel"],
+                    "selected_source": selected["source"],
+                    "measured_us": {kk: round(v, 2) for kk, v in timings.items()},
+                    "measured_winner": winner,
+                    "tokens_per_s_equiv": round(tok_s, 2) if tok_s else None,
+                    "projected_tokens_per_s_v5e": round(proj, 1),
+                })
+                rows.append((
+                    f"mpgemm_{regime}_{fmt}_N{n}_K{k}_M{m}", us,
+                    f"sel={selected['kernel']}_win={winner}"
+                    f"_b{FORMAT_BPW[fmt]:.2f}bpw_proj{proj:.0f}tok/s"))
+    blob = {
+        "backend": hw,
+        "shapes": shapes,
+        "batches": BATCHES,
+        "proj_arch": PROJ_ARCH,
+        "registry": sorted(dispatch.REGISTRY),
+        "cells": cells,
+    }
+    with open(ARTIFACT, "w") as f:
+        json.dump(blob, f, indent=1)
+    rows.append((f"artifact_{ARTIFACT}", 0.0, f"{len(cells)}cells"))
     return rows

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.core import dispatch
 from repro.core.bitlinear import QuantConfig
 from repro.data.pipeline import DataConfig, DataIterator
 from repro.models import lm
@@ -25,10 +26,12 @@ from repro.train import loop as train_loop
 VARIANTS = [
     ("float16_qat", None),  # the QAT forward itself (paper's Float16 row)
     ("i2s", QuantConfig(mode="quant", fmt="i2s")),
-    ("tl1_1", QuantConfig(mode="quant", fmt="tl1", lut="lossless")),
-    ("tl2_1", QuantConfig(mode="quant", fmt="tl2", lut="lossless")),
-    ("tl1_0", QuantConfig(mode="quant", fmt="tl1", lut="lossy")),
-    ("tl2_0", QuantConfig(mode="quant", fmt="tl2", lut="lossy")),
+    ("tl1_1", QuantConfig(mode="quant", fmt="tl1", plan=dispatch.lut_plan("tl1"))),
+    ("tl2_1", QuantConfig(mode="quant", fmt="tl2", plan=dispatch.lut_plan("tl2"))),
+    ("tl1_0", QuantConfig(mode="quant", fmt="tl1",
+                          plan=dispatch.lut_plan("tl1", lossless=False))),
+    ("tl2_0", QuantConfig(mode="quant", fmt="tl2",
+                          plan=dispatch.lut_plan("tl2", lossless=False))),
     ("q8_block(TQ-like)", QuantConfig(mode="quant", fmt="i2s", act="block", act_block=48)),
 ]
 

@@ -11,7 +11,9 @@ import jax
 import numpy as np
 
 from repro import configs
+from repro.core import dispatch
 from repro.core.bitlinear import QuantConfig
+from repro.core.dispatch import KernelPlan
 from repro.infer.engine import Engine, Request
 from repro.models import lm
 
@@ -23,13 +25,21 @@ def main():
     prompts = [rng.integers(0, base.vocab, size=rng.integers(3, 9)).tolist()
                for _ in range(6)]
 
+    # (fmt, KernelPlan): auto lets the registry pick per regime; the tl1
+    # entries pin the paper's LUT computation model (TL1_1 / TL1_0).
+    variants = (
+        ("fp", KernelPlan()),
+        ("i2s", KernelPlan()),
+        ("tl2k", KernelPlan()),
+        ("tl1_lossless", dispatch.lut_plan("tl1", lossless=True)),
+        ("tl1_lossy", dispatch.lut_plan("tl1", lossless=False)),
+    )
     results = {}
-    for fmt, lut in (("fp", None), ("i2s", None), ("tl2k", None),
-                     ("tl1", "lossless"), ("tl1", "lossy")):
-        name = fmt + (f"_{lut}" if lut else "")
+    for name, plan in variants:
+        fmt = name.split("_")[0]
         cfg = base.replace(quant=QuantConfig(
-            mode="quant" if fmt != "fp" else "fp", fmt=fmt if fmt != "fp" else "i2s",
-            lut=lut))
+            mode="quant" if fmt != "fp" else "fp",
+            fmt=fmt if fmt != "fp" else "i2s", plan=plan))
         eng = Engine(params, cfg, batch_slots=3, max_seq=96,
                      pack=(fmt != "fp"))
         for i, p in enumerate(prompts):

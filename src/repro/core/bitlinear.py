@@ -25,18 +25,28 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core import mpgemm, quant
+from repro.core import dispatch, mpgemm, quant
+from repro.core.dispatch import KernelPlan
 from repro.core.qtensor import PackedWeight, pack_weight
 
 
 @dataclasses.dataclass(frozen=True)
 class QuantConfig:
-    """How BitLinears behave; threaded through model configs."""
+    """How BitLinears behave; threaded through model configs.
+
+    Kernel selection is carried by ``plan`` (a hashable
+    :class:`repro.core.dispatch.KernelPlan`); the default auto-plan picks
+    per regime (decode GEMV vs batched GEMM) via the registry.  ``impl`` /
+    ``lut`` are the deprecated string flags — when either is set the legacy
+    shim in ``repro.core.mpgemm.mpgemm`` reproduces the historical routing
+    exactly, so old configs keep loading.
+    """
 
     mode: str = "quant"        # fp | qat | quant
     fmt: str = "i2s"           # weight packing format for quantized inference
-    impl: str = "xla"          # xla | pallas
-    lut: str | None = None     # None (MAD/MXU) | "lossless" (TL*_1) | "lossy" (TL*_0)
+    plan: KernelPlan = KernelPlan()  # shape-aware dispatch policy
+    impl: str | None = None    # DEPRECATED: xla | pallas (use plan)
+    lut: str | None = None     # DEPRECATED: "lossless" | "lossy" (use plan)
     act: str = "tensor"        # tensor | token | block   (activation quant)
     act_block: int = 256
     # FSDP: constrain the weight *slice* inside the layer scan to TP-only so
@@ -111,7 +121,10 @@ def _apply_quantized(pw: PackedWeight, x: jax.Array, cfg: QuantConfig) -> jax.Ar
         x_q, s_x = quant.absmax_int8_per_token(x)
     else:  # "tensor" — the lossless b1.58 scheme
         x_q, s_x = quant.absmax_int8(x)
-    return mpgemm.mpgemm(x_q, s_x, pw, impl=cfg.impl, lut=cfg.lut)
+    if cfg.impl is not None or cfg.lut is not None:
+        # deprecation shim: legacy string flags keep their historical routing
+        return mpgemm.mpgemm(x_q, s_x, pw, impl=cfg.impl or "xla", lut=cfg.lut)
+    return dispatch.mpgemm(x_q, s_x, pw, cfg.plan)
 
 
 def is_bitlinear(x: Any) -> bool:

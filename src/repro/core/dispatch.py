@@ -1,0 +1,504 @@
+"""Kernel registry + shape-aware mpGEMM dispatch (DESIGN.md §5).
+
+The paper's central performance claim rests on picking the right kernel per
+*regime*: the element-wise-LUT kernels win the memory-bound batch-1 decode
+GEMV (the MXU idles, HBM bytes are everything), while MAD-style decode wins
+once the contraction is compute-bound (prefill / batched decode).  This
+module is the single seam where that selection lives:
+
+  * every kernel registers a :class:`KernelSpec` — ``(fmt, regime, backend)``
+    capabilities plus cost hints (HBM bits/weight, MXU inflation);
+  * :func:`mpgemm` is the one dispatch entry point: it derives the regime
+    from the flattened batch N at trace time (shapes are static under jit),
+    consults the plan override → autotune cache → heuristic, records the
+    decision, and calls the winner;
+  * :class:`KernelPlan` is the hashable per-config override object threaded
+    through ``QuantConfig`` → models → engine → serve;
+  * :class:`AutotuneCache` persists measured winners as JSON keyed by
+    ``(backend, fmt, M, K, N-bucket)``.
+
+Legacy ``impl=``/``lut=`` string flags are translated by the deprecation
+shim in :func:`repro.core.mpgemm.mpgemm`; no other call site should use
+them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mpgemm as _mp
+from repro.core.qtensor import FORMAT_BPW, PackedWeight
+
+REGIMES = ("gemv", "gemm")
+
+# v5e-ish roofline constants for the cost hints (absolute values only matter
+# relatively; autotune measures reality).
+_HBM_BYTES_PER_US = 819e3       # 819 GB/s
+_MXU_OPS_PER_US = 394e6         # 394 int8 TOPS
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """One registered mpGEMM implementation.
+
+    fn(x_q [..., K], s_x, pw, interpret) -> fp32 [..., M].  ``hbm_bpw`` is
+    the per-weight HBM traffic in bits (None → the format's packed bpw, i.e.
+    a fused in-VMEM decode); ``mxu_inflation`` is MXU work relative to the
+    plain int8 MAD dot (the LUT one-hot contraction costs ~C²/g ≈ 4.5×).
+    """
+
+    name: str
+    fn: Callable
+    backend: str                  # "xla" | "pallas"
+    fmts: tuple                   # PackedWeight formats this kernel accepts
+    regimes: tuple = REGIMES      # ("gemv",) | ("gemm",) | both
+    lossless: bool = True         # bit-exact vs the b1.58 scheme
+    hbm_bpw: float | None = None  # None → FORMAT_BPW[fmt] (fused decode)
+    mxu_inflation: float = 1.0
+    max_n: int | None = None      # hard cap on flattened batch (None = any)
+    k_align: int = 1              # required K divisibility
+
+    def capable(self, fmt: str, regime: str, n: int, k: int, m: int) -> bool:
+        if fmt not in self.fmts or regime not in self.regimes:
+            return False
+        if self.max_n is not None and n > self.max_n:
+            return False
+        return k % self.k_align == 0
+
+    def cost(self, fmt: str, n: int, k: int, m: int) -> float:
+        """Roofline cost hint in µs: max(HBM time, MXU time)."""
+        bpw = self.hbm_bpw
+        if bpw is None:
+            bpw = FORMAT_BPW[fmt]
+        elif fmt == "fp":
+            bpw = 16.0
+        elif fmt == "int4":
+            bpw = 4.0
+        mem = (m * k * bpw / 8 + n * k) / _HBM_BYTES_PER_US
+        comp = 2.0 * n * m * k * self.mxu_inflation / _MXU_OPS_PER_US
+        return max(mem, comp)
+
+
+def _fn_xla(x_q, s_x, pw, interpret):
+    return _mp.mpgemm_xla(x_q, s_x, pw)
+
+
+def _fn_lut(lossless, tl2=False):
+    def fn(x_q, s_x, pw, interpret):
+        f = _mp.tl2_lut if tl2 else _mp.tl1_lut
+        return f(x_q, s_x, pw, lossless=lossless)
+
+    return fn
+
+
+def _fn_pallas(x_q, s_x, pw, interpret):
+    from repro.kernels import ops as kops  # lazy: keeps dryrun pallas-free
+
+    return kops.mpgemm_pallas(x_q, s_x, pw, interpret=interpret)
+
+
+def _fn_lut_gemv(lossless):
+    def fn(x_q, s_x, pw, interpret):
+        from repro.kernels import ops as kops  # lazy: keeps dryrun pallas-free
+
+        return kops.lut_gemv(x_q, s_x, pw, lossless=lossless, interpret=interpret)
+
+    return fn
+
+
+_MAD_FMTS = ("fp", "int4", "i2s", "tl1", "tl2", "tl2k", "tq1")
+_PALLAS_FMTS = ("i2s", "tl1", "tl2k")
+
+REGISTRY: dict[str, KernelSpec] = {}
+
+
+def register(spec: KernelSpec) -> KernelSpec:
+    if spec.name in REGISTRY:
+        raise ValueError(f"kernel {spec.name!r} already registered")
+    REGISTRY[spec.name] = spec
+    return spec
+
+
+# The library kernels.  hbm_bpw for the XLA unpack path is 8 (the unpacked
+# int8 [M, K] operand materializes at HLO level); the XLA LUT kernels
+# materialize the one-hot [M, G, C] operand (~4.5 B / 4.67 B per weight).
+register(KernelSpec("xla", _fn_xla, "xla", _MAD_FMTS, hbm_bpw=8.0))
+register(KernelSpec("int4", _fn_xla, "xla", ("int4",), hbm_bpw=4.0))
+register(KernelSpec("tl1_lut", _fn_lut(True), "xla", ("tl1",),
+                    hbm_bpw=36.0, mxu_inflation=4.5))
+register(KernelSpec("tl1_lut_lossy", _fn_lut(False), "xla", ("tl1",),
+                    lossless=False, hbm_bpw=36.0, mxu_inflation=4.5))
+register(KernelSpec("tl2_lut", _fn_lut(True, tl2=True), "xla", ("tl2",),
+                    hbm_bpw=37.3, mxu_inflation=4.7))
+register(KernelSpec("tl2_lut_lossy", _fn_lut(False, tl2=True), "xla", ("tl2",),
+                    lossless=False, hbm_bpw=37.3, mxu_inflation=4.7))
+register(KernelSpec("pallas", _fn_pallas, "pallas", _PALLAS_FMTS))
+register(KernelSpec("lut_gemv", _fn_lut_gemv(True), "pallas", ("tl1",),
+                    regimes=("gemv",), mxu_inflation=4.5, max_n=1, k_align=4))
+register(KernelSpec("lut_gemv_lossy", _fn_lut_gemv(False), "pallas", ("tl1",),
+                    regimes=("gemv",), lossless=False, mxu_inflation=4.5,
+                    max_n=1, k_align=4))
+
+
+def formats() -> tuple:
+    """Every format some registered kernel accepts."""
+    out: list = []
+    for spec in REGISTRY.values():
+        for f in spec.fmts:
+            if f not in out:
+                out.append(f)
+    return tuple(out)
+
+
+def candidates(fmt: str, regime: str, n: int, k: int, m: int,
+               *, lossless_only: bool = True, backend: str = "auto") -> list:
+    """Capable specs for a shape, cheapest cost hint first."""
+    out = [
+        s for s in REGISTRY.values()
+        if s.capable(fmt, regime, n, k, m)
+        and (not lossless_only or s.lossless)
+        and (backend == "auto" or s.backend == backend)
+    ]
+    return sorted(out, key=lambda s: (s.cost(fmt, n, k, m), s.name))
+
+
+# ---------------------------------------------------------------------------
+# KernelPlan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPlan:
+    """Per-config dispatch policy.  Hashable → lives inside ``QuantConfig``.
+
+    gemv / gemm: registered kernel name for that regime, or "auto" to let
+    the cache + heuristic decide.  backend: "auto" considers every kernel;
+    "xla" restricts to pure-XLA kernels (the dryrun/compile-cost paths stay
+    pallas-free); "pallas" restricts to the fused Pallas kernels.
+    interpret: forced Pallas interpret mode (None → auto: off-TPU only).
+    """
+
+    gemv: str = "auto"
+    gemm: str = "auto"
+    backend: str = "auto"
+    interpret: bool | None = None
+
+    def named(self, regime: str) -> str:
+        return self.gemv if regime == "gemv" else self.gemm
+
+
+AUTO = KernelPlan()
+
+
+def lut_plan(fmt: str, lossless: bool = True) -> KernelPlan:
+    """Plan pinning the LUT computation model (paper TL*_1 / TL*_0) for ``fmt``."""
+    sfx = "" if lossless else "_lossy"
+    if fmt == "tl1":
+        return KernelPlan(gemv="lut_gemv" + sfx, gemm="tl1_lut" + sfx)
+    if fmt == "tl2":
+        return KernelPlan(gemv="tl2_lut" + sfx, gemm="tl2_lut" + sfx)
+    raise ValueError(f"no LUT kernels for format {fmt!r}")
+
+
+# ---------------------------------------------------------------------------
+# Autotune cache
+# ---------------------------------------------------------------------------
+
+
+def n_bucket(n: int) -> int:
+    """Bucket the flattened batch: 1 (GEMV) or next power of two ≤ 512."""
+    if n <= 1:
+        return 1
+    b = 2
+    while b < n and b < 512:
+        b *= 2
+    return b
+
+
+class AutotuneCache:
+    """Measured per-shape winners, persisted as JSON.
+
+    Entries map ``"{backend}|{fmt}|M{m}|K{k}|N{bucket}"`` → kernel name (plus
+    the raw per-candidate timings for later inspection).  A loaded cache
+    reproduces selections exactly: lookups are by key, no re-measurement.
+    """
+
+    def __init__(self, entries: dict | None = None, path: str | None = None):
+        self.entries: dict[str, dict] = dict(entries or {})
+        self.path = path
+
+    @staticmethod
+    def key(backend: str, fmt: str, n: int, k: int, m: int) -> str:
+        return f"{backend}|{fmt}|M{m}|K{k}|N{n_bucket(n)}"
+
+    def get(self, key: str) -> str | None:
+        e = self.entries.get(key)
+        return e["kernel"] if e else None
+
+    def put(self, key: str, kernel: str, timings_us: dict | None = None) -> None:
+        self.entries[key] = {"kernel": kernel, "us": dict(timings_us or {})}
+
+    def save(self, path: str | None = None) -> str:
+        path = path or self.path
+        if not path:
+            raise ValueError("AutotuneCache.save needs a path")
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"version": 1, "entries": self.entries}, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+        self.path = path
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "AutotuneCache":
+        with open(path) as f:
+            blob = json.load(f)
+        return cls(entries=blob.get("entries", {}), path=path)
+
+
+_ACTIVE_CACHE = AutotuneCache()
+
+
+def active_cache() -> AutotuneCache:
+    return _ACTIVE_CACHE
+
+
+def set_cache(cache: AutotuneCache) -> AutotuneCache:
+    global _ACTIVE_CACHE
+    _ACTIVE_CACHE = cache
+    return cache
+
+
+def load_cache(path: str) -> AutotuneCache:
+    return set_cache(AutotuneCache.load(path))
+
+
+# ---------------------------------------------------------------------------
+# Selection
+# ---------------------------------------------------------------------------
+
+
+def _hw_backend() -> str:
+    return jax.default_backend()
+
+
+def _heuristic(fmt: str, regime: str, hw: str, backend: str) -> str:
+    """The paper's regime table (Bitnet.cpp §3), TPU-adapted.
+
+    GEMV decode is memory-bound → true-LUT kernel for tl1 (the headline),
+    fused Pallas decode for the other packed formats on TPU.  GEMM prefill is
+    compute-bound → MAD on the MXU (fused Pallas decode on TPU, the XLA int
+    dot elsewhere — off-TPU the Pallas kernels only run in interpret mode, so
+    they are validation vehicles, not fast paths; lut_gemv stays selected
+    off-TPU because it IS the paper's decode semantics and is cheap at N=1).
+    """
+    if backend == "xla":
+        return "int4" if fmt == "int4" else "xla"
+    if backend == "pallas":
+        if regime == "gemv" and fmt == "tl1":
+            return "lut_gemv"
+        if fmt in _PALLAS_FMTS:
+            return "pallas"
+        raise ValueError(f"no pallas kernel for format {fmt!r}")
+    if regime == "gemv":
+        if fmt == "tl1":
+            return "lut_gemv"
+        if fmt in _PALLAS_FMTS and hw == "tpu":
+            return "pallas"
+    else:
+        if fmt in _PALLAS_FMTS and hw == "tpu":
+            return "pallas"
+    return "int4" if fmt == "int4" else "xla"
+
+
+def select(fmt: str, n: int, k: int, m: int,
+           plan: KernelPlan = AUTO) -> tuple[KernelSpec, str]:
+    """Resolve (spec, source) for a shape.  source ∈ override|autotune|heuristic."""
+    regime = "gemv" if n == 1 else "gemm"
+    named = plan.named(regime)
+    if named != "auto":
+        spec = REGISTRY.get(named)
+        if spec is None:
+            raise ValueError(
+                f"unknown kernel {named!r}; registered: {sorted(REGISTRY)}")
+        if not spec.capable(fmt, regime, n, k, m):
+            raise ValueError(
+                f"kernel {named!r} cannot run fmt={fmt!r} regime={regime} "
+                f"(N={n}, K={k}, M={m}); capable: "
+                f"{[s.name for s in candidates(fmt, regime, n, k, m, lossless_only=False)]}")
+        return spec, "override"
+    hw = _hw_backend()
+    cached = _ACTIVE_CACHE.get(AutotuneCache.key(hw, fmt, n, k, m))
+    if cached is not None:
+        spec = REGISTRY.get(cached)
+        if spec is not None and spec.capable(fmt, regime, n, k, m) and (
+                plan.backend == "auto" or spec.backend == plan.backend):
+            return spec, "autotune"
+    return REGISTRY[_heuristic(fmt, regime, hw, plan.backend)], "heuristic"
+
+
+# ---------------------------------------------------------------------------
+# Decision log (trace-time introspection; what the acceptance tests assert)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    fmt: str
+    regime: str
+    n: int
+    k: int
+    m: int
+    kernel: str
+    source: str
+    seq: int = 0  # monotone id; survives log trimming
+
+
+_DECISIONS: list[Decision] = []
+_MAX_DECISIONS = 4096
+_SEQ = 0  # total decisions ever recorded (monotone, never reset by trimming)
+
+
+def decisions() -> tuple:
+    return tuple(_DECISIONS)
+
+
+def decision_count() -> int:
+    """Monotone mark for :func:`decisions_since` (NOT the retained length —
+    the log trims its oldest half at capacity, so indices are unstable)."""
+    return _SEQ
+
+
+def decisions_since(mark: int) -> tuple:
+    """Decisions recorded after ``mark`` (a prior ``decision_count()``).
+
+    Robust to log trimming: matches by monotone seq, not list index.  If the
+    log overflowed past ``mark`` the trimmed-away decisions are simply gone.
+    """
+    return tuple(d for d in _DECISIONS if d.seq >= mark)
+
+
+def clear_decisions() -> None:
+    _DECISIONS.clear()
+
+
+def _record(d: Decision) -> None:
+    global _SEQ
+    if len(_DECISIONS) >= _MAX_DECISIONS:
+        del _DECISIONS[: _MAX_DECISIONS // 2]
+    _DECISIONS.append(dataclasses.replace(d, seq=_SEQ))
+    _SEQ += 1
+
+
+# ---------------------------------------------------------------------------
+# Dispatch entry point
+# ---------------------------------------------------------------------------
+
+
+def mpgemm(x_q: jax.Array, s_x, pw: PackedWeight,
+           plan: KernelPlan = AUTO, *, _source: str | None = None) -> jax.Array:
+    """THE mpGEMM entry point: int8 [..., K] × PackedWeight [M, K] → fp32 [..., M].
+
+    Regime is derived from the flattened batch N = prod(leading dims) at
+    trace time; selection order is plan override → autotune cache →
+    heuristic.  Every decision is recorded (see :func:`decisions`).
+    """
+    if plan is None:
+        plan = AUTO
+    k = x_q.shape[-1]
+    if k != pw.k:
+        raise ValueError(
+            f"activation K={k} does not match packed weight K={pw.k} "
+            f"(weight {pw.fmt!r} [M={pw.m}, K={pw.k}])")
+    n = 1
+    for d in x_q.shape[:-1]:
+        n *= int(d)
+    spec, source = select(pw.fmt, n, k, pw.m, plan)
+    _record(Decision(pw.fmt, "gemv" if n == 1 else "gemm", n, k, pw.m,
+                     spec.name, _source or source))
+    return spec.fn(x_q, s_x, pw, plan.interpret)
+
+
+def explain(fmt: str, n: int, k: int, m: int, plan: KernelPlan = AUTO) -> dict:
+    """Inspect a dispatch decision without running it (README quickstart)."""
+    regime = "gemv" if n == 1 else "gemm"
+    spec, source = select(fmt, n, k, m, plan)
+    return {
+        "fmt": fmt, "regime": regime, "n": n, "k": k, "m": m,
+        "kernel": spec.name, "source": source, "backend": spec.backend,
+        "cost_hint_us": spec.cost(fmt, n, k, m),
+        "candidates": [
+            (s.name, round(s.cost(fmt, n, k, m), 3))
+            for s in candidates(fmt, regime, n, k, m, lossless_only=False)
+        ],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Autotuner
+# ---------------------------------------------------------------------------
+
+
+def _time_call(fn, *args, reps: int = 5) -> float:
+    out = fn(*args)  # warmup / compile
+    out.block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6  # µs
+
+
+def autotune(fmt: str, shapes, *, cache: AutotuneCache | None = None,
+             names: tuple | None = None, reps: int = 5, seed: int = 0,
+             interpret: bool | None = None) -> AutotuneCache:
+    """Measure every capable lossless kernel per (N, K, M) shape; store winners.
+
+    shapes: iterable of (n, k, m).  Off-TPU the Pallas kernels execute in
+    interpret mode (Python, minutes per large shape, timings meaningless) —
+    they are skipped unless explicitly requested via ``names``, which
+    otherwise just restricts the candidate set.  Winners land in ``cache``
+    (default: the active cache) keyed by (hardware backend, fmt, M, K,
+    N-bucket).
+    """
+    import numpy as np
+
+    cache = cache or _ACTIVE_CACHE
+    hw = _hw_backend()
+    rng = np.random.default_rng(seed)
+    from repro.core.qtensor import pack_ternary, pack_weight
+
+    for n, k, m in shapes:
+        regime = "gemv" if n == 1 else "gemm"
+        cands = candidates(fmt, regime, n, k, m)
+        if names is not None:
+            cands = [s for s in cands if s.name in names]
+        elif hw != "tpu":
+            cands = [s for s in cands if s.backend != "pallas"]
+        if not cands:
+            continue
+        w = jnp.asarray(rng.integers(-1, 2, size=(m, k)), jnp.int8)
+        x_q = jnp.asarray(rng.integers(-127, 128, size=(n, k)), jnp.int8)
+        if fmt == "fp":  # the bf16 baseline has no ternary pack path
+            pw = pack_weight(w.astype(jnp.float32), fmt)
+        else:
+            pw = pack_ternary(w, jnp.float32(1.0), fmt)
+        timings: dict[str, float] = {}
+        for spec in cands:
+            fn = jax.jit(lambda xq, s, spec=spec: spec.fn(xq, s, pw, interpret))
+            timings[spec.name] = _time_call(fn, x_q, jnp.float32(1.0), reps=reps)
+        best = min(timings, key=timings.get)
+        cache.put(AutotuneCache.key(hw, fmt, n, k, m), best, timings)
+    return cache

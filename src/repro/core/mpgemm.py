@@ -6,13 +6,14 @@ This module holds the pure-XLA implementations; the Pallas TPU kernels in
 ``repro.kernels`` implement the same contracts with fused in-VMEM decode and
 are validated against these references.
 
-Implementation choices (``impl``):
-  * "unpack8" — unpack packed bytes to int8 [M, K] then dot.  Semantically
-    canonical; materializes the unpacked operand at HLO level.
-  * "int4"    — weights stored as XLA-native int4; the dot consumes them with
-    no unpack intermediate (best XLA-only HBM traffic; 4 bpw).
-  * "pallas"  — fused decode+matmul Pallas kernel (2 / 1.67 bpw in HBM,
-    decode in VMEM).  TPU target; validated via interpret mode on CPU.
+Kernel selection lives in ``repro.core.dispatch`` (DESIGN.md §5): every
+implementation here and in ``repro.kernels`` registers its (fmt, regime,
+backend) capabilities there, and ``dispatch.mpgemm`` picks per shape.  The
+XLA implementations in this module:
+  * ``mpgemm_xla`` — unpack packed bytes to int8 [M, K] then dot (canonical
+    reference; materializes the unpacked operand at HLO level), or the
+    XLA-native int4 dot (no unpack intermediate; 4 bpw HBM traffic).
+  * ``tl*_lut`` — LUT-semantics references (Algorithms 3–4).
 
 The LUT-semantics functions (``tl*_lut``) follow Algorithms 3–4 exactly,
 including the lossy ``_0`` variants (LUT requantized to int8, the T-MAC
@@ -167,15 +168,21 @@ def mpgemm(
     impl: str = "xla",
     lut: str | None = None,
 ) -> jax.Array:
-    """Dispatch entry point used by BitLinear.
+    """DEPRECATED legacy entry point — string flags translated to a KernelPlan.
 
-    lut: None (MAD/MXU path), "lossless" (TL*_1), "lossy" (TL*_0).
+    New call sites use ``repro.core.dispatch.mpgemm(x_q, s_x, pw, plan)``;
+    this shim preserves the exact historical routing (``lut`` beats ``impl``,
+    ``impl="xla"`` always means the XLA reference, no shape-aware selection)
+    so existing configs keep their bit-exact behaviour.
     """
-    if lut is not None and pw.fmt in ("tl1", "tl2"):
-        fn = tl1_lut if pw.fmt == "tl1" else tl2_lut
-        return fn(x_q, s_x, pw, lossless=(lut == "lossless"))
-    if impl == "pallas":
-        from repro.kernels import ops as kops  # lazy: keeps dryrun pallas-free
+    from repro.core import dispatch  # lazy: dispatch imports this module
 
-        return kops.mpgemm_pallas(x_q, s_x, pw)
-    return mpgemm_xla(x_q, s_x, pw)
+    if lut is not None and pw.fmt in ("tl1", "tl2"):
+        name = f"{pw.fmt}_lut" + ("" if lut == "lossless" else "_lossy")
+        plan = dispatch.KernelPlan(gemv=name, gemm=name)
+    elif impl == "pallas":
+        plan = dispatch.KernelPlan(gemv="pallas", gemm="pallas")
+    else:
+        name = "int4" if pw.fmt == "int4" else "xla"
+        plan = dispatch.KernelPlan(gemv=name, gemm=name)
+    return dispatch.mpgemm(x_q, s_x, pw, plan, _source="legacy")

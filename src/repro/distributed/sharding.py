@@ -25,6 +25,34 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 
+def set_mesh(mesh) -> None:
+    """``jax.set_mesh`` compat across jax versions.
+
+    jax ≥ 0.5 exposes ``jax.set_mesh``; on 0.4.x the equivalent is entering
+    the ``Mesh`` context manager, which installs the thread-local resource
+    env that lets bare ``PartitionSpec`` sharding constraints resolve inside
+    jit.  We enter it for process lifetime (deliberately never exited — the
+    launchers set one production mesh per process)."""
+    if hasattr(jax, "set_mesh"):
+        jax.set_mesh(mesh)
+    else:
+        mesh.__enter__()
+
+
+def current_mesh():
+    """Read back the mesh installed by :func:`set_mesh`.
+
+    Gated on the SAME capability probe as :func:`set_mesh` — jax versions
+    that have ``get_abstract_mesh`` but not ``jax.set_mesh`` would otherwise
+    return the empty abstract mesh here while ``set_mesh`` populated the
+    legacy thread-local env, silently dropping every sharding axis."""
+    if hasattr(jax, "set_mesh"):
+        return jax.sharding.get_abstract_mesh()
+    from jax._src import mesh as mesh_lib  # old jax: no public accessor
+
+    return mesh_lib.thread_resources.env.physical_mesh
+
+
 def _axis_size(mesh, name) -> int:
     if isinstance(name, tuple):
         out = 1

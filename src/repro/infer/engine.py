@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import dispatch
+from repro.core.dispatch import KernelPlan
 from repro.models import lm
 from repro.models.config import ModelConfig
 
@@ -42,7 +44,10 @@ class _Slot:
 
 class Engine:
     def __init__(self, params, cfg: ModelConfig, *, batch_slots: int = 4,
-                 max_seq: int = 256, pack: bool = True, seed: int = 0):
+                 max_seq: int = 256, pack: bool = True, seed: int = 0,
+                 plan: KernelPlan | None = None):
+        if plan is not None:
+            cfg = cfg.with_plan(plan)
         self.cfg = cfg
         self.params = lm.pack(params, cfg) if pack and cfg.quant.mode == "quant" else params
         self.slots: list[_Slot | None] = [None] * batch_slots
@@ -50,7 +55,20 @@ class Engine:
         self.state = lm.init_state(cfg, batch_slots, max_seq)
         self.key = jax.random.PRNGKey(seed)
         self.queue: list[Request] = []
+        self._decision_mark = dispatch.decision_count()
         self._step_fn = jax.jit(partial(_decode, cfg=cfg))
+
+    def kernel_decisions(self) -> tuple:
+        """mpGEMM dispatch decisions recorded since this engine was built.
+
+        Decisions are logged at trace time, so a single-shape serving run
+        yields one decision per BitLinear per traced step shape.  The regime
+        follows the engine's SLOT COUNT, not the number of busy slots: the
+        jitted step always batches all ``batch_slots`` (idle slots pad at
+        pos −1), so only a ``batch_slots=1`` engine takes the N=1 GEMV
+        regime (``lut_gemv`` for tl1); larger engines always dispatch GEMM.
+        """
+        return dispatch.decisions_since(self._decision_mark)
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)

@@ -138,27 +138,58 @@ def lut_gemv(
     lossless: bool = True,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """True-LUT decode GEMV (TL1_0/TL1_1): int8 [K] × tl1 [M, K] -> fp32 [M]."""
+    """True-LUT decode GEMV (TL1_0/TL1_1): int8 [..., K] × tl1 [M, K] -> fp32 [..., M].
+
+    The kernel itself is strictly single-row (the paper's batch-1 decode
+    regime): any leading dims must flatten to N == 1.  Multi-row inputs are
+    routed through the registry's batched LUT fallback (``tl*_lut``) instead
+    of silently mis-tiling.
+    """
     if interpret is None:
         interpret = _default_interpret()
     if pw.fmt != "tl1":
-        raise ValueError("lut_gemv needs tl1 weights")
+        raise ValueError(f"lut_gemv needs tl1 weights, got {pw.fmt!r}")
+    k = x_q.shape[-1]
+    if k != pw.k:
+        raise ValueError(
+            f"lut_gemv: activation K={k} does not match weight K={pw.k}")
+    if k % 4 != 0:
+        raise ValueError(f"lut_gemv needs K % 4 == 0, got K={k}")
+    lead = x_q.shape[:-1]
+    n = 1
+    for d in lead:
+        n *= int(d)
+    if n != 1:
+        # batched fallback via the registry: same LUT semantics, GEMM regime.
+        from repro.core import dispatch
+
+        name = "tl1_lut" if lossless else "tl1_lut_lossy"
+        return dispatch.mpgemm(
+            x_q, s_x, pw,
+            dispatch.KernelPlan(gemv=name, gemm=name, interpret=interpret),
+            _source="lut_gemv_fallback")
+    s_x = jnp.asarray(s_x, jnp.float32)
+    if s_x.size != 1:
+        raise ValueError(
+            f"lut_gemv needs a scalar activation scale, got shape {s_x.shape}")
     from repro.core import packing
 
-    lut = packing.tl1_build_lut(x_q[None, :])[0]  # [G, 9] int32
+    x1 = x_q.reshape(k)
+    lut = packing.tl1_build_lut(x1[None, :])[0]  # [G, 9] int32
     s_lut = jnp.float32(1.0)
     if not lossless:
         s_lut = jnp.maximum(jnp.max(jnp.abs(lut)).astype(jnp.float32), 1.0) / 127.0
         lut = jnp.clip(jnp.round(lut / s_lut), -127, 127).astype(jnp.int32)
     lut_even, lut_odd = lut[0::2], lut[1::2]
     m = pw.m
-    ghb = _pick(128, x_q.shape[0] // 4)  # bytes per k-step tile
+    ghb = _pick(128, k // 4)  # bytes per k-step tile
     y32 = tl1_lut_gemv(
         lut_even, lut_odd, pw.planes["p"],
         bm=_pick(128, m), g_blk=2 * ghb,
         lossless=lossless, interpret=interpret,
     )[:, 0]
-    return y32.astype(jnp.float32) * (s_lut * jnp.asarray(s_x, jnp.float32) * pw.scale)
+    y = y32.astype(jnp.float32) * (s_lut * s_x.reshape(()) * pw.scale)
+    return y.reshape(*lead, m)
 
 
 def ssd_scan(a_log, xbar, b, c, *, chunk: int = 64, interpret: bool | None = None):

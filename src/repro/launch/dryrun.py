@@ -47,7 +47,7 @@ def lower_cell(arch: str, shape: str, *, multi_pod: bool, fmt: str = "i2s",
                extra_cfg: dict | None = None, microbatches: int = 16):
     """Build mesh + specs and return (lowered, cfg, cell, mesh)."""
     mesh = make_production_mesh(multi_pod=multi_pod)
-    jax.set_mesh(mesh)  # enables P-spec sharding constraints in the model body
+    sharding.set_mesh(mesh)  # enables P-spec sharding constraints in the model body
     cell = shapes.SHAPES[shape]
     cfg = shapes.dryrun_config(configs.get(arch), cell.kind, fmt=fmt)
     dp = ("pod", "data") if multi_pod else ("data",)

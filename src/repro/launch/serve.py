@@ -1,6 +1,12 @@
 """Serving launcher: pack a ternary model and run the batched engine.
 
 CPU smoke:  python -m repro.launch.serve --arch qwen1.5-0.5b --smoke
+Kernel routing is shape-aware (DESIGN.md §5): an engine sized to one slot
+(--slots 1) decodes in the GEMV regime (true-LUT kernel for tl1); any larger
+slot count always batches all slots — idle ones pad — so it dispatches the
+GEMM regime.  Inspect with --explain, override with --gemv/--gemm, measure with
+--autotune (winners persist to the cache JSON and steer future runs).
+
 A real deployment would restore packed params from the checkpoint store and
 pjit decode_step over the serving mesh (the dry-run proves that lowering).
 """
@@ -14,9 +20,22 @@ import jax
 import numpy as np
 
 from repro import configs
+from repro.core import dispatch
 from repro.core.bitlinear import QuantConfig
+from repro.core.dispatch import KernelPlan
 from repro.infer.engine import Engine, Request
 from repro.models import lm
+
+
+def build_plan(args) -> KernelPlan:
+    if args.lut:  # deprecated alias, kept so existing invocations still work
+        if args.fmt in ("tl1", "tl2"):
+            print(f"[serve] --lut is deprecated; use --gemv/--gemm "
+                  f"(mapping to the {args.lut} LUT kernels)")
+            return dispatch.lut_plan(args.fmt, lossless=(args.lut == "lossless"))
+        # historical behavior: lut was silently ignored for non-LUT formats
+        print(f"[serve] --lut has no effect for fmt={args.fmt!r} (ignored)")
+    return KernelPlan(gemv=args.gemv, gemm=args.gemm, backend=args.backend)
 
 
 def main():
@@ -25,7 +44,21 @@ def main():
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--fmt", default="i2s",
                     choices=["i2s", "tl1", "tl2", "tl2k", "int4", "fp"])
-    ap.add_argument("--lut", default="", choices=["", "lossless", "lossy"])
+    ap.add_argument("--gemv", default="auto",
+                    help="kernel name for the N=1 decode regime (default: auto)")
+    ap.add_argument("--gemm", default="auto",
+                    help="kernel name for the batched regime (default: auto)")
+    ap.add_argument("--backend", default="auto", choices=["auto", "xla", "pallas"])
+    ap.add_argument("--lut", default="", choices=["", "lossless", "lossy"],
+                    help="DEPRECATED: use --gemv/--gemm")
+    ap.add_argument("--autotune-cache", default="",
+                    help="autotune cache JSON: loaded if it exists; "
+                         "written after --autotune")
+    ap.add_argument("--autotune", action="store_true",
+                    help="measure registry candidates at this model's decode "
+                         "shapes before serving")
+    ap.add_argument("--explain", action="store_true",
+                    help="print the dispatch decision per regime and exit")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=3)
     ap.add_argument("--max-new", type=int, default=16)
@@ -33,10 +66,31 @@ def main():
     ap.add_argument("--ckpt", default="", help="restore packed params from here")
     args = ap.parse_args()
 
+    plan = build_plan(args)
     cfg = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
     cfg = cfg.replace(dtype="float32",
-                      quant=QuantConfig(mode="quant", fmt=args.fmt,
-                                        lut=args.lut or None))
+                      quant=QuantConfig(mode="quant", fmt=args.fmt, plan=plan))
+
+    if args.autotune_cache:
+        import os
+        if os.path.exists(args.autotune_cache):
+            dispatch.load_cache(args.autotune_cache)
+            print(f"[serve] loaded autotune cache {args.autotune_cache} "
+                  f"({len(dispatch.active_cache().entries)} entries)")
+
+    d, f = cfg.d_model, cfg.d_ff or cfg.d_model
+    layer_shapes = [(n, k, m) for n in (1, args.slots)
+                    for (k, m) in ((d, d), (d, f), (f, d))]
+    if args.explain:
+        for n, k, m in layer_shapes:
+            print(dispatch.explain(args.fmt, n, k, m, plan))
+        return
+    if args.autotune:
+        dispatch.autotune(args.fmt, layer_shapes)
+        if args.autotune_cache:
+            dispatch.active_cache().save(args.autotune_cache)
+            print(f"[serve] autotune winners saved to {args.autotune_cache}")
+
     params = lm.init(jax.random.PRNGKey(0), cfg)
     if args.ckpt:
         from repro.ckpt import store
@@ -52,9 +106,13 @@ def main():
     done = eng.run()
     dt = time.perf_counter() - t0
     toks = sum(len(r.out_tokens) for r in done)
-    print(f"[serve] {args.arch} fmt={args.fmt}{('_'+args.lut) if args.lut else ''}: "
+    print(f"[serve] {args.arch} fmt={args.fmt}: "
           f"{len(done)} requests, {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s on CPU; see benchmarks for TPU projections)")
+    routed = sorted({(dc.regime, dc.n, dc.kernel, dc.source)
+                     for dc in eng.kernel_decisions()})
+    for regime, n, kernel, source in routed:
+        print(f"  routed {regime} (N={n}) -> {kernel} [{source}]")
     for r in sorted(done, key=lambda r: r.rid)[:3]:
         print(f"  req{r.rid}: prompt={r.prompt} -> {r.out_tokens}")
 

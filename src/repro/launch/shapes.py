@@ -51,9 +51,12 @@ def applicable(arch: str, shape: str) -> bool:
 
 
 def dryrun_config(cfg: ModelConfig, kind: str, *, fmt: str = "i2s",
-                  impl: str = "xla") -> ModelConfig:
+                  plan=None) -> ModelConfig:
     """Numerics for the production lowering: bf16 activations; QAT for train,
-    packed ternary inference otherwise; remat for the train graph."""
+    packed ternary inference otherwise; remat for the train graph.
+
+    The inference plan defaults to XLA-only kernels — the dry-runs prove the
+    pure-XLA lowering and must stay pallas-import-free."""
     if kind == "train":
         # w_gather left off: GSPMD's own FSDP propagation keeps the stacked
         # weights and their scan-backward cotangents 256-way sharded (an
@@ -61,8 +64,11 @@ def dryrun_config(cfg: ModelConfig, kind: str, *, fmt: str = "i2s",
         # cotangent carriers — +13 GB/device; see EXPERIMENTS.md §Dry-run)
         return cfg.replace(dtype="bfloat16", remat=True,
                            quant=QuantConfig(mode="qat"))
+    from repro.core.dispatch import KernelPlan
+
     return cfg.replace(dtype="bfloat16",
-                       quant=QuantConfig(mode="quant", fmt=fmt, impl=impl))
+                       quant=QuantConfig(mode="quant", fmt=fmt,
+                                         plan=plan or KernelPlan(backend="xla")))
 
 
 def abstract_params(cfg: ModelConfig, kind: str):

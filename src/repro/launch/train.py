@@ -76,7 +76,7 @@ def main():
         shape = tuple(int(x) for x in args.mesh.split("x"))
         mesh = make_mesh(shape, ("data", "model")[: len(shape)] if len(shape) == 2
                          else ("pod", "data", "model"))
-        jax.set_mesh(mesh)
+        sharding.set_mesh(mesh)
         shardings = sharding.shard_params(state, mesh, "train")
         state = jax.device_put(state, shardings)
         step_fn = jax.jit(train_loop.make_train_step(cfg, tcfg),

@@ -94,5 +94,10 @@ class ModelConfig:
     def with_quant(self, quant: QuantConfig) -> "ModelConfig":
         return dataclasses.replace(self, quant=quant)
 
+    def with_plan(self, plan) -> "ModelConfig":
+        """Override the mpGEMM KernelPlan (clears any legacy impl/lut flags)."""
+        return dataclasses.replace(
+            self, quant=dataclasses.replace(self.quant, plan=plan, impl=None, lut=None))
+
     def replace(self, **kw) -> "ModelConfig":
         return dataclasses.replace(self, **kw)

@@ -90,7 +90,7 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
 
         def pin(path, leaf):
             spec = shd.param_spec(shd._path_keys(path), leaf,
-                                  jax.sharding.get_abstract_mesh(), "train")
+                                  shd.current_mesh(), "train")
             return jax.lax.with_sharding_constraint(leaf, spec)
 
         return jax.tree_util.tree_map_with_path(pin, g)

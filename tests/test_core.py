@@ -13,8 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypo import given, settings, st
 
 from repro.core import bitlinear, mpgemm, packing, quant
 from repro.core.qtensor import FORMAT_BPW, pack_ternary, pack_weight, unpack_weight
@@ -112,6 +111,56 @@ def test_lut_lossless_equals_mad(seed):
     y2 = np.asarray(mpgemm.tl2_lut(x_q, 1.0, pack_ternary(w, jnp.float32(1.0), "tl2"), lossless=True))
     np.testing.assert_array_equal(y1, ref)
     np.testing.assert_array_equal(y2, ref)
+
+
+def test_mpgemm_q8_block_per_block_semantics():
+    """Q8_K-style per-block scales against an independent numpy triple loop."""
+    rng = np.random.default_rng(9)
+    n, k, m, block = 3, 512, 32, 128
+    w = random_ternary(rng, m, k)
+    x_q = jnp.asarray(rng.integers(-127, 128, size=(n, k)), jnp.int8)
+    s_b = jnp.asarray(rng.uniform(0.01, 2.0, size=(n, k // block)), jnp.float32)
+    pw = pack_ternary(w, jnp.float32(0.25), "i2s")
+    y = np.asarray(mpgemm.mpgemm_q8_block(x_q, s_b, pw, block))
+
+    xn, wn, sn = np.asarray(x_q, np.int64), np.asarray(w, np.int64), np.asarray(s_b)
+    y_ref = np.zeros((n, m))
+    for i in range(n):
+        for j in range(m):
+            acc = 0.0
+            for b in range(k // block):
+                sl = slice(b * block, (b + 1) * block)
+                acc += float(xn[i, sl] @ wn[j, sl]) * sn[i, b]  # scale PER BLOCK
+            y_ref[i, j] = acc * 0.25
+    # f64 loop vs the f32 partial-sum reassociation: tolerance, not bit-exact
+    np.testing.assert_allclose(y, y_ref, rtol=1e-5, atol=1e-4)
+
+    # uniform block scales collapse to the per-tensor scheme exactly
+    s_u = jnp.full((n, k // block), 0.5, jnp.float32)
+    y_u = np.asarray(mpgemm.mpgemm_q8_block(x_q, s_u, pw, block))
+    y_t = np.asarray(mpgemm.mpgemm_xla(x_q, jnp.float32(0.5), pw))
+    np.testing.assert_allclose(y_u, y_t, rtol=1e-6)
+
+
+@pytest.mark.parametrize("k", [16, 1000])
+def test_tl2_lut_twok_tail_fallback(k):
+    """Block-fitting split (paper §3.1.2): K=16 is ALL TwoK tail (three_k=0),
+    K=1000 mixes a 984 ThreeK prefix with a 16-wide TL1 tail."""
+    rng = np.random.default_rng(k)
+    m, n = 24, 3
+    w = random_ternary(rng, m, k)
+    x_q = jnp.asarray(rng.integers(-127, 128, size=(n, k)), jnp.int8)
+    pw = pack_ternary(w, jnp.float32(1.0), "tl2")
+    three_k, two_k = packing.tl2_split_k(k)
+    assert (three_k, two_k) == ((0, 16) if k == 16 else (984, 16))
+    assert pw.three_k == three_k
+    ref = np.asarray(mpgemm.mpgemm_xla(
+        x_q, jnp.float32(1.0), pack_ternary(w, jnp.float32(1.0), "i2s")))
+    y1 = np.asarray(mpgemm.tl2_lut(x_q, jnp.float32(1.0), pw, lossless=True))
+    np.testing.assert_array_equal(y1, ref)
+    y0 = np.asarray(mpgemm.tl2_lut(x_q, jnp.float32(1.0), pw, lossless=False))
+    rel = np.abs(y0 - ref).max() / max(np.abs(ref).max(), 1)
+    assert rel < 0.05
 
 
 def test_lut_lossy_bounded():

@@ -1,0 +1,238 @@
+"""Kernel registry + shape-aware dispatch (DESIGN.md §5).
+
+The acceptance claims, as executable assertions:
+  * every registered lossless kernel matches ``mpgemm_xla`` bit-exactly for
+    every (format, regime) it claims;
+  * auto-selection picks a lossless kernel for every registered format and
+    both regimes (so dispatch never silently changes numerics);
+  * the autotune cache round-trips: write → reload → identical selections;
+  * the Engine at batch-slot count 1 routes decode through ``lut_gemv``
+    while the prefill path routes through the MXU MAD kernels;
+  * plan overrides are validated with clear errors; legacy ``impl``/``lut``
+    string flags keep their historical routing via the shim.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import dispatch, mpgemm
+from repro.core.bitlinear import QuantConfig
+from repro.core.dispatch import AutotuneCache, KernelPlan
+from repro.core.qtensor import PackedWeight, pack_ternary
+from repro.infer.engine import Engine, Request
+from repro.models import lm
+
+INTERPRET = True  # CPU container: Pallas kernel bodies execute via interpret
+
+INT_FORMATS = [f for f in dispatch.formats() if f != "fp"]
+
+
+def _data(seed, n, k, m):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.integers(-1, 2, size=(m, k)), jnp.int8)
+    x_q = jnp.asarray(rng.integers(-127, 128, size=(n, k)), jnp.int8)
+    return x_q, w
+
+
+# ---------------------------------------------------------------------------
+# Registry numerics: every capable lossless kernel == mpgemm_xla
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1, 5])
+@pytest.mark.parametrize("fmt", INT_FORMATS)
+def test_registry_kernels_match_xla(fmt, n):
+    k, m = 768, 64  # 768 satisfies every format's alignment (24, 4, 3·256)
+    x_q, w = _data(7 + n, n, k, m)
+    pw = pack_ternary(w, jnp.float32(1.0), fmt)
+    ref = np.asarray(mpgemm.mpgemm_xla(x_q, jnp.float32(1.0), pw))
+    regime = "gemv" if n == 1 else "gemm"
+    cands = dispatch.candidates(fmt, regime, n, k, m)
+    assert cands, f"no lossless kernel registered for ({fmt}, {regime})"
+    for spec in cands:
+        y = np.asarray(spec.fn(x_q, jnp.float32(1.0), pw, INTERPRET))
+        np.testing.assert_array_equal(
+            y.astype(np.int64), ref.astype(np.int64), err_msg=spec.name)
+
+
+@pytest.mark.parametrize("n", [1, 5])
+@pytest.mark.parametrize("fmt", INT_FORMATS)
+def test_auto_selection_is_lossless(fmt, n):
+    k, m = 768, 64
+    x_q, w = _data(11 + n, n, k, m)
+    pw = pack_ternary(w, jnp.float32(0.5), fmt)
+    ref = np.asarray(mpgemm.mpgemm_xla(x_q, jnp.float32(2.0), pw))
+    mark = dispatch.decision_count()
+    y = np.asarray(dispatch.mpgemm(x_q, jnp.float32(2.0), pw,
+                                   KernelPlan(interpret=INTERPRET)))
+    np.testing.assert_array_equal(y.astype(np.int64), ref.astype(np.int64))
+    (dec,) = dispatch.decisions_since(mark)
+    assert dec.fmt == fmt and dec.n == n
+    assert dec.regime == ("gemv" if n == 1 else "gemm")
+    assert dispatch.REGISTRY[dec.kernel].lossless
+
+
+def test_auto_selection_fp_format():
+    k, m = 256, 32
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.integers(-1, 2, size=(m, k)), jnp.int8)
+    pw = PackedWeight({"w": w.astype(jnp.bfloat16)}, jnp.float32(1.0), "fp", (m, k))
+    x_q = jnp.asarray(rng.integers(-127, 128, size=(3, k)), jnp.int8)
+    y = np.asarray(dispatch.mpgemm(x_q, jnp.float32(1.0), pw))
+    ref = np.asarray(mpgemm.mpgemm_xla(x_q, jnp.float32(1.0), pw))
+    np.testing.assert_allclose(y, ref)
+
+
+def test_regime_heuristic_table():
+    """Paper §3: LUT GEMV for batch-1 tl1 decode; MAD/MXU for batched GEMM."""
+    assert dispatch.explain("tl1", 1, 768, 128)["kernel"] == "lut_gemv"
+    assert dispatch.explain("tl1", 64, 768, 128)["kernel"] in ("xla", "pallas")
+    assert dispatch.explain("int4", 1, 768, 128)["kernel"] == "int4"
+    assert dispatch.explain("i2s", 64, 768, 128)["kernel"] in ("xla", "pallas")
+    # backend restriction: dryrun plans stay pallas-free
+    xla_only = KernelPlan(backend="xla")
+    for n in (1, 64):
+        spec, _ = dispatch.select("tl1", n, 768, 128, xla_only)
+        assert spec.backend == "xla"
+
+
+# ---------------------------------------------------------------------------
+# Plan overrides + validation
+# ---------------------------------------------------------------------------
+
+
+def test_plan_override_and_errors():
+    x_q, w = _data(3, 5, 768, 64)
+    pw = pack_ternary(w, jnp.float32(1.0), "i2s")
+    mark = dispatch.decision_count()
+    y = dispatch.mpgemm(x_q, jnp.float32(1.0), pw,
+                        KernelPlan(gemm="pallas", interpret=INTERPRET))
+    np.testing.assert_array_equal(
+        np.asarray(y), np.asarray(mpgemm.mpgemm_xla(x_q, jnp.float32(1.0), pw)))
+    assert dispatch.decisions_since(mark)[0].source == "override"
+    with pytest.raises(ValueError, match="cannot run"):
+        dispatch.mpgemm(x_q, jnp.float32(1.0), pw, KernelPlan(gemm="lut_gemv"))
+    with pytest.raises(ValueError, match="unknown kernel"):
+        dispatch.mpgemm(x_q, jnp.float32(1.0), pw, KernelPlan(gemm="nope"))
+    with pytest.raises(ValueError, match="does not match"):
+        dispatch.mpgemm(x_q[:, :512], jnp.float32(1.0), pw)
+
+
+def test_legacy_string_flags_shim():
+    """Old impl=/lut= call sites keep their exact historical routing."""
+    x_q, w = _data(5, 4, 768, 32)
+    ref = np.asarray(mpgemm.mpgemm_xla(
+        x_q, jnp.float32(1.0), pack_ternary(w, jnp.float32(1.0), "i2s")))
+    mark = dispatch.decision_count()
+    y_p = mpgemm.mpgemm(x_q, jnp.float32(1.0),
+                        pack_ternary(w, jnp.float32(1.0), "i2s"), impl="pallas")
+    y_l = mpgemm.mpgemm(x_q, jnp.float32(1.0),
+                        pack_ternary(w, jnp.float32(1.0), "tl1"), lut="lossless")
+    np.testing.assert_array_equal(np.asarray(y_p), ref)
+    np.testing.assert_array_equal(np.asarray(y_l), ref)
+    kinds = [(d.kernel, d.source) for d in dispatch.decisions_since(mark)]
+    assert kinds == [("pallas", "legacy"), ("tl1_lut", "legacy")]
+
+
+# ---------------------------------------------------------------------------
+# Autotune cache
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_cache_roundtrip(tmp_path):
+    shapes = [(1, 512, 128), (8, 512, 128)]
+    cache = AutotuneCache()
+    dispatch.autotune("tl1", shapes, cache=cache, reps=1,
+                      names=("xla", "tl1_lut", "lut_gemv"), interpret=INTERPRET)
+    assert len(cache.entries) == 2
+    for e in cache.entries.values():
+        assert e["kernel"] in e["us"]
+
+    path = str(tmp_path / "autotune.json")
+    cache.save(path)
+    reloaded = AutotuneCache.load(path)
+    assert {k: v["kernel"] for k, v in reloaded.entries.items()} == \
+           {k: v["kernel"] for k, v in cache.entries.items()}
+
+    prev = dispatch.active_cache()
+    try:
+        dispatch.set_cache(cache)
+        first = [dispatch.select("tl1", n, k, m) for n, k, m in shapes]
+        dispatch.set_cache(reloaded)
+        second = [dispatch.select("tl1", n, k, m) for n, k, m in shapes]
+    finally:
+        dispatch.set_cache(prev)
+    assert [s.name for s, _ in first] == [s.name for s, _ in second]
+    assert all(src == "autotune" for _, src in first + second)
+
+
+def test_autotune_key_buckets_batch():
+    assert AutotuneCache.key("cpu", "tl1", 1, 768, 64) != \
+           AutotuneCache.key("cpu", "tl1", 2, 768, 64)
+    # batched Ns bucket to powers of two: 17..32 share an entry
+    assert AutotuneCache.key("cpu", "tl1", 20, 768, 64) == \
+           AutotuneCache.key("cpu", "tl1", 32, 768, 64)
+
+
+# ---------------------------------------------------------------------------
+# Engine routing (the paper's serving claim, end to end on CPU interpret)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tl1_model():
+    cfg = configs.smoke("qwen1.5-0.5b").replace(
+        dtype="float32", quant=QuantConfig(mode="quant", fmt="tl1"))
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_engine_single_slot_decode_routes_lut_gemv(tl1_model):
+    cfg, params = tl1_model
+    eng = Engine(params, cfg, batch_slots=1, max_seq=32)
+    eng.submit(Request(rid=0, prompt=[3, 1, 4], max_new_tokens=3))
+    done = eng.run()
+    assert len(done) == 1 and len(done[0].out_tokens) == 3
+    decs = eng.kernel_decisions()
+    gemv = [d for d in decs if d.regime == "gemv"]
+    assert gemv, "single-slot decode recorded no GEMV dispatches"
+    assert all(d.n == 1 and d.kernel == "lut_gemv" for d in gemv)
+    assert not [d for d in decs if d.regime == "gemm"]
+
+
+def test_prefill_routes_mxu_mad_kernels(tl1_model):
+    cfg, params = tl1_model
+    packed = lm.pack(params, cfg)
+    state = lm.init_state(cfg, 1, 32)
+    toks = jnp.asarray(np.arange(8, dtype=np.int32)[None, :] % cfg.vocab)
+    mark = dispatch.decision_count()
+    logits, state = lm.prefill(packed, {"tokens": toks}, cfg, state)
+    assert np.isfinite(np.asarray(logits)).all()
+    decs = dispatch.decisions_since(mark)
+    assert decs and all(d.regime == "gemm" for d in decs)
+    assert all(d.kernel in ("xla", "pallas", "int4") for d in decs), \
+        "prefill must take the MAD/MXU kernels, not the LUT GEMV path"
+
+
+def test_engine_multi_slot_takes_gemm_regime(tl1_model):
+    cfg, params = tl1_model
+    eng = Engine(params, cfg, batch_slots=3, max_seq=32)
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt=[1, 2], max_new_tokens=2))
+    eng.run()
+    decs = eng.kernel_decisions()
+    assert decs and all(d.regime == "gemm" and d.n == 3 for d in decs)
+    assert all(d.kernel != "lut_gemv" for d in decs)
+
+
+def test_engine_plan_override_threads_through(tl1_model):
+    cfg, params = tl1_model
+    eng = Engine(params, cfg, batch_slots=1, max_seq=32,
+                 plan=KernelPlan(gemv="xla", gemm="xla"))
+    eng.submit(Request(rid=0, prompt=[5, 6], max_new_tokens=2))
+    eng.run()
+    decs = eng.kernel_decisions()
+    assert decs and all(d.kernel == "xla" and d.source == "override" for d in decs)

@@ -197,7 +197,7 @@ def test_sharded_train_step_subprocess():
         from repro.data.pipeline import DataConfig, DataIterator
 
         mesh = jax.make_mesh((2, 4), ("data", "model"))
-        jax.set_mesh(mesh)
+        sharding.set_mesh(mesh)  # version-compat shim (jax.set_mesh is 0.5+)
         cfg = configs.smoke("qwen1.5-0.5b").replace(
             dtype="float32", d_model=192, n_heads=4, n_kv_heads=4, d_head=48,
             act_shard=(("data",), None, None))
@@ -235,7 +235,7 @@ def test_sharded_decode_subprocess():
         from repro.core.bitlinear import QuantConfig
 
         mesh = jax.make_mesh((2, 4), ("data", "model"))
-        jax.set_mesh(mesh)
+        sharding.set_mesh(mesh)  # version-compat shim (jax.set_mesh is 0.5+)
         cfg = configs.smoke("qwen1.5-0.5b").replace(
             dtype="float32", d_model=192, n_heads=4, n_kv_heads=4, d_head=48,
             quant=QuantConfig(mode="quant", fmt="i2s"))

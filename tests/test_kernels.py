@@ -8,8 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypo import given, settings, st
 
 from repro.core import quant
 from repro.core.qtensor import pack_ternary
@@ -92,6 +91,77 @@ def test_lut_gemv_kernel(k, m, lossless):
     else:
         rel = np.abs(np.asarray(y) - y_ref).max() / max(np.abs(y_ref).max(), 1)
         assert rel < 0.05
+
+
+def test_tl2k_kernel_twok_tail_only():
+    """K below one g-tile (3·256) → _tl2k takes the pure TL1 tail path."""
+    from repro.core import packing
+
+    rng = np.random.default_rng(2)
+    k, m = 16, 8
+    w = jnp.asarray(rng.integers(-1, 2, size=(m, k)), jnp.int8)
+    x_q = jnp.asarray(rng.integers(-127, 128, size=(3, k)), jnp.int8)
+    assert packing.tl2k_split_k(k) == (0, 16)
+    pw = pack_ternary(w, jnp.float32(1.0), "tl2k")
+    assert pw.three_k == 0 and set(pw.planes) == {"tail"}
+    y = ops.mpgemm_pallas(x_q, jnp.float32(1.0), pw, interpret=INTERPRET)
+    np.testing.assert_array_equal(
+        np.asarray(y, np.int64),
+        np.asarray(ref.mpgemm_int32(x_q, w), np.int64))
+
+
+@pytest.mark.parametrize("lossless", [True, False])
+def test_lut_gemv_batched_fallback(lossless):
+    """Multi-row inputs route through the registry's batched LUT kernels
+    instead of silently building a LUT from the first row only."""
+    from repro.core import dispatch
+
+    rng = np.random.default_rng(8)
+    k, m = 512, 64
+    w = jnp.asarray(rng.integers(-1, 2, size=(m, k)), jnp.int8)
+    pw = pack_ternary(w, jnp.float32(1.0), "tl1")
+    x2 = jnp.asarray(rng.integers(-127, 128, size=(3, k)), jnp.int8)
+    mark = dispatch.decision_count()
+    y = ops.lut_gemv(x2, jnp.float32(1.0), pw, lossless=lossless, interpret=INTERPRET)
+    assert y.shape == (3, m)
+    dec = dispatch.decisions_since(mark)[0]
+    assert dec.source == "lut_gemv_fallback"
+    assert dec.kernel == ("tl1_lut" if lossless else "tl1_lut_lossy")
+    y_ref = np.asarray(ref.mpgemm_int32(x2, w))
+    if lossless:
+        np.testing.assert_array_equal(np.asarray(y, np.int64), y_ref.astype(np.int64))
+    else:
+        rel = np.abs(np.asarray(y) - y_ref).max() / max(np.abs(y_ref).max(), 1)
+        assert rel < 0.05
+
+
+def test_lut_gemv_accepts_leading_singletons():
+    rng = np.random.default_rng(4)
+    k, m = 512, 64
+    w = jnp.asarray(rng.integers(-1, 2, size=(m, k)), jnp.int8)
+    pw = pack_ternary(w, jnp.float32(1.0), "tl1")
+    x = jnp.asarray(rng.integers(-127, 128, size=(k,)), jnp.int8)
+    y1 = ops.lut_gemv(x, jnp.float32(1.0), pw, interpret=INTERPRET)
+    y2 = ops.lut_gemv(x[None, :], jnp.float32(1.0), pw, interpret=INTERPRET)
+    y3 = ops.lut_gemv(x[None, None, :], jnp.float32(1.0), pw, interpret=INTERPRET)
+    assert y1.shape == (m,) and y2.shape == (1, m) and y3.shape == (1, 1, m)
+    np.testing.assert_array_equal(np.asarray(y2)[0], np.asarray(y1))
+    np.testing.assert_array_equal(np.asarray(y3)[0, 0], np.asarray(y1))
+
+
+def test_lut_gemv_shape_validation():
+    rng = np.random.default_rng(5)
+    k, m = 512, 64
+    w = jnp.asarray(rng.integers(-1, 2, size=(m, k)), jnp.int8)
+    pw_tl1 = pack_ternary(w, jnp.float32(1.0), "tl1")
+    pw_i2s = pack_ternary(w, jnp.float32(1.0), "i2s")
+    x = jnp.asarray(rng.integers(-127, 128, size=(k,)), jnp.int8)
+    with pytest.raises(ValueError, match="tl1 weights"):
+        ops.lut_gemv(x, jnp.float32(1.0), pw_i2s, interpret=INTERPRET)
+    with pytest.raises(ValueError, match="does not match"):
+        ops.lut_gemv(x[: k // 2], jnp.float32(1.0), pw_tl1, interpret=INTERPRET)
+    with pytest.raises(ValueError, match="scalar activation scale"):
+        ops.lut_gemv(x, jnp.ones((4,), jnp.float32), pw_tl1, interpret=INTERPRET)
 
 
 def test_lut_gemv_matches_algorithm3_literal():

@@ -14,6 +14,7 @@ import numpy as np
 import pytest
 
 from repro import configs
+from repro.core import dispatch
 from repro.core.bitlinear import QuantConfig
 from repro.data.pipeline import DataConfig, DataIterator
 from repro.infer.engine import generate
@@ -56,7 +57,7 @@ def test_lossless_inference_formats(trained):
 
     # lossless LUT variants (pack-and-unpack): TL1_1 / TL2_1
     for fmt in ("tl1", "tl2"):
-        qcfg = QuantConfig(mode="quant", fmt=fmt, lut="lossless")
+        qcfg = QuantConfig(mode="quant", fmt=fmt, plan=dispatch.lut_plan(fmt))
         packed = lm.pack(state["params"], cfg.replace(quant=qcfg))
         got = _logits(cfg.replace(quant=qcfg), packed, toks)
         np.testing.assert_allclose(got, qat, atol=5e-4, rtol=1e-4)
@@ -69,7 +70,8 @@ def test_lossy_variants_deviate_boundedly(trained):
     scale = np.abs(qat).max()
 
     # TL*_0: int8-requantized LUT (T-MAC style)
-    qcfg = QuantConfig(mode="quant", fmt="tl2", lut="lossy")
+    qcfg = QuantConfig(mode="quant", fmt="tl2",
+                       plan=dispatch.lut_plan("tl2", lossless=False))
     got = _logits(cfg.replace(quant=qcfg), lm.pack(state["params"], cfg.replace(quant=qcfg)), toks)
     rel0 = np.abs(got - qat).max() / scale
     assert 0 < rel0 < 0.1
