@@ -4,6 +4,7 @@
   bench_quality  — Table 2: lossless / lossy inference quality
   bench_tradeoff — Fig 8 / Appendix A-B: compute-memory trade-off vs batch
   bench_roofline — §Roofline: aggregated dry-run terms per (arch × shape)
+  bench_serve    — serving matrix: dense/paged × token/chunked, TTFT vs load
 
 Prints ``name,us_per_call,derived`` CSV.
 """
@@ -13,10 +14,12 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import bench_mpgemm, bench_quality, bench_roofline, bench_tradeoff
+    from benchmarks import (bench_mpgemm, bench_quality, bench_roofline,
+                            bench_serve, bench_tradeoff)
 
     print("name,us_per_call,derived")
-    for mod in (bench_mpgemm, bench_quality, bench_tradeoff, bench_roofline):
+    for mod in (bench_mpgemm, bench_quality, bench_tradeoff, bench_roofline,
+                bench_serve):
         try:
             for name, us, derived in mod.run():
                 print(f"{name},{us:.1f},{derived}")

@@ -16,6 +16,7 @@ from repro.core.bitlinear import QuantConfig
 from repro.core.dispatch import KernelPlan
 from repro.infer.engine import Engine, Request
 from repro.models import lm
+from repro.serve import ServeConfig, ServeEngine
 
 
 def main():
@@ -53,6 +54,26 @@ def main():
 
     same = results["i2s"] == results["tl2k"] == results["tl1_lossless"]
     print("lossless formats generate identically:", same)
+
+    # the serving subsystem (DESIGN.md §7): paged KV + chunked prefill +
+    # admission scheduling, same tokens as the dense engine in the
+    # composition-invariant act="token" quant mode.
+    cfg = base.replace(quant=QuantConfig(mode="quant", fmt="i2s", act="token"))
+    dense = Engine(params, cfg, batch_slots=3, max_seq=96)
+    srv = ServeEngine(params, cfg, ServeConfig(
+        batch_slots=3, max_seq=96, paged=True, block_size=16,
+        prefill_chunk=8))
+    for i, p in enumerate(prompts):
+        dense.submit(Request(rid=i, prompt=p, max_new_tokens=12))
+        srv.submit(Request(rid=i, prompt=p, max_new_tokens=12),
+                   priority=i % 2)
+    ref = {r.rid: r.out_tokens for r in dense.run()}
+    t0 = time.perf_counter()
+    got = {r.rid: r.out_tokens for r in srv.run()}
+    s = srv.metrics_summary()
+    print(f"paged+chunked : {s['generated_tokens']} tokens in "
+          f"{time.perf_counter() - t0:5.2f}s, ttft p95 {s['ttft_p95']:.2f}s, "
+          f"matches dense: {got == ref}")
 
 
 if __name__ == "__main__":

@@ -217,10 +217,29 @@ def lut_plan(fmt: str, lossless: bool = True) -> KernelPlan:
 # ---------------------------------------------------------------------------
 
 
+_CHUNK_BUCKETS: set[int] = set()
+
+
+def register_chunk_bucket(n: int) -> None:
+    """Pin an exact N-bucket for a serving prefill-chunk size.
+
+    The serving engine's chunked prefill always dispatches at exactly
+    N = chunk, so snapping that N to its own bucket lets the autotune cache
+    store a winner for the shape that actually runs, instead of smearing it
+    into the next power of two (a 48-token chunk would otherwise share the
+    64 bucket).  Power-of-two chunks are already exact; idempotent.
+    """
+    if n > 1:
+        _CHUNK_BUCKETS.add(int(n))
+
+
 def n_bucket(n: int) -> int:
-    """Bucket the flattened batch: 1 (GEMV) or next power of two ≤ 512."""
+    """Bucket the flattened batch: 1 (GEMV), a registered prefill-chunk
+    size (exact), or the next power of two ≤ 512."""
     if n <= 1:
         return 1
+    if n in _CHUNK_BUCKETS:
+        return n
     b = 2
     while b < n and b < 512:
         b *= 2
@@ -256,7 +275,11 @@ class AutotuneCache:
             raise ValueError("AutotuneCache.save needs a path")
         tmp = path + ".tmp"
         with open(tmp, "w") as f:
-            json.dump({"version": 1, "entries": self.entries}, f, indent=1, sort_keys=True)
+            # chunk buckets travel WITH the cache: keys for N=chunk entries
+            # only resolve if the loading process pins the same buckets.
+            json.dump({"version": 1, "entries": self.entries,
+                       "chunk_buckets": sorted(_CHUNK_BUCKETS)},
+                      f, indent=1, sort_keys=True)
         os.replace(tmp, path)
         self.path = path
         return path
@@ -265,6 +288,8 @@ class AutotuneCache:
     def load(cls, path: str) -> "AutotuneCache":
         with open(path) as f:
             blob = json.load(f)
+        for c in blob.get("chunk_buckets", ()):
+            register_chunk_bucket(c)
         return cls(entries=blob.get("entries", {}), path=path)
 
 

@@ -1,10 +1,12 @@
-"""Batched serving engine: slot-based continuous batching over decode steps.
+"""Batched serving engine — legacy facade over ``repro.serve`` (DESIGN.md §7).
 
-The engine owns B decode slots.  New requests are admitted into free slots
-and consume their prompt token-by-token (prefill phase) while other slots
-keep generating — all through ONE jitted step with per-slot positions
-(paused slots pass position −1; their cache writes land in the trash slot).
-Finished sequences retire and free their slot immediately.
+:class:`Engine` keeps the original slot-based continuous-batching contract
+(dense ``[slots, max_seq]`` KV caches, prompts consumed token-by-token inside
+the one jitted decode tick, FIFO admission) by instantiating
+:class:`repro.serve.engine.ServeEngine` with ``paged=False,
+prefill_chunk=1``.  New code should use ServeEngine directly — it adds the
+paged block-pool KV cache, chunked prefill, priority/deadline admission with
+preemption, and per-request telemetry.
 
 Weights are packed (the paper's convert step) before serving; with per-tensor
 int8 activation quant + i2s/tl*_1 formats, decode is lossless w.r.t. the
@@ -13,117 +15,29 @@ b1.58 training scheme (paper Figure 2).
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import dispatch
 from repro.core.dispatch import KernelPlan
-from repro.models import lm
 from repro.models.config import ModelConfig
+from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.scheduler import Request  # noqa: F401  (legacy import site)
 
 
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: list                  # token ids
-    max_new_tokens: int = 16
-    temperature: float = 0.0      # 0 → greedy
-    out_tokens: list = dataclasses.field(default_factory=list)
-    done: bool = False
+class Engine(ServeEngine):
+    """Dense token-by-token continuous batching (the pre-serve behaviour).
 
+    The jitted step always batches all ``batch_slots`` (idle slots pad at
+    pos −1), so only a ``batch_slots=1`` engine takes the N=1 GEMV regime
+    (``lut_gemv`` for tl1); larger engines always dispatch GEMM — see
+    :meth:`kernel_decisions`.
+    """
 
-@dataclasses.dataclass
-class _Slot:
-    req: Request
-    cursor: int = 0               # tokens of the prompt already consumed
-
-
-class Engine:
     def __init__(self, params, cfg: ModelConfig, *, batch_slots: int = 4,
                  max_seq: int = 256, pack: bool = True, seed: int = 0,
                  plan: KernelPlan | None = None):
-        if plan is not None:
-            cfg = cfg.with_plan(plan)
-        self.cfg = cfg
-        self.params = lm.pack(params, cfg) if pack and cfg.quant.mode == "quant" else params
-        self.slots: list[_Slot | None] = [None] * batch_slots
-        self.max_seq = max_seq
-        self.state = lm.init_state(cfg, batch_slots, max_seq)
-        self.key = jax.random.PRNGKey(seed)
-        self.queue: list[Request] = []
-        self._decision_mark = dispatch.decision_count()
-        self._step_fn = jax.jit(partial(_decode, cfg=cfg))
-
-    def kernel_decisions(self) -> tuple:
-        """mpGEMM dispatch decisions recorded since this engine was built.
-
-        Decisions are logged at trace time, so a single-shape serving run
-        yields one decision per BitLinear per traced step shape.  The regime
-        follows the engine's SLOT COUNT, not the number of busy slots: the
-        jitted step always batches all ``batch_slots`` (idle slots pad at
-        pos −1), so only a ``batch_slots=1`` engine takes the N=1 GEMV
-        regime (``lut_gemv`` for tl1); larger engines always dispatch GEMM.
-        """
-        return dispatch.decisions_since(self._decision_mark)
-
-    def submit(self, req: Request) -> None:
-        self.queue.append(req)
-
-    def step(self) -> list[Request]:
-        """One decode tick for every busy slot; returns finished requests."""
-        b = len(self.slots)
-        for i in range(b):
-            if self.slots[i] is None and self.queue:
-                self.slots[i] = _Slot(self.queue.pop(0))
-
-        toks = np.zeros((b, 1), np.int32)
-        pos = np.full((b,), -1, np.int32)
-        for i, sl in enumerate(self.slots):
-            if sl is None:
-                continue
-            r = sl.req
-            if sl.cursor < len(r.prompt):
-                toks[i, 0] = r.prompt[sl.cursor]
-            else:
-                toks[i, 0] = r.out_tokens[-1]
-            pos[i] = sl.cursor
-
-        logits, self.state = self._step_fn(
-            self.params, jnp.asarray(toks), jnp.asarray(pos), self.state
-        )
-        finished = []
-        for i, sl in enumerate(self.slots):
-            if sl is None:
-                continue
-            r = sl.req
-            sl.cursor += 1
-            if sl.cursor < len(r.prompt):
-                continue  # still prefilling
-            if r.temperature > 0:
-                self.key, sub = jax.random.split(self.key)
-                nxt = int(jax.random.categorical(sub, logits[i, 0] / r.temperature))
-            else:
-                nxt = int(jnp.argmax(logits[i, 0]))
-            r.out_tokens.append(nxt)
-            if len(r.out_tokens) >= r.max_new_tokens or sl.cursor >= self.max_seq - 1:
-                r.done = True
-                finished.append(r)
-                self.slots[i] = None
-        return finished
-
-    def run(self) -> list[Request]:
-        done: list[Request] = []
-        while self.queue or any(s is not None for s in self.slots):
-            done.extend(self.step())
-        return done
-
-
-def _decode(params, toks, pos, state, *, cfg: ModelConfig):
-    return lm.decode_step(params, toks, pos, cfg, state)
+        super().__init__(
+            params, cfg,
+            ServeConfig(batch_slots=batch_slots, max_seq=max_seq,
+                        paged=False, prefill_chunk=1),
+            pack=pack, seed=seed, plan=plan)
 
 
 def generate(params, cfg: ModelConfig, prompts: list, *, max_new_tokens: int = 16,

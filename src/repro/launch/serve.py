@@ -1,11 +1,20 @@
-"""Serving launcher: pack a ternary model and run the batched engine.
+"""Serving launcher: pack a ternary model and run the serving engine.
 
 CPU smoke:  python -m repro.launch.serve --arch qwen1.5-0.5b --smoke
+Paged path: python -m repro.launch.serve --smoke --paged --prefill-chunk 16
+
 Kernel routing is shape-aware (DESIGN.md §5): an engine sized to one slot
 (--slots 1) decodes in the GEMV regime (true-LUT kernel for tl1); any larger
 slot count always batches all slots — idle ones pad — so it dispatches the
-GEMM regime.  Inspect with --explain, override with --gemv/--gemm, measure with
---autotune (winners persist to the cache JSON and steer future runs).
+GEMM regime.  Prefill CHUNKS (--prefill-chunk > 1) flatten to N=chunk and
+always take the GEMM/MAD kernels.  Inspect with --explain, override with
+--gemv/--gemm, measure with --autotune (winners persist to the cache JSON).
+
+Serving subsystem flags (DESIGN.md §7): --paged switches the KV cache to the
+block-pool layout (--block-size / --kv-blocks size it), --prefill-chunk
+enables chunked prefill, and --bursty N replays N request bursts against the
+admission scheduler and prints per-request telemetry (TTFT, queue wait,
+throughput, preemptions).
 
 A real deployment would restore packed params from the checkpoint store and
 pjit decode_step over the serving mesh (the dry-run proves that lowering).
@@ -23,8 +32,9 @@ from repro import configs
 from repro.core import dispatch
 from repro.core.bitlinear import QuantConfig
 from repro.core.dispatch import KernelPlan
-from repro.infer.engine import Engine, Request
+from repro.infer.engine import Engine
 from repro.models import lm
+from repro.serve import Request, ServeConfig, ServeEngine
 
 
 def build_plan(args) -> KernelPlan:
@@ -36,6 +46,26 @@ def build_plan(args) -> KernelPlan:
         # historical behavior: lut was silently ignored for non-LUT formats
         print(f"[serve] --lut has no effect for fmt={args.fmt!r} (ignored)")
     return KernelPlan(gemv=args.gemv, gemm=args.gemm, backend=args.backend)
+
+
+def make_engine(args, params, cfg):
+    if not (args.paged or args.prefill_chunk > 1 or args.bursty):
+        return Engine(params, cfg, batch_slots=args.slots, max_seq=args.max_seq)
+    return ServeEngine(params, cfg, ServeConfig(
+        batch_slots=args.slots, max_seq=args.max_seq, paged=args.paged,
+        block_size=args.block_size,
+        kv_blocks=args.kv_blocks or None,
+        prefill_chunk=args.prefill_chunk))
+
+
+def submit_burst(eng, cfg, rng, rids, max_new):
+    for rid in rids:
+        prompt = rng.integers(0, cfg.vocab, size=rng.integers(3, 9)).tolist()
+        req = Request(rid=rid, prompt=prompt, max_new_tokens=max_new)
+        if isinstance(eng, ServeEngine) and not isinstance(eng, Engine):
+            eng.submit(req, priority=int(rng.integers(0, 3)))
+        else:
+            eng.submit(req)
 
 
 def main():
@@ -63,6 +93,18 @@ def main():
     ap.add_argument("--slots", type=int, default=3)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=128)
+    # serving subsystem (DESIGN.md §7)
+    ap.add_argument("--paged", action="store_true",
+                    help="paged block-pool KV cache instead of dense slots")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV block size in tokens (paged)")
+    ap.add_argument("--kv-blocks", type=int, default=0,
+                    help="total KV pool blocks (0 → slots·ceil(max_seq/bs))")
+    ap.add_argument("--prefill-chunk", type=int, default=1,
+                    help="prompt tokens per prefill chunk (1 → token-by-token)")
+    ap.add_argument("--bursty", type=int, default=0,
+                    help="bursty-arrival simulation: N bursts of --requests "
+                         "requests with decode ticks between bursts")
     ap.add_argument("--ckpt", default="", help="restore packed params from here")
     args = ap.parse_args()
 
@@ -79,7 +121,8 @@ def main():
                   f"({len(dispatch.active_cache().entries)} entries)")
 
     d, f = cfg.d_model, cfg.d_ff or cfg.d_model
-    layer_shapes = [(n, k, m) for n in (1, args.slots)
+    batch_ns = [1, args.slots] + ([args.prefill_chunk] if args.prefill_chunk > 1 else [])
+    layer_shapes = [(n, k, m) for n in batch_ns
                     for (k, m) in ((d, d), (d, f), (f, d))]
     if args.explain:
         for n, k, m in layer_shapes:
@@ -96,19 +139,38 @@ def main():
         from repro.ckpt import store
         params, _ = store.restore(params, args.ckpt)
 
-    eng = Engine(params, cfg, batch_slots=args.slots, max_seq=args.max_seq)
+    eng = make_engine(args, params, cfg)
     rng = np.random.default_rng(0)
-    for i in range(args.requests):
-        prompt = rng.integers(0, cfg.vocab, size=rng.integers(3, 9)).tolist()
-        eng.submit(Request(rid=i, prompt=prompt, max_new_tokens=args.max_new))
 
     t0 = time.perf_counter()
-    done = eng.run()
+    if args.bursty:
+        done = []
+        for b in range(args.bursty):
+            submit_burst(eng, cfg, rng,
+                         range(b * args.requests, (b + 1) * args.requests),
+                         args.max_new)
+            for _ in range(args.max_new // 2 + 1):  # partial drain per burst
+                done.extend(eng.step())
+        while eng.sched.pending or any(s is not None for s in eng.slots):
+            done.extend(eng.step())
+    else:
+        submit_burst(eng, cfg, rng, range(args.requests), args.max_new)
+        done = eng.run()
     dt = time.perf_counter() - t0
+
     toks = sum(len(r.out_tokens) for r in done)
-    print(f"[serve] {args.arch} fmt={args.fmt}: "
+    mode = (f"paged(bs={args.block_size})" if args.paged else "dense") + \
+           (f"+chunk{args.prefill_chunk}" if args.prefill_chunk > 1 else "+token")
+    print(f"[serve] {args.arch} fmt={args.fmt} {mode}: "
           f"{len(done)} requests, {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s on CPU; see benchmarks for TPU projections)")
+    if isinstance(eng, ServeEngine) and not isinstance(eng, Engine):
+        s = eng.metrics_summary()
+        print(f"  ttft p50/p95 = {s['ttft_p50']:.3f}/{s['ttft_p95']:.3f}s  "
+              f"queue p95 = {s['queue_wait_p95']:.3f}s  "
+              f"preemptions = {s['preemptions']}"
+              + (f"  kv free/total = {s['kv_blocks_free']}/{s['kv_blocks']}"
+                 if args.paged else ""))
     routed = sorted({(dc.regime, dc.n, dc.kernel, dc.source)
                      for dc in eng.kernel_decisions()})
     for regime, n, kernel, source in routed:

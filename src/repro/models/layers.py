@@ -148,6 +148,84 @@ def _cache_read_raw(cache: dict):
 
 
 # ---------------------------------------------------------------------------
+# Paged KV cache (serving subsystem, DESIGN.md §7): one pool of fixed-size
+# blocks shared by every sequence, indirected through a per-sequence block
+# table.  Pools have NO batch dim — the table is the only per-slot state.
+# ---------------------------------------------------------------------------
+
+
+def paged_attn_state_init(cfg: ModelConfig, num_blocks: int, block_size: int) -> dict:
+    """Block pool for one attention layer: [num_blocks + 1, block_size, ...].
+
+    The last block is the trash block: paused slots (pos < 0) and unallocated
+    table entries land there; its pos rows stay −1 so reads always mask it.
+    Unlike the dense ring cache, local (windowed) layers allocate full-length
+    logical ranges — the window is enforced by the attention mask, and block
+    frees for out-of-window history are a scheduler policy, not a layout one.
+    """
+    nb1 = num_blocks + 1
+    kvh, dh = cfg.n_kv_heads, cfg.d_head
+    if cfg.kv_dtype == "int8":
+        z = jnp.zeros((nb1, block_size, kvh, dh), jnp.int8)
+        s = jnp.zeros((nb1, block_size, kvh), F32)
+        cache = {"k": z, "v": z, "ks": s, "vs": s}
+    else:
+        z = jnp.zeros((nb1, block_size, kvh, dh), jnp.bfloat16)
+        cache = {"k": z, "v": z}
+    cache["pos"] = jnp.full((nb1, block_size), -1, jnp.int32)
+    return cache
+
+
+def _paged_cache_write(cache: dict, k, v, positions: jax.Array,
+                       table: jax.Array) -> dict:
+    """Scatter S new kv rows through the block table.
+
+    k/v: [B, S, KV, dh]; positions: [B, S] absolute (−1 → trash block);
+    table: [B, L] physical block ids (unallocated entries point at trash).
+    """
+    nb1, bs = cache["k"].shape[:2]
+    trash = nb1 - 1
+    active = positions >= 0
+    lblk = jnp.minimum(jnp.maximum(positions, 0) // bs, table.shape[1] - 1)
+    phys = jnp.take_along_axis(table, lblk, axis=1)             # [B, S]
+    phys = jnp.where(active, phys, trash)
+    off = jnp.where(active, positions % bs, 0)
+    pos_w = jnp.where(active, positions, -1)
+    out = dict(cache)
+    if "ks" in cache:
+        kq, ks = _kv_quant(k)
+        vq, vs = _kv_quant(v)
+        out["k"] = cache["k"].at[phys, off].set(kq)
+        out["v"] = cache["v"].at[phys, off].set(vq)
+        out["ks"] = cache["ks"].at[phys, off].set(ks)
+        out["vs"] = cache["vs"].at[phys, off].set(vs)
+    else:
+        out["k"] = cache["k"].at[phys, off].set(k.astype(cache["k"].dtype))
+        out["v"] = cache["v"].at[phys, off].set(v.astype(cache["v"].dtype))
+    out["pos"] = cache["pos"].at[phys, off].set(pos_w)
+    return out
+
+
+def _paged_read_raw(cache: dict, table: jax.Array):
+    """Block-gather the pool into per-sequence [B, L·bs, ...] views.
+
+    Gather order is LOGICAL block order, so the result is position-ordered
+    regardless of physical block placement — downstream attention is
+    identical to the dense layout (same (k, v, ks, vs, pos) contract).
+    """
+    b, l = table.shape
+    bs = cache["k"].shape[1]
+
+    def gather(a):
+        g = a[table]                                            # [B, L, bs, ...]
+        return g.reshape((b, l * bs) + a.shape[2:])
+
+    ks = gather(cache["ks"]) if "ks" in cache else None
+    vs = gather(cache["vs"]) if "ks" in cache else None
+    return gather(cache["k"]), gather(cache["v"]), ks, vs, gather(cache["pos"])
+
+
+# ---------------------------------------------------------------------------
 # Attention core: online-softmax blockwise (prefill/train) + cached decode
 # ---------------------------------------------------------------------------
 
@@ -296,11 +374,16 @@ def attn_apply(
     state: dict | None = None,
     pos: jax.Array | None = None,
     bidirectional: bool = False,
+    table: jax.Array | None = None,
+    chunked: bool = False,
 ):
     """Self-attention ('attn' global causal, 'local' windowed, encoder bidi).
 
     pos: None (train, 0-based), scalar (prefill / lockstep decode), or [B]
     (continuous-batching decode with per-slot positions).
+    table: [B, L] block table → the cache is a paged pool (serving).
+    chunked: S > 1 writes are a prefill CHUNK — attend over the whole cache
+    (which already contains earlier chunks), not just the fresh k/v.
     """
     b, s, _ = x.shape
     window = cfg.window if kind == "local" else None
@@ -315,15 +398,37 @@ def attn_apply(
 
     new_state = state
     if state is not None:
-        new_state = _cache_write(state, k, v, positions, kind, cfg)
+        if table is not None:
+            new_state = _paged_cache_write(state, k, v, positions, table)
+        else:
+            new_state = _cache_write(state, k, v, positions, kind, cfg)
         if s == 1:  # decode: attend over the cache
             # Direct (non-scan) attention: one einsum over the cache length.
             # Unlike the KV-block scan this partitions cleanly when the cache
             # seq dim is sharded (perf iteration q-2: the scan's reshape +
             # moveaxis forced GSPMD to all-gather the whole stacked cache —
             # 19.3 GB/device/step on qwen3 decode_32k).
-            kc, vc, ks, vs, kp = _cache_read_raw(new_state)
+            kc, vc, ks, vs, kp = (
+                _paged_read_raw(new_state, table) if table is not None
+                else _cache_read_raw(new_state))
             out = _decode_attention(q, kc, vc, ks, vs, kp, positions, window)
+            return _attn_out(p, out, cfg, b, s), new_state
+        if table is not None or chunked:
+            # Chunked prefill: earlier chunks live only in the cache, so the
+            # chunk queries blockwise-attend over the (quantized) cache —
+            # which also matches token-by-token prefill numerics exactly:
+            # both read every key, including a token's own, post-quant.
+            kc, vc, ks, vs, kp = (
+                _paged_read_raw(new_state, table) if table is not None
+                else _cache_read_raw(new_state))
+            out = blockwise_attention(
+                jnp.swapaxes(q, 1, 2), jnp.swapaxes(kc, 1, 2),
+                jnp.swapaxes(vc, 1, 2),
+                q_pos=positions, k_pos=kp, causal=True, window=window,
+                block_k=cfg.attn_block,
+                k_scale=None if ks is None else jnp.swapaxes(ks, 1, 2),
+                v_scale=None if vs is None else jnp.swapaxes(vs, 1, 2),
+            )
             return _attn_out(p, out, cfg, b, s), new_state
     out = blockwise_attention(
         jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
@@ -549,7 +654,11 @@ def rglru_apply(p, x, cfg: ModelConfig, *, state=None, pos=None):
             lambda l, r_: (l[0] * r_[0], l[1] * r_[0] + r_[1]), (a, bterm), axis=1
         )
         y = bb
-        new_state = None if state is None else {"h": bb[:, -1], "conv": new_hist}
+        if state is not None:
+            # chunked prefill: fold the carried hidden state in — h_t with
+            # init h0 is cumprod(a)_t · h0 + (zero-init response)_t.
+            y = aa * state["h"][:, None] + bb
+        new_state = None if state is None else {"h": y[:, -1], "conv": new_hist}
     out = y * jax.nn.gelu(gate)
     return bitlinear.apply(p["out"], out.astype(x.dtype), cfg.quant), new_state
 
@@ -582,11 +691,12 @@ def ssd_state_init(cfg: ModelConfig, batch: int) -> dict:
     }
 
 
-def _ssd_chunked(a_log, xbar, bm, cm, chunk: int):
+def _ssd_chunked(a_log, xbar, bm, cm, chunk: int, h0=None):
     """Pure-jnp SSD (state-space duality), same math as kernels/ssd_scan.
 
     a_log [B,L,H]; xbar [B,L,H,P]; bm/cm [B,L,S] (single group shared by
-    heads).  lax.scan over chunks carries the [B,H,P,S] state.
+    heads).  lax.scan over chunks carries the [B,H,P,S] state; ``h0`` is the
+    initial carry (chunked serving prefill), zeros when None.
     """
     b, l, h = a_log.shape
     p = xbar.shape[-1]
@@ -615,7 +725,8 @@ def _ssd_chunked(a_log, xbar, bm, cm, chunk: int):
         hc = a_c[:, :, None, None] * hc + s_c
         return hc, out
 
-    h0 = jnp.zeros((b, h, p, s), F32)
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, s), F32)
     h_last, h_in = jax.lax.scan(
         step, h0, (jnp.moveaxis(a_chunk, 1, 0), jnp.moveaxis(s_chunk, 1, 0))
     )
@@ -654,7 +765,11 @@ def ssd_apply(p, x, cfg: ModelConfig, *, state=None, pos=None, chunk: int = 64):
         y = jnp.einsum("bs,bhps->bhp", cmat[:, 0], hnew)[:, None]
         new_state = {"h": hnew, "conv": new_hist}
     else:
-        y, h_last = _ssd_chunked(a_log, xbar, bmat, cmat, min(chunk, l))
+        c = min(chunk, l)
+        if l % c:  # chunked serving prefill may pass non-multiple lengths
+            c = l
+        y, h_last = _ssd_chunked(a_log, xbar, bmat, cmat, c,
+                                 h0=state["h"] if state is not None else None)
         new_state = None if state is None else {"h": h_last, "conv": new_hist}
 
     y = y + p["D"][None, None, :, None] * xh                      # skip term

@@ -77,8 +77,14 @@ def constrain_acts(x: jax.Array, cfg: ModelConfig) -> jax.Array:
     return x
 
 
-def block_apply(kind, p, x, cfg: ModelConfig, *, state=None, pos=None, enc_out=None):
-    """Returns (x, new_state, aux)."""
+def block_apply(kind, p, x, cfg: ModelConfig, *, state=None, pos=None, enc_out=None,
+                table=None, chunked=False):
+    """Returns (x, new_state, aux).
+
+    table/chunked flow to self-attention only: a [B, L] block table switches
+    the KV cache to the paged pool layout (serving), and chunked marks S > 1
+    writes as prefill chunks that must attend over the whole cache.
+    """
     aux = jnp.zeros((), F32)
     x = constrain_acts(x, cfg)
     if kind in ("attn", "local", "enc", "xattn"):
@@ -89,6 +95,8 @@ def block_apply(kind, p, x, cfg: ModelConfig, *, state=None, pos=None, enc_out=N
             p["attn"], h, cfg, "local" if kind == "local" else "attn",
             state=state if kind != "xattn" else _self_cache(state),
             pos=pos, bidirectional=(kind == "enc"),
+            table=table if kind != "xattn" else None,
+            chunked=chunked if kind != "xattn" else False,
         )
         x = x + a
         if kind == "xattn":
@@ -165,7 +173,7 @@ def stack_state_init(cfg: ModelConfig, batch: int, max_seq: int, pattern=None, n
 
 
 def stack_apply(params, x, cfg: ModelConfig, *, states=None, pos=None,
-                enc_out=None, pattern=None):
+                enc_out=None, pattern=None, table=None, chunked=False):
     pattern = pattern or cfg.block_pattern
     reps = None
     for s in params["scan"]:
@@ -192,7 +200,8 @@ def stack_apply(params, x, cfg: ModelConfig, *, states=None, pos=None,
                 new_ss = []
                 for i, kind in enumerate(pattern):
                     x, ns, a = block_apply(kind, ps[i], x, cfg, state=ss[i],
-                                           pos=pos, enc_out=enc_out)
+                                           pos=pos, enc_out=enc_out,
+                                           table=table, chunked=chunked)
                     aux = aux + a
                     new_ss.append(ns)
                 return (x, aux), tuple(new_ss)
@@ -207,7 +216,8 @@ def stack_apply(params, x, cfg: ModelConfig, *, states=None, pos=None,
     for i, p in enumerate(params["rest"]):
         kind = pattern[i]
         st = states["rest"][i] if states is not None else None
-        x, ns, a = block_apply(kind, p, x, cfg, state=st, pos=pos, enc_out=enc_out)
+        x, ns, a = block_apply(kind, p, x, cfg, state=st, pos=pos, enc_out=enc_out,
+                               table=table, chunked=chunked)
         aux = aux + a
         new_rest.append(ns)
 
@@ -301,6 +311,37 @@ def init_state(cfg: ModelConfig, batch: int, max_seq: int):
     return stack_state_init(cfg, batch, max_seq, pattern=pattern)
 
 
+def init_paged_state(cfg: ModelConfig, batch: int, num_blocks: int,
+                     block_size: int):
+    """Decode state with PAGED attention caches (serving, DESIGN.md §7).
+
+    Attention layers get a batch-free block pool [num_blocks + 1, block_size,
+    ...] shared by every slot (the +1 is the trash block); indirection happens
+    through the [batch, L] block table passed to :func:`decode_step` /
+    :func:`prefill_chunk`.  Recurrent / conv states stay per-slot (they are
+    O(d_inner), not O(seq) — nothing to page).
+    """
+    if cfg.is_encdec():
+        raise ValueError("paged serving supports decoder-only self-attention "
+                         "stacks (enc-dec cross caches are per-request dense)")
+    pattern = cfg.block_pattern
+    reps, rem = cfg.pattern_layers()
+
+    def one(kind):
+        if kind in ("attn", "local"):
+            return L.paged_attn_state_init(cfg, num_blocks, block_size)
+        return block_state_init(cfg, kind, batch, max_seq=block_size)
+
+    def stacked(kind):
+        st = one(kind)
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (reps,) + a.shape), st)
+
+    scan = tuple(stacked(k) for k in pattern) if reps else tuple(None for _ in pattern)
+    rest = [one(pattern[i]) for i in range(rem)]
+    return {"scan": scan, "rest": rest}
+
+
 def prefill(params, batch: dict, cfg: ModelConfig, state):
     """Fill caches from a prompt; returns (last-position logits, state)."""
     enc_out = None
@@ -316,13 +357,36 @@ def prefill(params, batch: dict, cfg: ModelConfig, state):
     return _head(params, x[:, -1:], cfg), state
 
 
-def decode_step(params, tok: jax.Array, pos: jax.Array, cfg: ModelConfig, state):
-    """One token [B, 1] at absolute position pos -> (logits [B,1,V], state)."""
+def decode_step(params, tok: jax.Array, pos: jax.Array, cfg: ModelConfig, state,
+                *, table=None):
+    """One token [B, 1] at absolute position pos -> (logits [B,1,V], state).
+
+    With ``table`` [B, L] the attention caches are paged block pools
+    (init_paged_state) and reads/writes go through the block-gather path.
+    """
     pattern = ("xattn",) if cfg.is_encdec() else None
     x = _embed(params, tok, cfg)
     x, state, _ = stack_apply(params["stack"], x, cfg, states=state, pos=pos,
-                              pattern=pattern)
+                              pattern=pattern, table=table)
     return _head(params, x, cfg), state
+
+
+def prefill_chunk(params, tok: jax.Array, pos: jax.Array, cfg: ModelConfig,
+                  state, *, table=None):
+    """Consume a prompt CHUNK [B, C] starting at absolute position ``pos``.
+
+    Unlike :func:`prefill` (whole prompt, fresh-KV attention) this attends
+    over the cache itself, so chunk N sees chunks 0..N−1; the returned logits
+    are for the chunk's LAST position only ([B, 1, V]).  C > 1 flattens to
+    batch N = C in the mpGEMM dispatch — chunks ride the GEMM (MAD/MXU)
+    regime while single-token decode keeps the GEMV regime (DESIGN.md §5/§7).
+    """
+    if cfg.is_encdec():
+        raise ValueError("chunked prefill supports decoder-only stacks")
+    x = _embed(params, tok, cfg)
+    x, state, _ = stack_apply(params["stack"], x, cfg, states=state, pos=pos,
+                              table=table, chunked=True)
+    return _head(params, x[:, -1:], cfg), state
 
 
 def pack(params, cfg: ModelConfig):

@@ -1,0 +1,18 @@
+"""Serving subsystem (DESIGN.md §7): paged KV cache, chunked prefill,
+admission scheduling, and per-request telemetry.
+
+Public surface:
+
+    ServeEngine / ServeConfig   the tick-loop engine (engine.py)
+    Request / Submission        request + scheduling envelope (scheduler.py)
+    PagedKVConfig               block-pool geometry (kvcache.py)
+    RequestMetrics / ServeStats telemetry (metrics.py)
+
+``repro.infer.engine.Engine`` is a thin legacy facade over ServeEngine
+(dense KV, token-by-token prefill, FIFO admission).
+"""
+
+from repro.serve.engine import ServeConfig, ServeEngine  # noqa: F401
+from repro.serve.kvcache import BlockAllocator, PagedKVConfig  # noqa: F401
+from repro.serve.metrics import RequestMetrics, ServeStats  # noqa: F401
+from repro.serve.scheduler import AdmissionScheduler, Request, Submission  # noqa: F401

@@ -1,0 +1,404 @@
+"""The serving engine (DESIGN.md §7): paged KV + chunked prefill + scheduler.
+
+One :class:`ServeEngine` owns B slots over ONE model decode state and runs a
+tick loop; each tick it (1) admits queued requests — gated on free KV blocks,
+preempting strictly-lower-priority work when the scheduler says so, (2)
+advances every prefilling slot by one prompt chunk (a batch-1 [1, C] call →
+the GEMM/MAD dispatch regime), and (3) runs one batched decode step for every
+slot past its prompt ([B, 1] — the GEMV regime at one slot).  Sampling is a
+single jitted call over all slots per tick (one host sync), not a per-slot
+``argmax``.
+
+Legacy compatibility: ``prefill_chunk=1, paged=False`` reproduces the
+original ``infer.engine.Engine`` semantics exactly — prompts consumed
+token-by-token inside the batched decode tick, dense ``[slots, max_seq]``
+caches, FIFO admission — which is what the facade in ``repro.infer.engine``
+instantiates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import lru_cache, partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dispatch
+from repro.core.dispatch import KernelPlan
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.serve import kvcache, prefill
+from repro.serve.kvcache import BlockAllocator, BlockTables, PagedKVConfig
+from repro.serve.metrics import RequestMetrics, ServeStats
+from repro.serve.scheduler import AdmissionScheduler, Request, Submission
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Engine-level serving policy (model policy lives in ModelConfig)."""
+
+    batch_slots: int = 4
+    max_seq: int = 256
+    paged: bool = False           # paged block-pool KV vs dense [B, max_seq]
+    block_size: int = 16
+    kv_blocks: int | None = None  # pool size; None → slots · ceil(max_seq/bs)
+    prefill_chunk: int = 1        # tokens per prefill chunk; 1 → legacy ticks
+    preemption: bool = True       # evict lower-priority work under pressure
+
+
+@dataclasses.dataclass
+class _Slot:
+    sub: Submission
+    tokens: list                  # history: prompt (+ resume) + generated
+    n_base: int                   # prefix length that is prompt/resume
+    cursor: int = 0               # positions written to the KV cache so far
+
+
+def _decode_tick(params, toks, pos, state, table, *, cfg: ModelConfig, paged: bool):
+    return lm.decode_step(params, toks, pos, cfg, state,
+                          table=table if paged else None)
+
+
+# Jitted callables are cached per (cfg, paged) at module level so every
+# engine over the same config shares one trace/executable cache — a new
+# ServeEngine (benchmark cells, replicas) pays zero re-compilation.
+@lru_cache(maxsize=None)
+def _jitted_step(cfg: ModelConfig, paged: bool):
+    return jax.jit(partial(_decode_tick, cfg=cfg, paged=paged))
+
+
+@lru_cache(maxsize=None)
+def _jitted_chunk(cfg: ModelConfig, paged: bool):
+    return prefill.make_chunk_fn(cfg, paged=paged)
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ModelConfig, serve: ServeConfig | None = None,
+                 *, pack: bool = True, seed: int = 0,
+                 plan: KernelPlan | None = None, clock=time.perf_counter):
+        if plan is not None:
+            cfg = cfg.with_plan(plan)
+        self.cfg = cfg
+        self.scfg = scfg = serve or ServeConfig()
+        self.max_seq = scfg.max_seq   # legacy attribute
+        self.params = lm.pack(params, cfg) if pack and cfg.quant.mode == "quant" else params
+        self.slots: list[_Slot | None] = [None] * scfg.batch_slots
+        self.sched = AdmissionScheduler()
+        self.stats = ServeStats()
+        self.key = jax.random.PRNGKey(seed)
+        self._clock = clock
+        self._chunked = scfg.prefill_chunk > 1
+        self._pending_scrub: list[int] = []
+        self._stall_ticks = 0
+        self._has_recurrent = any(k in ("rec", "ssd") for k in cfg.block_pattern)
+
+        if (scfg.paged or self._chunked) and cfg.is_encdec():
+            raise ValueError("paged/chunked serving supports decoder-only "
+                             "stacks; enc-dec models use the dense engine")
+        if scfg.paged:
+            self.pcfg = PagedKVConfig.for_engine(
+                scfg.batch_slots, scfg.max_seq, scfg.block_size, scfg.kv_blocks)
+            self.allocator = BlockAllocator(self.pcfg)
+            self.tables = BlockTables(scfg.batch_slots, self.pcfg)
+            self.state = lm.init_paged_state(
+                cfg, scfg.batch_slots, self.pcfg.num_blocks, self.pcfg.block_size)
+        else:
+            self.pcfg = None
+            self.allocator = None
+            self.tables = None
+            self.state = lm.init_state(cfg, scfg.batch_slots, scfg.max_seq)
+            self._dummy_table = jnp.zeros((scfg.batch_slots, 1), jnp.int32)
+
+        self._decision_mark = dispatch.decision_count()
+        self._step_fn = _jitted_step(cfg, scfg.paged)
+        self._chunk_fn = _jitted_chunk(cfg, scfg.paged) if self._chunked else None
+        self._sample_fn = _SAMPLE_FN
+        if self._chunked:
+            dispatch.register_chunk_bucket(scfg.prefill_chunk)
+
+    # -- introspection ------------------------------------------------------
+
+    def kernel_decisions(self) -> tuple:
+        """mpGEMM dispatch decisions recorded since this engine was built.
+
+        Decisions are logged at trace time.  The batched decode tick always
+        steps all ``batch_slots`` (idle slots pad at pos −1), so only a
+        single-slot engine takes the N=1 GEMV regime (``lut_gemv`` for tl1);
+        prefill CHUNKS flatten to N=chunk and always dispatch GEMM.  Jitted
+        steps are shared per (cfg, paged) across engines — a second engine
+        over an already-traced config records no new decisions (nothing was
+        re-dispatched; the cached executable embeds the same routing).
+        """
+        return dispatch.decisions_since(self._decision_mark)
+
+    def metrics_summary(self) -> dict:
+        out = self.stats.summary()
+        if self.pcfg is not None:
+            out["kv_blocks"] = self.pcfg.num_blocks
+            out["kv_blocks_free"] = self.allocator.free_count
+        return out
+
+    # -- request lifecycle --------------------------------------------------
+
+    def submit(self, req: Request, *, priority: int = 0,
+               deadline: float | None = None) -> Submission:
+        if not req.prompt:
+            raise ValueError(
+                f"request {req.rid}: empty prompt (nothing to decode from); "
+                "submit at least one token")
+        if len(req.prompt) > self.scfg.max_seq - 1:
+            raise ValueError(
+                f"request {req.rid}: prompt of {len(req.prompt)} tokens "
+                f"cannot fit max_seq={self.scfg.max_seq} with room to "
+                "generate; raise max_seq or truncate the prompt")
+        m = RequestMetrics(rid=req.rid, prompt_len=len(req.prompt),
+                           submit_t=self._clock())
+        return self.sched.submit(Submission(req=req, priority=priority,
+                                            deadline=deadline, metrics=m))
+
+    def step(self) -> list[Request]:
+        """One scheduler tick: admit → prefill chunks → batched decode.
+        Returns requests that finished this tick."""
+        now = self._clock()
+        finished: list[Request] = []
+        progress = self._admit(now)
+        # decode candidacy snapshots BEFORE chunking: a slot that finishes its
+        # prompt this tick emits its first token from chunk logits and joins
+        # the decode tick on the NEXT step (chunks interleave, not stack).
+        decode_idx = [i for i, sl in enumerate(self.slots)
+                      if sl is not None
+                      and (not self._chunked or sl.cursor >= sl.n_base)]
+        if self._chunked:
+            progress |= self._prefill_tick(now, finished)
+        progress |= self._decode_tick_host(decode_idx, now, finished)
+        if progress or finished:
+            self._stall_ticks = 0
+        else:
+            self._stall_ticks += 1
+            if self._stall_ticks > 3:
+                raise RuntimeError(
+                    "serving stalled: no slot can make progress (KV pool too "
+                    "small for the admitted sequences and nothing evictable; "
+                    "raise --kv-blocks or lower concurrency)")
+        return finished
+
+    def run(self) -> list[Request]:
+        done: list[Request] = []
+        while self.sched.pending or any(s is not None for s in self.slots):
+            done.extend(self.step())
+        return done
+
+    # -- admission + preemption ---------------------------------------------
+
+    def _running(self):
+        return [(i, sl.sub) for i, sl in enumerate(self.slots) if sl is not None]
+
+    def _admit(self, now) -> bool:
+        progress = False
+        while self.sched.pending:
+            best = self.sched.peek_best()
+            free_idx = next((i for i, s in enumerate(self.slots) if s is None), None)
+            if free_idx is None:
+                victim = (AdmissionScheduler.pick_victim(
+                    self._running(), min_priority=best.priority)
+                    if self.scfg.preemption else None)
+                if victim is None:
+                    break
+                self._evict(victim, now)
+                progress = True
+                continue
+            if self.pcfg is not None:
+                if not AdmissionScheduler.admissible(
+                        best, self.allocator.free_count, self.pcfg):
+                    victim = (AdmissionScheduler.pick_victim(
+                        self._running(), min_priority=best.priority)
+                        if self.scfg.preemption else None)
+                    if victim is None:
+                        break  # head-of-line blocks (FIFO semantics)
+                    self._evict(victim, now)
+                    progress = True
+                    continue
+                got = self.allocator.alloc(best.req.rid,
+                                           best.blocks_needed(self.pcfg))
+                self._pending_scrub.extend(got)
+                self.tables.set_row(free_idx, self.allocator.owned(best.req.rid))
+            self.sched.take(best)
+            toks = list(best.tokens())
+            self.slots[free_idx] = _Slot(sub=best, tokens=toks, n_base=len(toks))
+            if self._has_recurrent:  # slot reuse must not inherit h/conv carry
+                self.state = kvcache.reset_slot_states(self.state, self.cfg,
+                                                       free_idx)
+            if best.metrics.admit_t is None:
+                best.metrics.admit_t = now
+            progress = True
+        return progress
+
+    def _evict(self, idx: int, now) -> None:
+        """Preemption-by-eviction: free the slot + its blocks, re-enqueue at
+        the queue front with the full generated history (lossless resume)."""
+        sl = self.slots[idx]
+        sub = sl.sub
+        sub.resume_tokens = list(sub.req.prompt) + list(sub.req.out_tokens)
+        if self.pcfg is not None:
+            self.allocator.release(sub.req.rid)
+            self.tables.clear_row(idx)
+        sub.metrics.n_preemptions += 1
+        self.sched.requeue(sub)
+        self.slots[idx] = None
+
+    def preempt_slot(self, idx: int) -> None:
+        """Explicit eviction hook (tests / operator tooling)."""
+        if self.slots[idx] is None:
+            raise ValueError(f"slot {idx} is idle")
+        self._evict(idx, self._clock())
+
+    def _ensure_blocks(self, idx: int, sl: _Slot, n_tokens: int, now) -> bool:
+        """Grow ``sl``'s allocation to cover ``n_tokens`` positions.  On pool
+        exhaustion, evict a strictly-worse slot (lower priority, or same
+        priority but later arrival); False → the caller stalls this tick."""
+        if self.pcfg is None:
+            return True
+        rid = sl.sub.req.rid
+        need = self.pcfg.blocks_for(n_tokens) - len(self.allocator.owned(rid))
+        if need <= 0:
+            return True
+        got = self.allocator.alloc(rid, need)
+        if got is None and self.scfg.preemption:
+            victim = AdmissionScheduler.pick_victim(
+                self._running(), worse_than=sl.sub, exclude=idx)
+            if victim is not None:
+                self._evict(victim, now)
+                got = self.allocator.alloc(rid, need)
+        if got is None:
+            return False
+        self._pending_scrub.extend(got)
+        self.tables.set_row(idx, self.allocator.owned(rid))
+        return True
+
+    def defrag(self) -> None:
+        """Compact the block pool: in-use blocks → lowest physical ids.  A
+        pure relabeling (gather + table rewrite); decode output is unchanged."""
+        if self.pcfg is None:
+            return
+        self._flush_scrub()
+        src, remap = self.allocator.compact()
+        self.state = kvcache.apply_compaction(self.state, self.cfg, src)
+        self.tables.remap(remap)
+
+    def _flush_scrub(self) -> None:
+        if self._pending_scrub:
+            self.state = kvcache.scrub_blocks(self.state, self.cfg,
+                                              self._pending_scrub)
+            self._pending_scrub = []
+
+    def _table_dev(self):
+        return self.tables.device() if self.pcfg is not None else self._dummy_table
+
+    # -- ticks --------------------------------------------------------------
+
+    def _prefill_tick(self, now, finished) -> bool:
+        progress = False
+        for i, sl in enumerate(self.slots):
+            if sl is None or sl.cursor >= sl.n_base:
+                continue
+            end = min(sl.n_base, sl.cursor + self.scfg.prefill_chunk)
+            if not self._ensure_blocks(i, sl, end, now):
+                continue  # stalled on blocks this tick
+            self._flush_scrub()
+            toks = jnp.asarray(np.asarray([sl.tokens[sl.cursor:end]], np.int32))
+            logits, self.state = self._chunk_fn(
+                self.params, self.state, self._table_dev(), toks,
+                jnp.int32(sl.cursor), jnp.int32(i))
+            sl.cursor = end
+            sl.sub.metrics.n_prefill_chunks += 1
+            progress = True
+            if sl.cursor >= sl.n_base:  # prompt done: first token from chunk
+                self.key, sk = jax.random.split(self.key)
+                tok = self._sample_fn(
+                    logits[:, -1, :],
+                    jnp.asarray([sl.sub.req.temperature], jnp.float32), sk)
+                self._emit(i, sl, int(tok[0]), now, finished)
+        return progress
+
+    def _decode_tick_host(self, decode_idx: list, now, finished) -> bool:
+        b = len(self.slots)
+        toks = np.zeros((b, 1), np.int32)
+        pos = np.full((b,), -1, np.int32)
+        staged = []
+        for i in decode_idx:
+            sl = self.slots[i]
+            if sl is None:
+                continue  # finished or evicted earlier this tick
+            if not self._ensure_blocks(i, sl, sl.cursor + 1, now):
+                continue
+            toks[i, 0] = sl.tokens[sl.cursor]
+            pos[i] = sl.cursor
+            staged.append((i, sl))
+        # a later slot's growth may have PREEMPTED an earlier staged slot:
+        # drop evictees AND reset their staged position to −1 — a pos ≥ 0
+        # write would land in the trash block (their table row now points at
+        # it) and record a real position there, breaking the trash pos = −1
+        # invariant every sequence's masking relies on.  Their progress
+        # resumes via re-prefill after re-admission.
+        kept = []
+        for i, sl in staged:
+            if self.slots[i] is sl:
+                kept.append((i, sl))
+            else:
+                toks[i, 0] = 0
+                pos[i] = -1
+        staged = kept
+        if not staged:
+            return False
+        self._flush_scrub()
+        logits, self.state = self._step_fn(
+            self.params, jnp.asarray(toks), jnp.asarray(pos), self.state,
+            self._table_dev())
+        temps = np.zeros((b,), np.float32)
+        for i, sl in staged:
+            temps[i] = sl.sub.req.temperature
+        self.key, sk = jax.random.split(self.key)
+        sampled = np.asarray(self._sample_fn(
+            logits[:, 0, :], jnp.asarray(temps), sk))     # ONE host sync/tick
+        for i, sl in staged:
+            sl.cursor += 1
+            if sl.cursor < sl.n_base:
+                continue  # token-mode prefill still consuming the prompt
+            self._emit(i, sl, int(sampled[i]), now, finished)
+        return True
+
+    def _emit(self, idx: int, sl: _Slot, tok: int, now, finished) -> None:
+        req = sl.sub.req
+        m = sl.sub.metrics
+        sl.tokens.append(tok)
+        req.out_tokens.append(tok)
+        if m.first_token_t is None:
+            m.first_token_t = now
+        m.n_generated = len(req.out_tokens)
+        if len(req.out_tokens) >= req.max_new_tokens or sl.cursor >= self.scfg.max_seq - 1:
+            req.done = True
+            m.finish_t = now
+            if self.pcfg is not None:
+                self.allocator.release(req.rid)
+                self.tables.clear_row(idx)
+            self.stats.add(m)
+            self.slots[idx] = None
+            finished.append(req)
+
+
+def _sample_batched(logits, temps, key):
+    """[B, V] logits + per-slot temperatures → [B] tokens, one device call.
+
+    temp == 0 → exact argmax (bitwise-identical to per-slot greedy); temp > 0
+    → Gumbel-max categorical at that temperature."""
+    greedy = jnp.argmax(logits, axis=-1)
+    g = jax.random.gumbel(key, logits.shape, jnp.float32)
+    t = jnp.maximum(temps, 1e-6)[:, None]
+    samp = jnp.argmax(logits / t + g, axis=-1)
+    return jnp.where(temps > 0, samp, greedy).astype(jnp.int32)
+
+
+_SAMPLE_FN = jax.jit(_sample_batched)

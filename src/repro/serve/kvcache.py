@@ -1,0 +1,232 @@
+"""Paged KV cache management (DESIGN.md §7).
+
+Device side, the pools live inside the model decode state
+(``models.layers.paged_attn_state_init`` — one [num_blocks + 1, block_size,
+...] pool per attention layer, last block = trash).  This module owns the
+HOST side of their lifecycle:
+
+  * :class:`BlockAllocator` — free-list allocation keyed by request id,
+    release, and :meth:`compact` (defragmentation: in-use blocks packed to
+    the front, returning the gather map the engine applies to the pools);
+  * :class:`BlockTables` — the numpy [slots, max_blocks] logical→physical
+    table with a lazily refreshed device mirror;
+  * :func:`scrub_blocks` — reset the ``pos`` rows of recycled blocks to −1
+    so a new owner never sees a previous sequence's keys (the pos mask is
+    the only read barrier; stale k/v bytes are harmless once masked).
+
+Pools are batch-free, so every helper that touches the model state walks it
+by layer kind: attention states are pools (block axis right after the
+pattern-scan ``reps`` axis), everything else is per-slot.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedKVConfig:
+    """Pool geometry.  ``max_blocks_per_seq`` bounds a sequence's logical
+    length (the block-table width L); ``num_blocks`` bounds total residency
+    across all slots — admission and preemption police the difference."""
+
+    block_size: int = 16
+    num_blocks: int = 64
+    max_blocks_per_seq: int = 16
+
+    @property
+    def trash_block(self) -> int:
+        return self.num_blocks  # pools allocate num_blocks + 1; last = trash
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return max(1, -(-n_tokens // self.block_size))
+
+    @classmethod
+    def for_engine(cls, batch_slots: int, max_seq: int, block_size: int = 16,
+                   num_blocks: int | None = None) -> "PagedKVConfig":
+        per_seq = max(1, -(-max_seq // block_size))
+        if num_blocks is None:
+            num_blocks = batch_slots * per_seq
+        return cls(block_size=block_size, num_blocks=num_blocks,
+                   max_blocks_per_seq=per_seq)
+
+
+class BlockAllocator:
+    """Free-list block allocator; ownership tracked per request id."""
+
+    def __init__(self, pcfg: PagedKVConfig):
+        self.pcfg = pcfg
+        self._free: collections.deque[int] = collections.deque(range(pcfg.num_blocks))
+        self._owned: dict[int, list[int]] = {}
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    def owned(self, rid: int) -> list[int]:
+        return self._owned.get(rid, [])
+
+    def can_alloc(self, n: int) -> bool:
+        return len(self._free) >= n
+
+    def alloc(self, rid: int, n: int) -> list[int] | None:
+        """Append ``n`` blocks to ``rid``'s run; None (no change) if the pool
+        cannot satisfy the whole request — partial grants would leave the
+        caller with an unusable mid-sequence hole."""
+        if n <= 0:
+            return []
+        if len(self._free) < n:
+            return None
+        got = [self._free.popleft() for _ in range(n)]
+        self._owned.setdefault(rid, []).extend(got)
+        return got
+
+    def release(self, rid: int) -> list[int]:
+        """Free every block owned by ``rid`` (eviction / completion)."""
+        blocks = self._owned.pop(rid, [])
+        self._free.extend(blocks)
+        return blocks
+
+    def compact(self) -> tuple[np.ndarray, np.ndarray]:
+        """Defragment: renumber in-use blocks to the lowest physical ids.
+
+        Returns ``(src, remap)`` over the FULL pool incl. trash: the engine
+        gathers each pool as ``pool[src]`` (``src[new] = old``) and rewrites
+        tables as ``remap[table]`` (``remap[old] = new``).  Ownership lists
+        and the free list are updated in place.
+        """
+        nb = self.pcfg.num_blocks
+        src = np.arange(nb + 1, dtype=np.int32)
+        remap = np.arange(nb + 1, dtype=np.int32)
+        nxt = 0
+        for rid in sorted(self._owned):
+            blocks = self._owned[rid]
+            for j, old in enumerate(blocks):
+                src[nxt] = old
+                remap[old] = nxt
+                blocks[j] = nxt
+                nxt += 1
+        used = set(src[:nxt].tolist())
+        leftovers = [b for b in range(nb) if b not in used]
+        for i, old in enumerate(leftovers):
+            src[nxt + i] = old
+            remap[old] = nxt + i
+        self._free = collections.deque(range(nxt, nb))
+        return src, remap
+
+
+class BlockTables:
+    """Host [slots, max_blocks] logical→physical table + device mirror.
+
+    Unallocated entries point at the trash block, whose pos rows are −1
+    forever — gathered reads of unallocated ranges are always masked."""
+
+    def __init__(self, slots: int, pcfg: PagedKVConfig):
+        self.pcfg = pcfg
+        self.np = np.full((slots, pcfg.max_blocks_per_seq),
+                          pcfg.trash_block, np.int32)
+        self._dev = None
+
+    def set_row(self, slot: int, blocks: list[int]) -> None:
+        row = np.full((self.pcfg.max_blocks_per_seq,), self.pcfg.trash_block,
+                      np.int32)
+        row[: len(blocks)] = blocks
+        self.np[slot] = row
+        self._dev = None
+
+    def clear_row(self, slot: int) -> None:
+        self.np[slot] = self.pcfg.trash_block
+        self._dev = None
+
+    def remap(self, remap: np.ndarray) -> None:
+        self.np = remap[self.np]
+        self._dev = None
+
+    def device(self):
+        import jax.numpy as jnp
+
+        if self._dev is None:
+            self._dev = jnp.asarray(self.np)
+        return self._dev
+
+
+# ---------------------------------------------------------------------------
+# State walking: apply per-layer fns to the {"scan": ..., "rest": ...} pytree
+# ---------------------------------------------------------------------------
+
+
+def map_layer_states(state, cfg, fn):
+    """Apply ``fn(layer_state, kind, stacked)`` to every layer sub-state.
+
+    ``stacked`` is True for pattern-scan states (extra leading ``reps``
+    axis).  ``fn`` must return the (possibly new) layer state."""
+    pattern = cfg.block_pattern
+    scan = tuple(
+        st if st is None else fn(st, pattern[i], True)
+        for i, st in enumerate(state["scan"])
+    )
+    rest = [st if st == () else fn(st, pattern[i], False)
+            for i, st in enumerate(state["rest"])]
+    return {"scan": scan, "rest": rest}
+
+
+def scrub_blocks(state, cfg, block_ids):
+    """Reset ``pos`` rows of recycled physical blocks to −1 in every
+    attention pool (eager jnp ops; a handful of tiny scatters)."""
+    import jax.numpy as jnp
+
+    ids = jnp.asarray(np.asarray(block_ids, np.int32))
+    if ids.size == 0:
+        return state
+
+    def one(st, kind, stacked):
+        if kind not in ("attn", "local"):
+            return st
+        out = dict(st)
+        if stacked:
+            out["pos"] = st["pos"].at[:, ids].set(-1)
+        else:
+            out["pos"] = st["pos"].at[ids].set(-1)
+        return out
+
+    return map_layer_states(state, cfg, one)
+
+
+def reset_slot_states(state, cfg, slot: int):
+    """Zero slot ``slot``'s recurrent / conv states (RG-LRU, SSD) on slot
+    reuse.  Attention caches need no reset: stale dense rows and paged
+    blocks are invalidated by the pos mask / table indirection, but a
+    recurrent hidden state has no position plane — a new occupant would
+    otherwise continue from the previous request's carry."""
+    import jax.numpy as jnp
+
+    def one(st, kind, stacked):
+        if kind not in ("rec", "ssd"):
+            return st
+        if stacked:
+            return jax.tree_util.tree_map(
+                lambda a: a.at[:, slot].set(jnp.zeros((), a.dtype)), st)
+        return jax.tree_util.tree_map(
+            lambda a: a.at[slot].set(jnp.zeros((), a.dtype)), st)
+
+    return map_layer_states(state, cfg, one)
+
+
+def apply_compaction(state, cfg, src):
+    """Gather every attention pool along the block axis: new[i] = old[src[i]].
+    Free-slot sources may carry stale bytes — tables never reference them."""
+    import jax.numpy as jnp
+
+    s = jnp.asarray(np.asarray(src, np.int32))
+
+    def one(st, kind, stacked):
+        if kind not in ("attn", "local"):
+            return st
+        return jax.tree_util.tree_map(
+            lambda a: a[:, s] if stacked else a[s], st)
+
+    return map_layer_states(state, cfg, one)

@@ -1,0 +1,100 @@
+"""Per-request serving telemetry (DESIGN.md §7).
+
+Every request carries one :class:`RequestMetrics` from submit to finish;
+:class:`ServeStats` aggregates finished requests into the summary the
+launcher prints and ``benchmarks/bench_serve.py`` persists (TTFT, queue
+wait, decode tok/s, preemption counts).  All timestamps come from the
+engine's injectable clock, so tests can drive a virtual clock.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class RequestMetrics:
+    rid: int
+    prompt_len: int = 0
+    submit_t: float = 0.0
+    admit_t: float | None = None
+    first_token_t: float | None = None
+    finish_t: float | None = None
+    n_generated: int = 0
+    n_prefill_chunks: int = 0
+    n_preemptions: int = 0
+
+    @property
+    def queue_wait(self) -> float | None:
+        """Submit → (first) admission.  Re-admissions after preemption do not
+        reset it — the user-visible wait is to the first byte of service."""
+        if self.admit_t is None:
+            return None
+        return self.admit_t - self.submit_t
+
+    @property
+    def ttft(self) -> float | None:
+        if self.first_token_t is None:
+            return None
+        return self.first_token_t - self.submit_t
+
+    @property
+    def decode_tok_s(self) -> float | None:
+        if self.finish_t is None or self.first_token_t is None:
+            return None
+        dt = self.finish_t - self.first_token_t
+        if dt <= 0 or self.n_generated <= 1:
+            return None
+        return (self.n_generated - 1) / dt
+
+    def as_dict(self) -> dict:
+        return {
+            "rid": self.rid, "prompt_len": self.prompt_len,
+            "queue_wait": self.queue_wait, "ttft": self.ttft,
+            "decode_tok_s": self.decode_tok_s,
+            "n_generated": self.n_generated,
+            "n_prefill_chunks": self.n_prefill_chunks,
+            "n_preemptions": self.n_preemptions,
+        }
+
+
+def percentile(vals, q: float) -> float | None:
+    """Nearest-rank percentile; None on empty input (no numpy dependency so
+    the module stays importable from anywhere, including docs tooling)."""
+    vals = sorted(v for v in vals if v is not None)
+    if not vals:
+        return None
+    idx = min(len(vals) - 1, max(0, round(q / 100.0 * (len(vals) - 1))))
+    return vals[idx]
+
+
+class ServeStats:
+    """Aggregator over finished requests."""
+
+    def __init__(self):
+        self.finished: list[RequestMetrics] = []
+
+    def add(self, m: RequestMetrics) -> None:
+        self.finished.append(m)
+
+    def summary(self) -> dict:
+        ms = self.finished
+        ttfts = [m.ttft for m in ms]
+        waits = [m.queue_wait for m in ms]
+        total_tokens = sum(m.n_generated for m in ms)
+        t0 = min((m.submit_t for m in ms), default=0.0)
+        t1 = max((m.finish_t for m in ms if m.finish_t is not None), default=t0)
+        span = t1 - t0
+        return {
+            "requests": len(ms),
+            "generated_tokens": total_tokens,
+            "throughput_tok_s": (total_tokens / span) if span > 0 else None,
+            "ttft_p50": percentile(ttfts, 50),
+            "ttft_p95": percentile(ttfts, 95),
+            "ttft_mean": (sum(t for t in ttfts if t is not None) /
+                          max(1, sum(t is not None for t in ttfts)))
+                         if any(t is not None for t in ttfts) else None,
+            "queue_wait_p50": percentile(waits, 50),
+            "queue_wait_p95": percentile(waits, 95),
+            "preemptions": sum(m.n_preemptions for m in ms),
+        }

@@ -1,0 +1,80 @@
+"""Chunked prefill (DESIGN.md §7): consume prompts in C-token chunks.
+
+A chunk runs as a batch-1 call of :func:`repro.models.lm.prefill_chunk`, so
+its flattened mpGEMM batch is N = C — prefill chunks ride the GEMM (MAD/MXU)
+regime of the PR-1 dispatch table while the engine's single-token decode tick
+keeps its regime (GEMV / ``lut_gemv`` at one slot).  Chunks for one slot
+interleave with decode ticks for the others.
+
+State surgery: the model decode state mixes PER-SLOT leaves (recurrent /
+conv states; dense KV rows) with SHARED paged pools (batch-free).  A chunk
+for slot *i* slices the per-slot leaves with ``dynamic_slice`` (traced *i* →
+one trace serves every slot), runs the chunk at batch 1, and merges the
+per-slot leaves back; shared pools pass through whole, already updated by
+the chunk's block-table writes.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.models import lm
+from repro.serve.kvcache import map_layer_states
+
+
+def _is_shared(kind: str, paged: bool) -> bool:
+    return paged and kind in ("attn", "local")
+
+
+def slice_slot(state, cfg, i, *, paged: bool):
+    """Extract slot ``i``'s batch-1 view of the decode state."""
+
+    def one(st, kind, stacked):
+        if _is_shared(kind, paged):
+            return st
+        axis = 1 if stacked else 0
+        return jax.tree_util.tree_map(
+            lambda a: jax.lax.dynamic_slice_in_dim(a, i, 1, axis), st)
+
+    return map_layer_states(state, cfg, one)
+
+
+def merge_slot(full, part, cfg, i, *, paged: bool):
+    """Write slot ``i``'s updated batch-1 state back into the full state."""
+    pattern = cfg.block_pattern
+
+    def merge_layer(f, p, kind, stacked):
+        if _is_shared(kind, paged):
+            return p  # the pool itself was updated in place-of
+        axis = 1 if stacked else 0
+        return jax.tree_util.tree_map(
+            lambda a, b: jax.lax.dynamic_update_slice_in_dim(a, b, i, axis),
+            f, p)
+
+    scan = tuple(
+        f if f is None else merge_layer(f, p, pattern[j], True)
+        for j, (f, p) in enumerate(zip(full["scan"], part["scan"]))
+    )
+    rest = [f if f == () else merge_layer(f, p, pattern[j], False)
+            for j, (f, p) in enumerate(zip(full["rest"], part["rest"]))]
+    return {"scan": scan, "rest": rest}
+
+
+def make_chunk_fn(cfg, *, paged: bool):
+    """Jitted ``(params, state, table, toks [1, C], pos0, slot) →
+    (last-position logits [1, 1, V], new state)``.
+
+    Retraces per distinct chunk length C (the final partial chunk of a
+    prompt), bounded by the configured chunk size.  ``table`` is traced but
+    unused (XLA prunes it) in dense mode.
+    """
+
+    def _chunk(params, state, table, toks, pos0, slot):
+        part = slice_slot(state, cfg, slot, paged=paged)
+        trow = (jax.lax.dynamic_slice_in_dim(table, slot, 1, 0)
+                if paged else None)
+        logits, newpart = lm.prefill_chunk(params, toks, pos0, cfg, part,
+                                           table=trow)
+        return logits, merge_slot(state, newpart, cfg, slot, paged=paged)
+
+    return jax.jit(_chunk)

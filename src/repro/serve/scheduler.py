@@ -1,0 +1,138 @@
+"""Admission scheduler: priority/deadline queueing, KV-gated admission,
+preemption victim selection (DESIGN.md §7).
+
+The queue is a :class:`collections.deque` — FIFO admission (all-default
+priorities) is O(1) via ``popleft``; with mixed priorities the scheduler
+scans for the best candidate (serving queues are short; an O(log n) heap
+would cost more in re-prioritisation churn than the scan does).
+
+Ordering: higher ``priority`` first, then earlier ``deadline`` (None sorts
+last), then arrival order.  Preempted submissions re-enter at the FRONT of
+their priority class carrying ``resume_tokens`` (prompt + everything already
+generated), so a re-admitted request re-prefills its full history and greedy
+decoding continues losslessly.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+
+from repro.serve.metrics import RequestMetrics
+
+
+@dataclasses.dataclass
+class Request:
+    """A generation request (re-exported as ``repro.infer.engine.Request``)."""
+
+    rid: int
+    prompt: list                  # token ids
+    max_new_tokens: int = 16
+    temperature: float = 0.0      # 0 → greedy
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class Submission:
+    """A queued request plus its scheduling envelope."""
+
+    req: Request
+    priority: int = 0             # higher = more urgent
+    deadline: float | None = None  # absolute clock time, None = best-effort
+    arrival: int = 0              # monotone submit sequence (FIFO tiebreak)
+    resume_tokens: list | None = None  # set on preemption re-enqueue
+    metrics: RequestMetrics | None = None
+
+    def tokens(self) -> list:
+        """What must be in the KV cache before decode continues."""
+        return self.resume_tokens if self.resume_tokens is not None else self.req.prompt
+
+    def blocks_needed(self, pcfg) -> int:
+        """Admission footprint: the full history + the first generated
+        token, clamped to the block-table width (a history ending exactly on
+        a block boundary would otherwise ask for one block more than any
+        sequence can ever address).  The ONE home of this rule."""
+        return min(pcfg.blocks_for(len(self.tokens()) + 1),
+                   pcfg.max_blocks_per_seq)
+
+    def sort_key(self) -> tuple:
+        return (-self.priority,
+                self.deadline if self.deadline is not None else math.inf,
+                self.arrival)
+
+
+class AdmissionScheduler:
+    def __init__(self):
+        self._q: collections.deque[Submission] = collections.deque()
+        self._seq = 0
+        self._plain = True  # every queued sub default-priority/no-deadline
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    @property
+    def pending(self) -> bool:
+        return bool(self._q)
+
+    def submit(self, sub: Submission) -> Submission:
+        sub.arrival = self._seq
+        self._seq += 1
+        if sub.priority != 0 or sub.deadline is not None:
+            self._plain = False
+        self._q.append(sub)
+        return sub
+
+    def requeue(self, sub: Submission) -> None:
+        """Preemption re-entry: front of the queue, original arrival kept."""
+        self._q.appendleft(sub)
+
+    def peek_best(self) -> Submission | None:
+        if not self._q:
+            return None
+        if self._plain:
+            return self._q[0]
+        return min(self._q, key=Submission.sort_key)
+
+    def pop_best(self) -> Submission | None:
+        best = self.peek_best()
+        if best is not None:
+            self._q.remove(best)  # O(1) when best is the head (FIFO path)
+        return best
+
+    def take(self, sub: Submission) -> None:
+        """Remove a specific submission (the engine admits what it peeked)."""
+        self._q.remove(sub)
+
+    @staticmethod
+    def admissible(sub: Submission, free_blocks: int | None, pcfg) -> bool:
+        """KV-gated admission: room for :meth:`Submission.blocks_needed`.
+        ``pcfg=None`` (dense cache) always admits."""
+        if pcfg is None or free_blocks is None:
+            return True
+        return free_blocks >= sub.blocks_needed(pcfg)
+
+    @staticmethod
+    def pick_victim(running: list, *, min_priority: int | None = None,
+                    worse_than: Submission | None = None,
+                    exclude: int | None = None) -> int | None:
+        """Choose the eviction victim among ``running = [(slot, Submission)]``:
+        lowest priority, then latest arrival (most recent work lost is
+        cheapest).  Eligibility — the ONE home of the preemption policy:
+        ``min_priority`` (admission) admits only victims STRICTLY below it;
+        ``worse_than`` (mid-decode growth) also allows equal-priority
+        later arrivals.  Preemption never displaces better-or-equal work.
+        """
+        cands = [(s, sub) for s, sub in running if s != exclude]
+        if min_priority is not None:
+            cands = [(s, sub) for s, sub in cands if sub.priority < min_priority]
+        if worse_than is not None:
+            cands = [(s, sub) for s, sub in cands
+                     if sub.priority < worse_than.priority
+                     or (sub.priority == worse_than.priority
+                         and sub.arrival > worse_than.arrival)]
+        if not cands:
+            return None
+        slot, _ = min(cands, key=lambda t: (t[1].priority, -t[1].arrival))
+        return slot
