@@ -1,0 +1,1 @@
+"""Benchmark harness package (see run.py for the per-paper-table modules)."""

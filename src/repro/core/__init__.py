@@ -1,14 +1,23 @@
-"""Core: the paper's contribution — ternary quantization, packing, mpGEMM."""
+"""Core: the paper's contribution — low-bit quantization, packing, mpGEMM.
+
+The format registry (``repro.core.formats``) and the parametric ELUT engine
+(``repro.core.elut``) generalize the ternary stack to any (base, group)
+element-wise-lookup format (paper Appendix).
+"""
 
 from repro.core.bitlinear import BitLinearParams, QuantConfig
-from repro.core.qtensor import FORMAT_BPW, PackedWeight, pack_ternary, pack_weight, unpack_weight
+from repro.core.formats import FormatSpec
+from repro.core.qtensor import (FORMAT_BPW, PackedWeight, pack_quantized,
+                                pack_ternary, pack_weight, unpack_weight)
 
 __all__ = [
     "BitLinearParams",
     "QuantConfig",
+    "FormatSpec",
     "PackedWeight",
     "FORMAT_BPW",
     "pack_weight",
+    "pack_quantized",
     "pack_ternary",
     "unpack_weight",
 ]

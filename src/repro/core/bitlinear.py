@@ -36,17 +36,13 @@ class QuantConfig:
 
     Kernel selection is carried by ``plan`` (a hashable
     :class:`repro.core.dispatch.KernelPlan`); the default auto-plan picks
-    per regime (decode GEMV vs batched GEMM) via the registry.  ``impl`` /
-    ``lut`` are the deprecated string flags — when either is set the legacy
-    shim in ``repro.core.mpgemm.mpgemm`` reproduces the historical routing
-    exactly, so old configs keep loading.
+    per regime (decode GEMV vs batched GEMM) via the registry.  ``fmt``
+    names any format registered in :mod:`repro.core.formats`.
     """
 
     mode: str = "quant"        # fp | qat | quant
     fmt: str = "i2s"           # weight packing format for quantized inference
     plan: KernelPlan = KernelPlan()  # shape-aware dispatch policy
-    impl: str | None = None    # DEPRECATED: xla | pallas (use plan)
-    lut: str | None = None     # DEPRECATED: "lossless" | "lossy" (use plan)
     act: str = "tensor"        # tensor | token | block   (activation quant)
     act_block: int = 256
     # FSDP: constrain the weight *slice* inside the layer scan to TP-only so
@@ -121,9 +117,6 @@ def _apply_quantized(pw: PackedWeight, x: jax.Array, cfg: QuantConfig) -> jax.Ar
         x_q, s_x = quant.absmax_int8_per_token(x)
     else:  # "tensor" — the lossless b1.58 scheme
         x_q, s_x = quant.absmax_int8(x)
-    if cfg.impl is not None or cfg.lut is not None:
-        # deprecation shim: legacy string flags keep their historical routing
-        return mpgemm.mpgemm(x_q, s_x, pw, impl=cfg.impl or "xla", lut=cfg.lut)
     return dispatch.mpgemm(x_q, s_x, pw, cfg.plan)
 
 

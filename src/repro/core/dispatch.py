@@ -17,9 +17,15 @@ module is the single seam where that selection lives:
   * :class:`AutotuneCache` persists measured winners as JSON keyed by
     ``(backend, fmt, M, K, N-bucket)``.
 
-Legacy ``impl=``/``lut=`` string flags are translated by the deprecation
-shim in :func:`repro.core.mpgemm.mpgemm`; no other call site should use
-them.
+Kernels are ENUMERATED from the format registry (``repro.core.formats``):
+every grouped ELUT format gets ``{fmt}_lut`` / ``{fmt}_lut_lossy`` XLA
+kernels and rides the parametric Pallas family, with cost hints *derived*
+from the spec (HBM bits/weight from the packed bpw or the one-hot operand
+C/g bytes; MXU inflation C/g = b^g/g).  Registering a new format in
+``formats.py`` is sufficient for it to appear here — no hand-listing.
+The enumeration runs at import time: a ``formats.register`` call made
+AFTER importing this module is not picked up by the existing KernelSpecs
+(register formats at ``formats.py`` import, the normal extension path).
 """
 
 from __future__ import annotations
@@ -33,8 +39,10 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core import elut as _elut
+from repro.core import formats as fmtreg
 from repro.core import mpgemm as _mp
-from repro.core.qtensor import FORMAT_BPW, PackedWeight
+from repro.core.qtensor import PackedWeight
 
 REGIMES = ("gemv", "gemm")
 
@@ -56,7 +64,8 @@ class KernelSpec:
     fn(x_q [..., K], s_x, pw, interpret) -> fp32 [..., M].  ``hbm_bpw`` is
     the per-weight HBM traffic in bits (None → the format's packed bpw, i.e.
     a fused in-VMEM decode); ``mxu_inflation`` is MXU work relative to the
-    plain int8 MAD dot (the LUT one-hot contraction costs ~C²/g ≈ 4.5×).
+    plain int8 MAD dot (the LUT one-hot contraction costs C/g = b^g/g —
+    4.5× for tl1; None derives it from the format registry per fmt).
     """
 
     name: str
@@ -65,29 +74,32 @@ class KernelSpec:
     fmts: tuple                   # PackedWeight formats this kernel accepts
     regimes: tuple = REGIMES      # ("gemv",) | ("gemm",) | both
     lossless: bool = True         # bit-exact vs the b1.58 scheme
-    hbm_bpw: float | None = None  # None → FORMAT_BPW[fmt] (fused decode)
-    mxu_inflation: float = 1.0
+    hbm_bpw: float | None = None  # None → the format's packed bpw (fused decode)
+    mxu_inflation: float | None = 1.0  # None → the format's C/g (LUT lookup)
     max_n: int | None = None      # hard cap on flattened batch (None = any)
-    k_align: int = 1              # required K divisibility
+    k_align: int = 1              # extra K divisibility beyond the format's
 
     def capable(self, fmt: str, regime: str, n: int, k: int, m: int) -> bool:
         if fmt not in self.fmts or regime not in self.regimes:
             return False
         if self.max_n is not None and n > self.max_n:
             return False
-        return k % self.k_align == 0
+        # a packable weight must exist (format alignment) AND the kernel's
+        # own tiling constraint must hold
+        return k % max(fmtreg.get(fmt).k_align, 1) == 0 and k % self.k_align == 0
 
     def cost(self, fmt: str, n: int, k: int, m: int) -> float:
         """Roofline cost hint in µs: max(HBM time, MXU time)."""
         bpw = self.hbm_bpw
-        if bpw is None:
-            bpw = FORMAT_BPW[fmt]
-        elif fmt == "fp":
-            bpw = 16.0
-        elif fmt == "int4":
-            bpw = 4.0
+        if bpw is None or fmt in ("fp", "int4"):
+            # fused decode (or a native-dtype dot): HBM traffic is the
+            # format's true packed bpw regardless of the kernel
+            bpw = fmtreg.bpw(fmt)
+        infl = self.mxu_inflation
+        if infl is None:
+            infl = fmtreg.get(fmt).mxu_inflation
         mem = (m * k * bpw / 8 + n * k) / _HBM_BYTES_PER_US
-        comp = 2.0 * n * m * k * self.mxu_inflation / _MXU_OPS_PER_US
+        comp = 2.0 * n * m * k * infl / _MXU_OPS_PER_US
         return max(mem, comp)
 
 
@@ -95,10 +107,16 @@ def _fn_xla(x_q, s_x, pw, interpret):
     return _mp.mpgemm_xla(x_q, s_x, pw)
 
 
-def _fn_lut(lossless, tl2=False):
+def _fn_elut(lossless):
     def fn(x_q, s_x, pw, interpret):
-        f = _mp.tl2_lut if tl2 else _mp.tl1_lut
-        return f(x_q, s_x, pw, lossless=lossless)
+        return _elut.elut_mpgemm(x_q, s_x, pw, lossless=lossless)
+
+    return fn
+
+
+def _fn_tl2_lut(lossless):
+    def fn(x_q, s_x, pw, interpret):
+        return _mp.tl2_lut(x_q, s_x, pw, lossless=lossless)
 
     return fn
 
@@ -118,9 +136,6 @@ def _fn_lut_gemv(lossless):
     return fn
 
 
-_MAD_FMTS = ("fp", "int4", "i2s", "tl1", "tl2", "tl2k", "tq1")
-_PALLAS_FMTS = ("i2s", "tl1", "tl2k")
-
 REGISTRY: dict[str, KernelSpec] = {}
 
 
@@ -131,25 +146,33 @@ def register(spec: KernelSpec) -> KernelSpec:
     return spec
 
 
-# The library kernels.  hbm_bpw for the XLA unpack path is 8 (the unpacked
-# int8 [M, K] operand materializes at HLO level); the XLA LUT kernels
-# materialize the one-hot [M, G, C] operand (~4.5 B / 4.67 B per weight).
-register(KernelSpec("xla", _fn_xla, "xla", _MAD_FMTS, hbm_bpw=8.0))
+# The library kernels, enumerated from the format registry (DESIGN.md §5).
+# hbm_bpw for the XLA unpack path is 8 (the unpacked int8 [M, K] operand
+# materializes at HLO level); the XLA LUT kernels materialize the one-hot
+# [M, G, C] operand — spec.lut_hbm_bpw = 8·C/g bits/weight (tl1: 36.0) —
+# and inflate MXU work by spec.mxu_inflation = C/g (tl1: 4.5×).
+register(KernelSpec("xla", _fn_xla, "xla", fmtreg.names(), hbm_bpw=8.0))
 register(KernelSpec("int4", _fn_xla, "xla", ("int4",), hbm_bpw=4.0))
-register(KernelSpec("tl1_lut", _fn_lut(True), "xla", ("tl1",),
-                    hbm_bpw=36.0, mxu_inflation=4.5))
-register(KernelSpec("tl1_lut_lossy", _fn_lut(False), "xla", ("tl1",),
-                    lossless=False, hbm_bpw=36.0, mxu_inflation=4.5))
-register(KernelSpec("tl2_lut", _fn_lut(True, tl2=True), "xla", ("tl2",),
-                    hbm_bpw=37.3, mxu_inflation=4.7))
-register(KernelSpec("tl2_lut_lossy", _fn_lut(False, tl2=True), "xla", ("tl2",),
-                    lossless=False, hbm_bpw=37.3, mxu_inflation=4.7))
-register(KernelSpec("pallas", _fn_pallas, "pallas", _PALLAS_FMTS))
-register(KernelSpec("lut_gemv", _fn_lut_gemv(True), "pallas", ("tl1",),
-                    regimes=("gemv",), mxu_inflation=4.5, max_n=1, k_align=4))
-register(KernelSpec("lut_gemv_lossy", _fn_lut_gemv(False), "pallas", ("tl1",),
-                    regimes=("gemv",), lossless=False, mxu_inflation=4.5,
-                    max_n=1, k_align=4))
+for _f in fmtreg.names():
+    _spec = fmtreg.get(_f)
+    if _spec.supports_lut_gemv():
+        _fns = (_fn_elut(True), _fn_elut(False))     # parametric ELUT path
+    elif _f == "tl2":
+        _fns = (_fn_tl2_lut(True), _fn_tl2_lut(False))  # mirror-consolidated
+    else:
+        continue
+    register(KernelSpec(f"{_f}_lut", _fns[0], "xla", (_f,),
+                        hbm_bpw=_spec.lut_hbm_bpw,
+                        mxu_inflation=_spec.mxu_inflation))
+    register(KernelSpec(f"{_f}_lut_lossy", _fns[1], "xla", (_f,),
+                        lossless=False, hbm_bpw=_spec.lut_hbm_bpw,
+                        mxu_inflation=_spec.mxu_inflation))
+register(KernelSpec("pallas", _fn_pallas, "pallas", fmtreg.pallas_formats()))
+for _lossless, _name in ((True, "lut_gemv"), (False, "lut_gemv_lossy")):
+    register(KernelSpec(
+        _name, _fn_lut_gemv(_lossless), "pallas", fmtreg.lut_gemv_formats(),
+        regimes=("gemv",), lossless=_lossless, max_n=1,
+        mxu_inflation=None))  # per-format C/g via the format registry
 
 
 def formats() -> tuple:
@@ -203,12 +226,13 @@ AUTO = KernelPlan()
 
 
 def lut_plan(fmt: str, lossless: bool = True) -> KernelPlan:
-    """Plan pinning the LUT computation model (paper TL*_1 / TL*_0) for ``fmt``."""
+    """Plan pinning the LUT computation model (paper TL*_1 / TL*_0 — and
+    their ELUT generalizations) for ``fmt``."""
     sfx = "" if lossless else "_lossy"
-    if fmt == "tl1":
-        return KernelPlan(gemv="lut_gemv" + sfx, gemm="tl1_lut" + sfx)
-    if fmt == "tl2":
-        return KernelPlan(gemv="tl2_lut" + sfx, gemm="tl2_lut" + sfx)
+    if fmt in fmtreg.lut_gemv_formats():
+        return KernelPlan(gemv="lut_gemv" + sfx, gemm=f"{fmt}_lut" + sfx)
+    if f"{fmt}_lut" in REGISTRY:  # tl2: mirror LUT in both regimes
+        return KernelPlan(gemv=f"{fmt}_lut" + sfx, gemm=f"{fmt}_lut" + sfx)
     raise ValueError(f"no LUT kernels for format {fmt!r}")
 
 
@@ -332,19 +356,15 @@ def _heuristic(fmt: str, regime: str, hw: str, backend: str) -> str:
     if backend == "xla":
         return "int4" if fmt == "int4" else "xla"
     if backend == "pallas":
-        if regime == "gemv" and fmt == "tl1":
+        if regime == "gemv" and fmt in fmtreg.lut_gemv_formats():
             return "lut_gemv"
-        if fmt in _PALLAS_FMTS:
+        if fmt in fmtreg.pallas_formats():
             return "pallas"
         raise ValueError(f"no pallas kernel for format {fmt!r}")
-    if regime == "gemv":
-        if fmt == "tl1":
-            return "lut_gemv"
-        if fmt in _PALLAS_FMTS and hw == "tpu":
-            return "pallas"
-    else:
-        if fmt in _PALLAS_FMTS and hw == "tpu":
-            return "pallas"
+    if regime == "gemv" and fmt in fmtreg.lut_gemv_formats():
+        return "lut_gemv"
+    if fmt in fmtreg.pallas_formats() and hw == "tpu":
+        return "pallas"
     return "int4" if fmt == "int4" else "xla"
 
 

@@ -1,0 +1,80 @@
+"""Parametric element-wise-LUT mpGEMM, pure XLA (paper Appendix ELUT).
+
+The paper's appendix generalizes TL (base-3 lookup) to ELUT: for any element
+base ``b`` and group size ``g``, precompute per activation group the
+``C = b^g``-entry table of all possible group dot products (Phase 1), then
+accumulate ``Σ_g LUT[g, code[m, g]]`` over the packed weight codes
+(Phase 2).  Ternary ``(3, 2)`` is exactly TL1 / Algorithm 3; ``(4, 2)`` and
+``(8, 2)`` are the int2/int3 instances that come up through the same code
+path.
+
+TPU adaptation (DESIGN.md §2): the lookup is a one-hot contraction on the
+MXU — for code value c, ``(codes == c)`` forms a 0/1 int8 mask that
+multiplies LUT column c.  Losslessness (paper §3.2.1) is parametric too:
+
+  * ``lossless=True``  (the ``_1`` variants): int32 tables, exact
+    accumulation — the int16 pack-and-unpack technique expressed at its
+    natural XLA precision (the fused Pallas kernel in
+    ``repro.kernels.elut_matmul`` does the literal two-byte split).
+  * ``lossless=False`` (the ``_0`` variants): the table is requantized to
+    int8 with a per-tensor scale (T-MAC scheme) before accumulation.
+
+The mirror-consolidated TL2 path (folded 14-entry table + sign plane) stays
+in ``repro.core.mpgemm``; it is the one format whose table is not the plain
+``b^g`` enumeration.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import formats, packing
+from repro.core.qtensor import PackedWeight
+
+build_lut = packing.elut_build_lut
+
+
+def quantize_lut(lut: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """T-MAC-style int8 LUT requantization (per-tensor scale) — the lossy step."""
+    s = jnp.maximum(jnp.max(jnp.abs(lut)).astype(jnp.float32), 1.0) / 127.0
+    q = jnp.clip(jnp.round(lut.astype(jnp.float32) / s), -127, 127).astype(jnp.int32)
+    return q, s
+
+
+def lut_accumulate(lut: jax.Array, codes: jax.Array,
+                   lossless: bool) -> tuple[jax.Array, jax.Array]:
+    """sum_g LUT[..., g, codes[m, g]] -> ([..., M] int32, lut scale).
+
+    Gather formulated as a small one-hot contraction — the MXU-friendly
+    expression of "table lookup" (DESIGN.md §2): onehot [M, G, C] × lut.
+    """
+    if not lossless:
+        lut, s_lut = quantize_lut(lut)
+    else:
+        s_lut = jnp.float32(1.0)
+    onehot = jax.nn.one_hot(codes, lut.shape[-1], dtype=jnp.int8)  # [M, G, C]
+    y32 = jnp.einsum(
+        "...gc,mgc->...m", lut.astype(jnp.int32), onehot.astype(jnp.int32)
+    )
+    return y32, s_lut
+
+
+def elut_mpgemm(x_q: jax.Array, s_x, pw: PackedWeight,
+                lossless: bool = True) -> jax.Array:
+    """mpGEMM via the parametric element-wise LUT.  fp32 [..., M].
+
+    Works for every registered format with a plain code plane
+    (``spec.elut``): tl1 reproduces ``tl1_lut`` bit-exactly; int2/int3 run
+    the identical algorithm at (4, 2) / (8, 2).
+    """
+    spec = formats.get(pw.fmt)
+    if not spec.elut:
+        raise ValueError(
+            f"elut_mpgemm needs an ELUT code-plane format, got {pw.fmt!r} "
+            f"(elut formats: {formats.elut_formats()})")
+    lut = build_lut(x_q, spec.base, spec.group)        # [..., G, C] int32
+    codes = packing.elut_codes(pw.planes["p"], spec.field_bits)
+    codes = codes[:, : pw.k // spec.group]             # drop pad-group columns
+    y32, s_lut = lut_accumulate(lut, codes.astype(jnp.int32), lossless)
+    return y32.astype(jnp.float32) * (s_lut * jnp.asarray(s_x, jnp.float32) * pw.scale)

@@ -1,0 +1,261 @@
+"""Format registry: every weight packing format as one ``FormatSpec``.
+
+This is the seam the ELUT engine (paper Appendix, "element-wise lookup
+table for general low-bit LLMs") hangs off: a format is no longer a branch
+in an if-chain but a registry entry carrying
+
+  * ``pack`` / ``unpack`` callables (plane dict <-> int8 code matrix),
+  * ``quantize`` (fp master weight -> (codes, scale), the training-side rule),
+  * bpw, element base ``b`` (alphabet size), group size ``g`` (elements per
+    LUT code), packed field width in bits, plane layout,
+  * K-divisibility (``k_align``) and the block-fitting split-K rule,
+  * capability flags: ``elut`` (plain code-plane layout -> the parametric
+    ELUT kernels apply) and ``pallas`` (some fused Pallas kernel exists).
+
+The ternary formats (i2s, tl1, tq1) are instances of the parametric base-b
+packer with (b, g) = (3, 1), (3, 2), (3, 5); the non-ternary int2/int3
+formats are (4, 2) and (8, 2) through the *same* code path.  tl2/tl2k keep
+their mirror-consolidated sign+index planes (base 3 with a folded table);
+fp/int4 are native-dtype formats with no code plane.
+
+New bit-widths are new ``register(...)`` calls, not new kernel files.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax.numpy as jnp
+
+from repro.core import packing, quant
+
+
+@dataclasses.dataclass(frozen=True)
+class FormatSpec:
+    """One weight format (DESIGN.md §2).
+
+    ``pack(w_q) -> dict[str, Array]`` and ``unpack(planes, k) -> int8 [M, K]``
+    are exact inverses on matrices whose entries are valid codes (levels in
+    ``[lo, hi]``).  ``quantize(w_fp) -> (w_q, scale)`` is the training-side
+    rule producing those codes (None for the fp passthrough format).
+    """
+
+    name: str
+    bpw: float                      # packed bits per weight in HBM
+    base: int = 0                   # element alphabet size b (0: native dtype)
+    group: int = 0                  # g elements per LUT code (0: not code-based)
+    field_bits: int = 0             # packed bits per code field (nibble=4, ...)
+    k_align: int = 1                # required K divisibility for packing
+    planes: tuple = ()              # plane-dict layout (names)
+    pack: Callable | None = None
+    unpack: Callable | None = None
+    quantize: Callable | None = None
+    split_k: Callable | None = None  # K -> (main_k, tail_k) block-fitting rule
+    elut: bool = False              # parametric ELUT kernels apply
+    pallas: bool = False            # a fused Pallas kernel path exists
+    lut_entries: int = 0            # table-size override (tl2's folded 14)
+
+    # -- derived quantities (the napkin math the cost hints are built from) --
+
+    @property
+    def lut_size(self) -> int:
+        """C: entries in the element-wise lookup table (b^g, or the folded
+        count for mirror-consolidated formats)."""
+        if self.lut_entries:
+            return self.lut_entries
+        return self.base ** self.group if self.group else 0
+
+    @property
+    def offset(self) -> int:
+        """Weight value = digit - offset; symmetric-ish levels around 0."""
+        return self.base // 2
+
+    @property
+    def levels(self) -> tuple:
+        """(lo, hi) valid weight values. b=3 -> (-1, 1); b=4 -> (-2, 1)."""
+        return (-self.offset, self.base - 1 - self.offset)
+
+    @property
+    def weights_per_byte(self) -> int:
+        return self.group * (8 // self.field_bits) if self.field_bits else 0
+
+    @property
+    def mxu_inflation(self) -> float:
+        """True-LUT one-hot contraction MXU work vs the plain MAD dot:
+        C MACs per group of g weights -> C/g = b^g/g (tl1: 4.5x)."""
+        return self.lut_size / self.group if self.group else 1.0
+
+    @property
+    def lut_hbm_bpw(self) -> float:
+        """HBM bits/weight of the XLA one-hot path: the int8 one-hot operand
+        [M, G, C] materializes -> C bytes per g weights (tl1: 36.0)."""
+        return 8.0 * self.lut_size / self.group if self.group else 8.0
+
+    def supports_lut_gemv(self) -> bool:
+        """True-LUT GEMV pays off only for grouped codes (g >= 2): at g == 1
+        the 'table' is the weight itself and LUT build is pure overhead."""
+        return self.elut and self.group >= 2
+
+
+REGISTRY: dict[str, FormatSpec] = {}
+
+
+def register(spec: FormatSpec) -> FormatSpec:
+    if spec.name in REGISTRY:
+        raise ValueError(f"format {spec.name!r} already registered")
+    REGISTRY[spec.name] = spec
+    return spec
+
+
+def get(name: str) -> FormatSpec:
+    spec = REGISTRY.get(name)
+    if spec is None:
+        raise ValueError(f"unknown format {name!r}; registered: {sorted(REGISTRY)}")
+    return spec
+
+
+def names() -> tuple:
+    return tuple(REGISTRY)
+
+
+def bpw(name: str) -> float:
+    return get(name).bpw
+
+
+def elut_formats() -> tuple:
+    return tuple(f for f, s in REGISTRY.items() if s.elut)
+
+
+def pallas_formats() -> tuple:
+    return tuple(f for f, s in REGISTRY.items() if s.pallas)
+
+
+def lut_gemv_formats() -> tuple:
+    return tuple(f for f, s in REGISTRY.items() if s.supports_lut_gemv())
+
+
+class _BpwView:
+    """Dict-like live view of per-format bpw (back-compat for FORMAT_BPW)."""
+
+    def __getitem__(self, name: str) -> float:
+        return get(name).bpw
+
+    def __contains__(self, name: str) -> bool:
+        return name in REGISTRY
+
+    def __iter__(self):
+        return iter(REGISTRY)
+
+    def keys(self):
+        return REGISTRY.keys()
+
+    def items(self):
+        return tuple((f, s.bpw) for f, s in REGISTRY.items())
+
+
+FORMAT_BPW = _BpwView()
+
+
+# ---------------------------------------------------------------------------
+# Built-in registrations
+# ---------------------------------------------------------------------------
+
+def _elut_spec(name: str, b: int, g: int, field_bits: int, *,
+               k_align: int | None = None, pad: bool = False,
+               pallas: bool = True, elut: bool = True) -> FormatSpec:
+    """A format whose planes are one packed code plane from the parametric
+    base-b packer — the plain ELUT layout."""
+    wpb = g * (8 // field_bits)
+    return FormatSpec(
+        name=name,
+        bpw=8.0 / wpb,  # pad=True amortizes to the same ratio for large K
+        base=b, group=g, field_bits=field_bits,
+        k_align=wpb if k_align is None else k_align,
+        planes=("p",),
+        pack=lambda w: {"p": packing.elut_pack(w, b, g, field_bits, pad=pad)},
+        unpack=lambda planes, k: packing.elut_unpack(
+            planes["p"], k, b, g, field_bits),
+        quantize=partial(quant.absmean_lowbit, lo=-(b // 2), hi=b - 1 - b // 2),
+        elut=elut, pallas=pallas,
+    )
+
+
+def _splitk_fns(pack3, unpack3, split_k):
+    """(pack, unpack) pair for a split-K sign+index format: the ThreeK
+    prefix uses the mirror-consolidated planes, the TwoK tail packs tl1
+    (block-fitting weight splitting, paper §3.1.2)."""
+
+    def pack(w):
+        three_k, two_k = split_k(w.shape[1])
+        planes = {}
+        if three_k:
+            idx_plane, sign_plane = pack3(w[:, :three_k])
+            planes["idx"] = idx_plane
+            planes["sign"] = sign_plane
+        if two_k:
+            planes["tail"] = packing.tl1_pack(w[:, three_k:])
+        return planes
+
+    def unpack(planes, k):
+        three_k, _ = split_k(k)
+        parts = []
+        if three_k:
+            parts.append(unpack3(planes["idx"], planes["sign"], three_k))
+        if three_k < k:
+            parts.append(packing.tl1_unpack(planes["tail"], k - three_k))
+        return jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+
+    return pack, unpack
+
+
+_tl2_pack, _tl2_unpack = _splitk_fns(
+    packing.tl2_pack, packing.tl2_unpack, packing.tl2_split_k)
+_tl2k_pack, _tl2k_unpack = _splitk_fns(
+    packing.tl2k_pack, packing.tl2k_unpack, packing.tl2k_split_k)
+
+
+# fp — bf16 baseline (paper's Float16 baseline); packing handled by qtensor.
+register(FormatSpec(name="fp", bpw=16.0, planes=("w",)))
+
+# int4 — XLA-native sub-byte dtype storage of the ternary codes (the TPU dot
+# consumes int4 directly; no code plane, no unpack intermediate).
+register(FormatSpec(
+    name="int4", bpw=4.0, planes=("w4",),
+    pack=lambda w: {"w4": w.astype(jnp.int4)},
+    unpack=lambda planes, k: planes["w4"].astype(jnp.int8),
+    quantize=quant.ternary_quant,
+))
+
+# Ternary ELUT instances of the parametric packer (paper I2_S / TL1 / TQ1).
+register(_elut_spec("i2s", 3, 1, 2))                       # 2.00 bpw
+register(_elut_spec("tl1", 3, 2, 4))                       # 2.00 bpw
+# tq1 — 5 trits/byte (1.6 bpw), K padded to a 5-multiple (idealized TQ1_0).
+# Same parametric packer at (3, 5); C = 243 makes LUT kernels pointless, so
+# it stays a MAD-only baseline (elut=False keeps it off the LUT registry).
+register(_elut_spec("tq1", 3, 5, 8, k_align=1, pad=True,
+                    pallas=False, elut=False))
+
+# Non-ternary ELUT formats through the SAME code path (paper Appendix ELUT):
+# int2 = (b=4, g=2): levels {-2..1}, 16-entry LUT, 2.00 bpw;
+# int3 = (b=8, g=2): levels {-4..3}, 64-entry LUT, 4.00 bpw (byte code field).
+register(_elut_spec("int2", 4, 2, 4))
+register(_elut_spec("int3", 8, 2, 8))
+
+# TL2 — mirror-consolidated sign+index planes (base 3, folded 14-entry table)
+# with block-fitting split-K; the TwoK tail is packed tl1.
+register(FormatSpec(
+    name="tl2", bpw=5.0 / 3.0, base=3, group=3, field_bits=4, k_align=4,
+    planes=("idx", "sign", "tail"),
+    pack=_tl2_pack, unpack=_tl2_unpack, quantize=quant.ternary_quant,
+    split_k=packing.tl2_split_k, lut_entries=14,
+))
+
+# TL2 in the Pallas kernel layout (tile-permuted planes, same 1.67 bpw).
+register(FormatSpec(
+    name="tl2k", bpw=5.0 / 3.0, base=3, group=3, field_bits=4, k_align=4,
+    planes=("idx", "sign", "tail"),
+    pack=_tl2k_pack, unpack=_tl2k_unpack, quantize=quant.ternary_quant,
+    split_k=packing.tl2k_split_k, pallas=True, lut_entries=14,
+))

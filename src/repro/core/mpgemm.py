@@ -1,6 +1,6 @@
-"""mpGEMM: int8 activations × packed ternary weights (paper §3).
+"""mpGEMM: int8 activations × packed low-bit weights (paper §3).
 
-Canonical semantics (all formats): y = (x_q @ W_t^T) · (s_x · s_w), with the
+Canonical semantics (all formats): y = (x_q @ W_q^T) · (s_x · s_w), with the
 contraction accumulated in int32 (the TPU MXU's native int8×int8→int32 path).
 This module holds the pure-XLA implementations; the Pallas TPU kernels in
 ``repro.kernels`` implement the same contracts with fused in-VMEM decode and
@@ -9,16 +9,22 @@ are validated against these references.
 Kernel selection lives in ``repro.core.dispatch`` (DESIGN.md §5): every
 implementation here and in ``repro.kernels`` registers its (fmt, regime,
 backend) capabilities there, and ``dispatch.mpgemm`` picks per shape.  The
-XLA implementations in this module:
-  * ``mpgemm_xla`` — unpack packed bytes to int8 [M, K] then dot (canonical
+XLA implementations:
+  * ``mpgemm_xla`` — unpack packed codes to int8 [M, K] then dot (canonical
     reference; materializes the unpacked operand at HLO level), or the
     XLA-native int4 dot (no unpack intermediate; 4 bpw HBM traffic).
-  * ``tl*_lut`` — LUT-semantics references (Algorithms 3–4).
+  * ``repro.core.elut.elut_mpgemm`` — the parametric element-wise-LUT path
+    (Algorithm 3 generalized to any (b, g); tl1 = (3, 2), int2 = (4, 2),
+    int3 = (8, 2)); ``tl1_lut`` here is its ternary alias.
+  * ``tl2_lut`` — the mirror-consolidated variant (Algorithm 4): folded
+    14-entry unsigned table + 1-bit sign plane, TL1 tail via block-fitting.
 
-The LUT-semantics functions (``tl*_lut``) follow Algorithms 3–4 exactly,
-including the lossy ``_0`` variants (LUT requantized to int8, the T-MAC
-scheme §3.2.1) and lossless ``_1`` variants (int16 pack-and-unpack → here the
-natural int32 accumulation).
+The lossy ``_0`` variants requantize the LUT to int8 (the T-MAC scheme
+§3.2.1); lossless ``_1`` variants accumulate the int32 table exactly (the
+int16 pack-and-unpack technique at its natural XLA precision).
+
+All call sites route through ``repro.core.dispatch.mpgemm`` with a
+``KernelPlan``; the pre-registry ``impl=``/``lut=`` string shim is gone.
 """
 
 from __future__ import annotations
@@ -26,7 +32,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import packing
+from repro.core import elut, packing
 from repro.core.qtensor import PackedWeight, unpack_weight
 
 
@@ -62,17 +68,15 @@ def mpgemm_xla(x_q: jax.Array, s_x: jax.Array, pw: PackedWeight) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def tl1_lut(x_q: jax.Array, s_x: jax.Array, pw: PackedWeight, lossless: bool = True) -> jax.Array:
-    """TL1 mpGEMM via element-wise LUT (Algorithm 3).
+    """TL1 mpGEMM via element-wise LUT (Algorithm 3) — the ternary (3, 2)
+    instance of :func:`repro.core.elut.elut_mpgemm`.
 
     lossless=True  -> TL1_1 (int16/int32 pack-and-unpack accumulation)
     lossless=False -> TL1_0 (LUT requantized to int8; T-MAC-style, lossy)
     """
     if pw.fmt != "tl1":
         raise ValueError(f"tl1_lut needs tl1 weights, got {pw.fmt}")
-    lut = packing.tl1_build_lut(x_q)               # [..., G, 9] int32
-    codes = packing.tl1_codes(pw.planes["p"])      # [M, G] uint8 in 0..8
-    y32, s_lut = _lut_accumulate(lut, codes.astype(jnp.int32), lossless)
-    return y32.astype(jnp.float32) * (s_lut * jnp.asarray(s_x, jnp.float32) * pw.scale)
+    return elut.elut_mpgemm(x_q, s_x, pw, lossless=lossless)
 
 
 def tl2_lut(x_q: jax.Array, s_x: jax.Array, pw: PackedWeight, lossless: bool = True) -> jax.Array:
@@ -101,33 +105,11 @@ def tl2_lut(x_q: jax.Array, s_x: jax.Array, pw: PackedWeight, lossless: bool = T
     return out
 
 
-def _quantize_lut(lut: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """T-MAC-style int8 LUT requantization (per-tensor scale) — the lossy step."""
-    s = jnp.maximum(jnp.max(jnp.abs(lut)).astype(jnp.float32), 1.0) / 127.0
-    q = jnp.clip(jnp.round(lut.astype(jnp.float32) / s), -127, 127).astype(jnp.int32)
-    return q, s
-
-
-def _lut_accumulate(lut: jax.Array, codes: jax.Array, lossless: bool) -> tuple[jax.Array, jax.Array]:
-    """sum_g LUT[..., g, codes[m, g]] -> ([..., M] int32, lut scale)."""
-    if not lossless:
-        lut, s_lut = _quantize_lut(lut)
-    else:
-        s_lut = jnp.float32(1.0)
-    # Gather formulated as a small one-hot contraction — the MXU-friendly
-    # expression of "table lookup" (DESIGN.md §2): onehot [M, G, C] × lut.
-    onehot = jax.nn.one_hot(codes, lut.shape[-1], dtype=jnp.int8)  # [M, G, C]
-    y32 = jnp.einsum(
-        "...gc,mgc->...m", lut.astype(jnp.int32), onehot.astype(jnp.int32)
-    )
-    return y32, s_lut
-
-
 def _lut_accumulate_signed(
     lut: jax.Array, idx: jax.Array, sign: jax.Array, lossless: bool
 ) -> tuple[jax.Array, jax.Array]:
     if not lossless:
-        lut, s_lut = _quantize_lut(lut)
+        lut, s_lut = elut.quantize_lut(lut)
     else:
         s_lut = jnp.float32(1.0)
     onehot = jax.nn.one_hot(idx, lut.shape[-1], dtype=jnp.int8).astype(jnp.int32)
@@ -159,30 +141,3 @@ def mpgemm_q8_block(
     p32 = jnp.einsum("...nk,mnk->...nm", xb.astype(jnp.int32), wb.astype(jnp.int32))
     y = (p32.astype(jnp.float32) * s_x_blocks[..., None]).sum(axis=-2)
     return y * pw.scale
-
-
-def mpgemm(
-    x_q: jax.Array,
-    s_x: jax.Array,
-    pw: PackedWeight,
-    impl: str = "xla",
-    lut: str | None = None,
-) -> jax.Array:
-    """DEPRECATED legacy entry point — string flags translated to a KernelPlan.
-
-    New call sites use ``repro.core.dispatch.mpgemm(x_q, s_x, pw, plan)``;
-    this shim preserves the exact historical routing (``lut`` beats ``impl``,
-    ``impl="xla"`` always means the XLA reference, no shape-aware selection)
-    so existing configs keep their bit-exact behaviour.
-    """
-    from repro.core import dispatch  # lazy: dispatch imports this module
-
-    if lut is not None and pw.fmt in ("tl1", "tl2"):
-        name = f"{pw.fmt}_lut" + ("" if lut == "lossless" else "_lossy")
-        plan = dispatch.KernelPlan(gemv=name, gemm=name)
-    elif impl == "pallas":
-        plan = dispatch.KernelPlan(gemv="pallas", gemm="pallas")
-    else:
-        name = "int4" if pw.fmt == "int4" else "xla"
-        plan = dispatch.KernelPlan(gemv=name, gemm=name)
-    return dispatch.mpgemm(x_q, s_x, pw, plan, _source="legacy")

@@ -1,26 +1,35 @@
-"""Ternary weight packing formats (paper §3, Table 1).
+"""Low-bit weight packing (paper §3, Table 1 + Appendix ELUT).
 
-All formats store a weight matrix W of shape [M, K] with entries in
-{-1, 0, +1} (int8).  Packing is along K (the contraction axis) so each
-output row's packed bytes are contiguous — the TPU analogue of the paper's
-LUT-centric data layout (packed bytes stream HBM→VMEM in the same order the
-kernel consumes them).
+All formats store a weight matrix W of shape [M, K] packed along K (the
+contraction axis) so each output row's packed bytes are contiguous — the
+TPU analogue of the paper's LUT-centric data layout (packed bytes stream
+HBM→VMEM in the same order the kernel consumes them).
 
-Formats
--------
-i2s   2.00 bpw  4 trits / byte, 2-bit codes            (paper I2_S)
-tl1   2.00 bpw  2 trits → 4-bit code (3^2=9<16), 2 codes / byte  (paper TL1)
+The parametric base-b packer (``elut_pack``/``elut_unpack``) covers every
+plain code-plane format; the named formats are its instances
+(bit-identical to the legacy hand-written layouts):
+
+i2s   2.00 bpw  (b=3, g=1)  4 trits / byte, 2-bit fields     (paper I2_S)
+tl1   2.00 bpw  (b=3, g=2)  2 trits → 4-bit code (9<16)      (paper TL1)
+tq1   1.60 bpw  (b=3, g=5)  5 trits / byte (243<256)         (llama.cpp
+                                                              TQ1_0-like,
+                                                              idealized)
+int2  2.00 bpw  (b=4, g=2)  levels {-2..1}, 4-bit codes      (ELUT)
+int3  4.00 bpw  (b=8, g=2)  levels {-4..3}, byte codes       (ELUT)
+
 tl2   1.67 bpw  3 trits → 1-bit sign + 4-bit index (3^3/2=13.5<16)
                 index plane: 2 idx / byte; sign plane: 8 signs / byte
                                                         (paper TL2, element-wise
                                                          mirror consolidation +
-                                                         signed-unsigned split)
-tq1   1.60 bpw  5 trits / byte, base-3 (3^5=243<256)    (llama.cpp TQ1_0-like
-                                                         baseline, idealized)
+                                                         signed-unsigned split —
+                                                         NOT a plain code plane)
 
 ``tl2`` requires K % 24 == 0; general K is handled by block-fitting weight
 splitting (paper §3.1.2): ``tl2_split_k`` statically divides K into a ThreeK
 part (multiple of 24, packed tl2) and a TwoK tail (packed tl1).
+
+The registry in :mod:`repro.core.formats` binds these functions to format
+names; nothing outside that registry should branch on a format string.
 """
 
 from __future__ import annotations
@@ -36,24 +45,77 @@ def _check_ternary(w: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Parametric base-b packer — the ELUT layout (paper Appendix).
+#
+# A format (b, g, field_bits) stores groups of g weights with values in
+# [-(b//2), b-1-b//2] as one code = Σ_i digit_i · b^(g-1-i) (big-endian,
+# digit = weight + b//2) in a ``field_bits``-wide field; 8/field_bits fields
+# pack little-endian into each byte.  Ternary instances: i2s = (3,1,2),
+# tl1 = (3,2,4), tq1 = (3,5,8).  Non-ternary: int2 = (4,2,4), int3 = (8,2,8).
+# ---------------------------------------------------------------------------
+
+
+def elut_pack(w: jax.Array, b: int, g: int, field_bits: int,
+              *, pad: bool = False) -> jax.Array:
+    """[M, K] int8 codes -> [M, ceil(K/wpb)] uint8, wpb = g · 8/field_bits."""
+    w = w.astype(jnp.int8)
+    M, K = w.shape
+    fpb = 8 // field_bits
+    wpb = g * fpb
+    if K % wpb != 0:
+        if not pad:
+            raise ValueError(
+                f"elut_pack(b={b}, g={g}) needs K % {wpb} == 0, got K={K}")
+        w = jnp.pad(w, ((0, 0), (0, (-K) % wpb)))  # weight 0 = digit offset
+    offset = b // 2
+    d = (w.astype(jnp.int32) + offset).reshape(M, -1, g)
+    code = d[..., 0]
+    for i in range(1, g):
+        code = code * b + d[..., i]                # big-endian digits
+    code = code.astype(jnp.uint8).reshape(M, -1, fpb)
+    out = code[..., 0]
+    for f in range(1, fpb):                        # little-endian fields
+        out = out | (code[..., f] << (f * field_bits))
+    return out
+
+
+def elut_codes(p: jax.Array, field_bits: int) -> jax.Array:
+    """[M, n_bytes] packed bytes -> [M, G] group codes (0..b^g-1)."""
+    fpb = 8 // field_bits
+    mask = (1 << field_bits) - 1
+    fields = [((p >> (f * field_bits)) & mask).astype(jnp.uint8)
+              for f in range(fpb)]
+    return jnp.stack(fields, axis=-1).reshape(p.shape[0], -1)
+
+
+def elut_unpack(p: jax.Array, k: int, b: int, g: int,
+                field_bits: int) -> jax.Array:
+    """Inverse of elut_pack -> [M, K] int8 codes (pad columns sliced off)."""
+    code = elut_codes(p, field_bits).astype(jnp.int32)
+    offset = b // 2
+    digits = []
+    for i in range(g):
+        digits.append((code // (b ** (g - 1 - i))) % b - offset)
+    w = jnp.stack(digits, axis=-1).reshape(p.shape[0], -1)
+    return w[:, :k].astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
 # I2_S — 2-bit codes, 4 per byte
 # ---------------------------------------------------------------------------
 
 def i2s_pack(w: jax.Array) -> jax.Array:
-    """[M, K] ternary int8 -> [M, K//4] uint8 (codes = w+1, little-endian)."""
-    w = _check_ternary(w)
-    M, K = w.shape
-    if K % 4 != 0:
-        raise ValueError(f"i2s_pack needs K % 4 == 0, got K={K}")
-    c = (w + 1).astype(jnp.uint8).reshape(M, K // 4, 4)
-    return (c[..., 0] | (c[..., 1] << 2) | (c[..., 2] << 4) | (c[..., 3] << 6))
+    """[M, K] ternary int8 -> [M, K//4] uint8 (codes = w+1, little-endian).
+
+    ELUT instance (b=3, g=1, 2-bit fields)."""
+    if w.shape[1] % 4 != 0:
+        raise ValueError(f"i2s_pack needs K % 4 == 0, got K={w.shape[1]}")
+    return elut_pack(_check_ternary(w), 3, 1, 2)
 
 
 def i2s_unpack(p: jax.Array, k: int) -> jax.Array:
     """[M, K//4] uint8 -> [M, K] int8 in {-1,0,1}."""
-    parts = [((p >> (2 * i)) & 0x3).astype(jnp.int8) - 1 for i in range(4)]
-    w = jnp.stack(parts, axis=-1)  # [M, K//4, 4]
-    return w.reshape(p.shape[0], -1)[:, :k]
+    return elut_unpack(p, k, 3, 1, 2)
 
 
 # ---------------------------------------------------------------------------
@@ -61,32 +123,21 @@ def i2s_unpack(p: jax.Array, k: int) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def tl1_pack(w: jax.Array) -> jax.Array:
-    """[M, K] ternary -> [M, K//4] uint8; each nibble encodes 2 trits (0..8)."""
-    w = _check_ternary(w)
-    M, K = w.shape
-    if K % 4 != 0:
-        raise ValueError(f"tl1_pack needs K % 4 == 0, got K={K}")
-    t = (w + 1).astype(jnp.uint8).reshape(M, K // 2, 2)
-    code = t[..., 0] * 3 + t[..., 1]            # 0..8, fits a nibble
-    code = code.reshape(M, K // 4, 2)
-    return code[..., 0] | (code[..., 1] << 4)
+    """[M, K] ternary -> [M, K//4] uint8; each nibble encodes 2 trits (0..8).
+
+    ELUT instance (b=3, g=2, 4-bit fields)."""
+    if w.shape[1] % 4 != 0:
+        raise ValueError(f"tl1_pack needs K % 4 == 0, got K={w.shape[1]}")
+    return elut_pack(_check_ternary(w), 3, 2, 4)
 
 
 def tl1_unpack(p: jax.Array, k: int) -> jax.Array:
-    lo = (p & 0xF).astype(jnp.int8)
-    hi = ((p >> 4) & 0xF).astype(jnp.int8)
-    code = jnp.stack([lo, hi], axis=-1).reshape(p.shape[0], -1)  # [M, K//2]
-    w0 = code // 3 - 1
-    w1 = code % 3 - 1
-    w = jnp.stack([w0, w1], axis=-1).reshape(p.shape[0], -1)
-    return w[:, :k].astype(jnp.int8)
+    return elut_unpack(p, k, 3, 2, 4)
 
 
 def tl1_codes(p: jax.Array) -> jax.Array:
     """[M, K//4] packed bytes -> [M, K//2] 4-bit group codes (0..8)."""
-    lo = (p & 0xF).astype(jnp.uint8)
-    hi = ((p >> 4) & 0xF).astype(jnp.uint8)
-    return jnp.stack([lo, hi], axis=-1).reshape(p.shape[0], -1)
+    return elut_codes(p, 4)
 
 
 # ---------------------------------------------------------------------------
@@ -230,44 +281,44 @@ def tl2k_split_k(k: int, g_tile: int = TL2K_GTILE) -> tuple[int, int]:
 # ---------------------------------------------------------------------------
 
 def tq1_pack(w: jax.Array) -> jax.Array:
-    """[M, K] ternary -> [M, ceil(K/5)] uint8 base-3 (zero padded)."""
-    w = _check_ternary(w)
-    M, K = w.shape
-    pad = (-K) % 5
-    t = jnp.pad((w + 1).astype(jnp.int32), ((0, 0), (0, pad)), constant_values=1)
-    t = t.reshape(M, -1, 5)
-    v = t[..., 0]
-    for i in range(1, 5):
-        v = v * 3 + t[..., i]
-    return v.astype(jnp.uint8)
+    """[M, K] ternary -> [M, ceil(K/5)] uint8 base-3 (zero padded).
+
+    ELUT instance (b=3, g=5, byte fields) with weight-0 padding."""
+    return elut_pack(_check_ternary(w), 3, 5, 8, pad=True)
 
 
 def tq1_unpack(p: jax.Array, k: int) -> jax.Array:
-    v = p.astype(jnp.int32)
-    digits = []
-    for _ in range(5):
-        digits.append(v % 3 - 1)
-        v = v // 3
-    w = jnp.stack(digits[::-1], axis=-1).reshape(p.shape[0], -1)
-    return w[:, :k].astype(jnp.int8)
+    return elut_unpack(p, k, 3, 5, 8)
 
 
 # ---------------------------------------------------------------------------
 # eLUT construction (paper Eq. 3 / Algorithms 3–4)
 # ---------------------------------------------------------------------------
 
+def elut_build_lut(a_q: jax.Array, b: int, g: int) -> jax.Array:
+    """int8 activations [..., K] (K%g==0) -> eLUT [..., K//g, b^g] int32.
+
+    Entry c of group k is dot(a[gk:gk+g], digits(c)) where digits(c)
+    enumerate the b^g base-b weight groups — the element-wise LUT of
+    Algorithm 3, parametric in (b, g) (paper Appendix ELUT).
+    """
+    k = a_q.shape[-1]
+    offset = b // 2
+    a = a_q.astype(jnp.int32).reshape(*a_q.shape[:-1], k // g, g)
+    codes = jnp.arange(b ** g, dtype=jnp.int32)
+    lut = 0
+    for i in range(g):
+        d = (codes // (b ** (g - 1 - i))) % b - offset
+        lut = lut + a[..., i : i + 1] * d
+    return lut
+
+
 def tl1_build_lut(a_q: jax.Array) -> jax.Array:
     """int8 activations [..., K] (K%2==0) -> eLUT [..., K//2, 9] int32.
 
-    Entry c of group k is dot(a[2k:2k+2], digits(c)) where digits(c) enumerate
-    the 3^2 ternary pairs — the element-wise LUT of Algorithm 3.
+    The ternary (b=3, g=2) instance of :func:`elut_build_lut` (Algorithm 3).
     """
-    k = a_q.shape[-1]
-    a = a_q.astype(jnp.int32).reshape(*a_q.shape[:-1], k // 2, 2)
-    codes = jnp.arange(9, dtype=jnp.int32)
-    d0 = codes // 3 - 1
-    d1 = codes % 3 - 1
-    return a[..., 0:1] * d0 + a[..., 1:2] * d1
+    return elut_build_lut(a_q, 3, 2)
 
 
 def tl2_build_lut(a_q: jax.Array) -> jax.Array:

@@ -1,9 +1,15 @@
 """Packed-weight container used across the framework.
 
-A ``PackedWeight`` holds the HBM representation of one ternary weight matrix
-in one of the library formats (DESIGN.md §2), plus its per-tensor absmean
-scale.  It is a registered pytree so it can flow through jit/pjit/scan and be
-sharded with NamedSharding like any other parameter.
+A ``PackedWeight`` holds the HBM representation of one low-bit weight matrix
+in one of the registered formats (``repro.core.formats``, DESIGN.md §2),
+plus its per-tensor absmean scale.  It is a registered pytree so it can flow
+through jit/pjit/scan and be sharded with NamedSharding like any other
+parameter.
+
+Pack/unpack and the training-side quantization rule are resolved through
+the :mod:`repro.core.formats` registry — this module holds no per-format
+branches.  ``FORMAT_BPW`` is kept as a live dict-like view for callers that
+only need bits-per-weight.
 """
 
 from __future__ import annotations
@@ -14,18 +20,11 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core import packing, quant
+from repro.core import formats
+from repro.core.formats import FORMAT_BPW  # re-export (legacy import site)
 
-# Formats and their bits-per-weight (paper Table 1 + our int4 XLA-native path).
-FORMAT_BPW = {
-    "fp": 16.0,     # bf16 baseline (paper's Float16 baseline)
-    "int4": 4.0,    # XLA-native int4 storage (TPU dot consumes int4 directly)
-    "i2s": 2.0,     # paper I2_S
-    "tl1": 2.0,     # paper TL1
-    "tl2": 5.0 / 3.0,   # paper TL2 (1.67)
-    "tl2k": 5.0 / 3.0,  # TL2 in the Pallas kernel layout (same bpw)
-    "tq1": 1.6,     # idealized llama.cpp TQ1_0 baseline
-}
+__all__ = ["FORMAT_BPW", "PackedWeight", "pack_weight", "pack_ternary",
+           "pack_quantized", "unpack_weight"]
 
 
 @partial(
@@ -35,13 +34,13 @@ FORMAT_BPW = {
 )
 @dataclasses.dataclass
 class PackedWeight:
-    """Packed ternary weight of logical shape [M, K] (output-major)."""
+    """Packed low-bit weight of logical shape [M, K] (output-major)."""
 
     planes: dict  # str -> jax.Array
     scale: jax.Array  # fp32 scalar (absmean)
     fmt: str
     shape: tuple  # (M, K)
-    three_k: int = 0  # tl2 only: K prefix handled by the g=3 path
+    three_k: int = 0  # split-K formats only: K prefix on the main path
 
     @property
     def m(self) -> int:
@@ -50,6 +49,10 @@ class PackedWeight:
     @property
     def k(self) -> int:
         return self.shape[1]
+
+    @property
+    def spec(self) -> formats.FormatSpec:
+        return formats.get(self.fmt)
 
     def bits(self) -> int:
         """Total packed bits actually stored (for roofline byte accounting).
@@ -70,69 +73,35 @@ class PackedWeight:
 
 
 def pack_weight(w: jax.Array, fmt: str) -> PackedWeight:
-    """Quantize an fp master weight [M, K] to ternary and pack as ``fmt``."""
+    """Quantize an fp master weight [M, K] via the format's training-side
+    rule (absmean ternary / low-bit) and pack as ``fmt``."""
     M, K = w.shape
     if fmt == "fp":
         return PackedWeight({"w": w.astype(jnp.bfloat16)}, jnp.float32(1.0), "fp", (M, K))
-    w_t, s = quant.ternary_quant(w)
-    return pack_ternary(w_t, s, fmt)
+    spec = formats.get(fmt)
+    w_q, s = spec.quantize(w)
+    return pack_quantized(w_q, s, fmt)
 
 
-def pack_ternary(w_t: jax.Array, scale: jax.Array, fmt: str) -> PackedWeight:
-    """Pack an already-ternary int8 matrix (values in {-1,0,1})."""
-    M, K = w_t.shape
+def pack_quantized(w_q: jax.Array, scale: jax.Array, fmt: str) -> PackedWeight:
+    """Pack an already-quantized int8 code matrix (values in the format's
+    ``levels`` range; ternary {-1,0,1} is valid for every integer format)."""
+    M, K = w_q.shape
     scale = jnp.asarray(scale, jnp.float32)
-    if fmt == "int4":
-        return PackedWeight({"w4": w_t.astype(jnp.int4)}, scale, fmt, (M, K))
-    if fmt == "i2s":
-        return PackedWeight({"p": packing.i2s_pack(w_t)}, scale, fmt, (M, K))
-    if fmt == "tl1":
-        return PackedWeight({"p": packing.tl1_pack(w_t)}, scale, fmt, (M, K))
-    if fmt == "tq1":
-        return PackedWeight({"p": packing.tq1_pack(w_t)}, scale, fmt, (M, K))
-    if fmt == "tl2":
-        three_k, two_k = packing.tl2_split_k(K)
-        planes = {}
-        if three_k:
-            idx_plane, sign_plane = packing.tl2_pack(w_t[:, :three_k])
-            planes["idx"] = idx_plane
-            planes["sign"] = sign_plane
-        if two_k:
-            planes["tail"] = packing.tl1_pack(w_t[:, three_k:])
-        return PackedWeight(planes, scale, fmt, (M, K), three_k=three_k)
-    if fmt == "tl2k":
-        # Kernel layout (block-fitting split sized to the Pallas K-tile).
-        three_k, two_k = packing.tl2k_split_k(K)
-        planes = {}
-        if three_k:
-            idx_plane, sign_plane = packing.tl2k_pack(w_t[:, :three_k])
-            planes["idx"] = idx_plane
-            planes["sign"] = sign_plane
-        if two_k:
-            planes["tail"] = packing.tl1_pack(w_t[:, three_k:])
-        return PackedWeight(planes, scale, fmt, (M, K), three_k=three_k)
-    raise ValueError(f"unknown format {fmt!r}")
+    spec = formats.get(fmt)
+    if spec.pack is None:
+        raise ValueError(f"format {fmt!r} has no integer pack path")
+    planes = spec.pack(w_q)
+    three_k = spec.split_k(K)[0] if spec.split_k is not None else 0
+    return PackedWeight(planes, scale, fmt, (M, K), three_k=three_k)
+
+
+# The historical name: every pre-ELUT format was ternary.
+pack_ternary = pack_quantized
 
 
 def unpack_weight(pw: PackedWeight) -> jax.Array:
-    """Recover the int8 ternary matrix [M, K] (fp format returns bf16)."""
-    M, K = pw.shape
+    """Recover the int8 code matrix [M, K] (fp format returns bf16)."""
     if pw.fmt == "fp":
         return pw.planes["w"]
-    if pw.fmt == "int4":
-        return pw.planes["w4"].astype(jnp.int8)
-    if pw.fmt == "i2s":
-        return packing.i2s_unpack(pw.planes["p"], K)
-    if pw.fmt == "tl1":
-        return packing.tl1_unpack(pw.planes["p"], K)
-    if pw.fmt == "tq1":
-        return packing.tq1_unpack(pw.planes["p"], K)
-    if pw.fmt in ("tl2", "tl2k"):
-        unpack3 = packing.tl2_unpack if pw.fmt == "tl2" else packing.tl2k_unpack
-        parts = []
-        if pw.three_k:
-            parts.append(unpack3(pw.planes["idx"], pw.planes["sign"], pw.three_k))
-        if pw.three_k < K:
-            parts.append(packing.tl1_unpack(pw.planes["tail"], K - pw.three_k))
-        return jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
-    raise ValueError(f"unknown format {pw.fmt!r}")
+    return pw.spec.unpack(pw.planes, pw.k)

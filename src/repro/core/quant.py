@@ -34,14 +34,24 @@ def absmean_scale(w: jax.Array) -> jax.Array:
     return jnp.maximum(jnp.mean(jnp.abs(w.astype(jnp.float32))), EPS)
 
 
+def absmean_lowbit(w: jax.Array, lo: int, hi: int) -> tuple[jax.Array, jax.Array]:
+    """Quantize weights to integer levels [lo, hi] with a per-tensor absmean
+    scale — the b1.58 rule generalized to arbitrary low-bit alphabets (ELUT
+    formats: int2 -> [-2, 1], int3 -> [-4, 3]).
+
+    Returns (w_q int8, scale fp32 scalar).  Dequant: w ≈ w_q * s.
+    """
+    s = absmean_scale(w)
+    w_q = jnp.clip(jnp.round(w.astype(jnp.float32) / s), float(lo), float(hi))
+    return w_q.astype(jnp.int8), s
+
+
 def ternary_quant(w: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Quantize weights to ternary {-1, 0, 1} with a per-tensor absmean scale.
 
     Returns (w_t int8 in {-1,0,1}, scale fp32 scalar).  Dequant: w ≈ w_t * s.
     """
-    s = absmean_scale(w)
-    w_t = jnp.clip(jnp.round(w.astype(jnp.float32) / s), -1.0, 1.0)
-    return w_t.astype(jnp.int8), s
+    return absmean_lowbit(w, -1, 1)
 
 
 def ternary_fake_quant(w: jax.Array) -> jax.Array:

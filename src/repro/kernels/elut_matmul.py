@@ -1,0 +1,202 @@
+"""Parametric ELUT Pallas TPU kernels (paper §3 + Appendix ELUT, TPU-adapted).
+
+One kernel family generated from ``(b, g, field_bits)`` replaces the three
+near-duplicate base-3 kernels this repo used to carry (i2s_matmul,
+tl1_matmul, lut_gemv):
+
+  * :func:`elut_matmul` — fused decode+MAD: packed code bytes stream
+    HBM→VMEM at the format's true bpw and are decoded on the VPU with
+    shift/mask/div-mod-by-b (div/mod by a constant lowers to
+    multiply-shift; power-of-two bases lower to pure shifts), then hit the
+    MXU as int8 digit-plane dots.  Ternary (3, 2, 4) is bit-identical to
+    the old tl1_matmul; (3, 1, 2) to i2s_matmul; (4, 2, 4) / (8, 2, 4|8)
+    are the int2/int3 instances through the same code.
+
+    Decode per byte column (wpb = g · 8/field_bits weights per byte):
+
+        for field f in 0..8/field_bits-1:
+            code = (p >> f·field_bits) & mask
+            for digit position i in 0..g-1:
+                D = (code // b^(g-1-i)) % b - b//2       # [bm, K/wpb]
+                acc += X_{f·g+i} · D^T                    # int8 MXU dot
+
+    where X_j[n, kb] = x[n, wpb·kb + j] are the deinterleaved activation
+    planes produced once by the ops.py wrapper.
+
+  * :func:`elut_lut_gemv` — the true *table-lookup* computation model for
+    the extreme memory-bound batch-1 decode regime: the wrapper precomputes
+    the C = b^g-entry eLUT per activation group (Phase 1 /
+    ``packing.elut_build_lut``) and the kernel accumulates
+    ``Σ_g LUT[g, code[m, g]]``.  No TPU `vpshufb` exists, so the lookup is
+    a compare-and-accumulate contraction: for each code value c,
+    ``(codes == c)`` is a 0/1 int8 mask multiplying LUT column c on the
+    MXU — ~C/g = b^g/g more MXU work than MAD (tl1 4.5×, int2 8×,
+    int3 32×), irrelevant when the MXU idles and HBM bytes are everything.
+
+    Losslessness (paper §3.2.1) is parametric: eLUT entries of int8 groups
+    need int16, so the lossless ``_1`` variant splits the int16 table into
+    low/high byte planes, looks up twice, and recombines exactly
+    (``acc_hi·256 + acc_lo`` — the **pack-and-unpack** technique); the
+    lossy ``_0`` variant takes a single int8-requantized table.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# ---------------------------------------------------------------------------
+# Arithmetic-decode MAD path (GEMM regime)
+# ---------------------------------------------------------------------------
+
+
+def _elut_mad_kernel(*refs, b: int, g: int, field_bits: int):
+    *x_refs, p_ref, out_ref = refs
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    fpb = 8 // field_bits
+    mask = (1 << field_bits) - 1
+    offset = b // 2
+    p = p_ref[...].astype(jnp.int16)  # uint8 [bm, bkc] -> int16 for div/mod
+    acc = out_ref[...]
+    plane = 0
+    for f in range(fpb):
+        code = (p >> (f * field_bits)) & mask
+        for i in range(g):
+            d16 = (code // (b ** (g - 1 - i))) % b
+            d = d16.astype(jnp.int8) - offset
+            acc = acc + jax.lax.dot_general(
+                x_refs[plane][...], d,
+                (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.int32,
+            )
+            plane += 1
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "b", "g", "field_bits", "bn", "bm", "bkc", "interpret"))
+def elut_matmul(
+    x_planes: tuple,
+    packed: jax.Array,
+    *,
+    b: int,
+    g: int,
+    field_bits: int,
+    bn: int = 128,
+    bm: int = 128,
+    bkc: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """x_planes: wpb × int8 [N, K/wpb] (deinterleaved, wpb = g·8/field_bits);
+    packed: uint8 [M, K/wpb] ELUT code bytes.  Returns int32 [N, M].
+
+    Requires N % bn == M % bm == (K/wpb) % bkc == 0 (the ops.py wrapper
+    pads N; K alignment is the format's k_align).  Same tiling contract as
+    the retired i2s/tl1 kernels: grid (N/bn, M/bm, Kbytes/bkc) with the
+    contraction axis innermost and the int32 accumulator tile living in the
+    output VMEM block across the k steps.
+    """
+    n, kb = x_planes[0].shape
+    m = packed.shape[0]
+    grid = (n // bn, m // bm, kb // bkc)
+
+    x_spec = pl.BlockSpec((bn, bkc), lambda i, j, k: (i, k))
+    p_spec = pl.BlockSpec((bm, bkc), lambda i, j, k: (j, k))
+    o_spec = pl.BlockSpec((bn, bm), lambda i, j, k: (i, j))
+
+    return pl.pallas_call(
+        functools.partial(_elut_mad_kernel, b=b, g=g, field_bits=field_bits),
+        grid=grid,
+        in_specs=[x_spec] * len(x_planes) + [p_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.int32),
+        interpret=interpret,
+    )(*x_planes, packed)
+
+
+# ---------------------------------------------------------------------------
+# True-LUT GEMV path (batch-1 decode regime)
+# ---------------------------------------------------------------------------
+
+
+def _elut_gemv_kernel(*refs, n_entries: int, field_bits: int, lossless: bool):
+    *lut_refs, p_ref, out_ref = refs
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    fpb = 8 // field_bits
+    mask = (1 << field_bits) - 1
+    p = p_ref[...].astype(jnp.int16)  # [bm, gb/fpb] packed code bytes
+    acc = out_ref[...]
+    for f, lut_ref in enumerate(lut_refs):
+        codes = (p >> (f * field_bits)) & mask   # codes of field-f groups
+        lut = lut_ref[...]                       # [gb/fpb, C] int32 (int16 range)
+        for c in range(n_entries):
+            m01 = (codes == c).astype(jnp.int8)              # [bm, gb/fpb]
+            col = lut[:, c]                                   # [gb/fpb]
+            if lossless:
+                # pack-and-unpack: two int8-range lookups, recombined exactly.
+                col_lo = (col & 0xFF).astype(jnp.int32)       # unsigned low byte
+                col_hi = (col >> 8).astype(jnp.int32)         # arithmetic high
+                acc_lo = jnp.dot(m01.astype(jnp.int32), col_lo,
+                                 preferred_element_type=jnp.int32)
+                acc_hi = jnp.dot(m01.astype(jnp.int32), col_hi,
+                                 preferred_element_type=jnp.int32)
+                acc = acc + (acc_hi * 256 + acc_lo)[:, None]
+            else:
+                acc = acc + jnp.dot(
+                    m01.astype(jnp.int32), col,
+                    preferred_element_type=jnp.int32,
+                )[:, None]
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_entries", "field_bits", "bm", "byte_blk", "lossless", "interpret"))
+def elut_lut_gemv(
+    lut_planes: tuple,
+    packed: jax.Array,
+    *,
+    n_entries: int,
+    field_bits: int,
+    bm: int = 128,
+    byte_blk: int = 128,
+    lossless: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    """lut_planes: fpb × int32 [G/fpb, C] — the eLUT deinterleaved by packed
+    field position (for tl1's 2-per-byte nibbles these are the even/odd group
+    tables; a byte-wide code has a single table); packed: uint8 [M, G/fpb]
+    code bytes (G = K/g groups).  Returns int32 [M, 1].
+
+    Requires M % bm == 0 and (G/fpb) % byte_blk == 0.
+    """
+    m = packed.shape[0]
+    n_bytes = packed.shape[1]
+    grid = (m // bm, n_bytes // byte_blk)
+
+    lut_spec = pl.BlockSpec((byte_blk, n_entries), lambda i, k: (k, 0))
+    p_spec = pl.BlockSpec((bm, byte_blk), lambda i, k: (i, k))
+    o_spec = pl.BlockSpec((bm, 1), lambda i, k: (i, 0))
+
+    return pl.pallas_call(
+        functools.partial(_elut_gemv_kernel, n_entries=n_entries,
+                          field_bits=field_bits, lossless=lossless),
+        grid=grid,
+        in_specs=[lut_spec] * len(lut_planes) + [p_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((m, 1), jnp.int32),
+        interpret=interpret,
+    )(*lut_planes, packed)

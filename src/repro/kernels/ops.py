@@ -2,8 +2,15 @@
 
 Responsibilities: flatten batch dims, pad N to the tile size (zero activation
 rows are exact no-ops), deinterleave activations into digit planes, dispatch
-on the PackedWeight format, and apply the (s_x · s_w) rescale.  The kernels
-themselves only ever see aligned tiles.
+on the PackedWeight's :class:`repro.core.formats.FormatSpec`, and apply the
+(s_x · s_w) rescale.  The kernels themselves only ever see aligned tiles.
+
+Every plain code-plane format (``spec.elut``: i2s, tl1, int2, int3, …) runs
+the parametric :mod:`repro.kernels.elut_matmul` family — its kernel bodies
+are generated from the spec's ``(base, group, field_bits)``; there are no
+per-format kernel files.  tl2k keeps its mirror-consolidated sign+index
+kernel (``tl2_matmul``), with the block-fitting TwoK tail routed through the
+ternary ELUT instance.
 
 ``interpret`` defaults to True off-TPU (the kernel body runs in Python on
 CPU for validation); on a real TPU backend it compiles to Mosaic.
@@ -14,12 +21,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import formats
 from repro.core.qtensor import PackedWeight
 from repro.kernels.act_quant import act_quant as _act_quant
-from repro.kernels.i2s_matmul import i2s_matmul
-from repro.kernels.lut_gemv import tl1_lut_gemv
+from repro.kernels.elut_matmul import elut_lut_gemv, elut_matmul
 from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
-from repro.kernels.tl1_matmul import tl1_matmul
 from repro.kernels.tl2_matmul import tl2_matmul
 
 
@@ -43,17 +49,15 @@ def _pick(block: int, extent: int) -> int:
     return max(b, 1)
 
 
-def _quad_planes(x: jax.Array) -> tuple[jax.Array, ...]:
-    """[N, K] -> 4 × [N, K/4] with plane i holding x[:, i::4]."""
+def _deinterleave(x: jax.Array, w: int) -> tuple[jax.Array, ...]:
+    """[N, K] -> w × [N, K/w] with plane j holding x[:, j::w]."""
     n, k = x.shape
-    r = x.reshape(n, k // 4, 4)
-    return tuple(r[:, :, i] for i in range(4))
+    r = x.reshape(n, k // w, w)
+    return tuple(r[:, :, j] for j in range(w))
 
 
 def _tri_planes(x: jax.Array) -> tuple[jax.Array, ...]:
-    n, k = x.shape
-    r = x.reshape(n, k // 3, 3)
-    return tuple(r[:, :, i] for i in range(3))
+    return _deinterleave(x, 3)
 
 
 def mpgemm_pallas(
@@ -70,11 +74,10 @@ def mpgemm_pallas(
     k = x_q.shape[-1]
     x2 = x_q.reshape(-1, k)
     m = pw.m
+    spec = formats.get(pw.fmt)
 
-    if pw.fmt == "i2s":
-        y32 = _i2s_like(x2, pw.planes["p"], m, i2s_matmul, interpret)
-    elif pw.fmt == "tl1":
-        y32 = _i2s_like(x2, pw.planes["p"], m, tl1_matmul, interpret)
+    if spec.elut:
+        y32 = _elut_mad(x2, pw.planes["p"], m, spec, interpret)
     elif pw.fmt == "tl2k":
         y32 = _tl2k(x2, pw, interpret)
     else:
@@ -84,17 +87,23 @@ def mpgemm_pallas(
     return y.reshape(*lead, m)
 
 
-def _i2s_like(x2, packed, m, kernel, interpret):
+def _elut_mad(x2, packed, m, spec, interpret):
+    wpb = spec.weights_per_byte
     bn = _pick(128, ((x2.shape[0] + 127) // 128) * 128)
     x2p, n = _pad_rows(x2, bn)
-    planes = _quad_planes(x2p)
-    k4 = planes[0].shape[1]
-    y = kernel(
+    planes = _deinterleave(x2p, wpb)
+    kb = planes[0].shape[1]
+    y = elut_matmul(
         planes, packed,
-        bn=bn, bm=_pick(128, m), bk4=_pick(128, k4),
+        b=spec.base, g=spec.group, field_bits=spec.field_bits,
+        bn=bn, bm=_pick(128, m), bkc=_pick(128, kb),
         interpret=interpret,
     )
     return y[:n]
+
+
+def _tl1_tail(x2, packed, m, interpret):
+    return _elut_mad(x2, packed, m, formats.get("tl1"), interpret)
 
 
 def _tl2k(x2, pw, interpret):
@@ -112,7 +121,7 @@ def _tl2k(x2, pw, interpret):
             interpret=interpret,
         )[:n]
     if pw.three_k < pw.k:
-        tail = _i2s_like(x2[:, pw.three_k:], pw.planes["tail"], pw.m, tl1_matmul, interpret)
+        tail = _tl1_tail(x2[:, pw.three_k:], pw.planes["tail"], pw.m, interpret)
         y = tail if y is None else y + tail
     return y
 
@@ -138,23 +147,30 @@ def lut_gemv(
     lossless: bool = True,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """True-LUT decode GEMV (TL1_0/TL1_1): int8 [..., K] × tl1 [M, K] -> fp32 [..., M].
+    """True-LUT decode GEMV: int8 [..., K] × ELUT-format [M, K] -> fp32 [..., M].
 
-    The kernel itself is strictly single-row (the paper's batch-1 decode
-    regime): any leading dims must flatten to N == 1.  Multi-row inputs are
-    routed through the registry's batched LUT fallback (``tl*_lut``) instead
+    Parametric over any grouped ELUT format (tl1 = (3,2), int2 = (4,2),
+    int3 = (8,2)); ``lossless`` selects the int16 pack-and-unpack (``_1``)
+    vs int8-requantized-table (``_0``) variants.  The kernel itself is
+    strictly single-row (the paper's batch-1 decode regime): any leading
+    dims must flatten to N == 1.  Multi-row inputs are routed through the
+    registry's batched LUT fallback (the XLA one-hot contraction) instead
     of silently mis-tiling.
     """
     if interpret is None:
         interpret = _default_interpret()
-    if pw.fmt != "tl1":
-        raise ValueError(f"lut_gemv needs tl1 weights, got {pw.fmt!r}")
+    spec = formats.REGISTRY.get(pw.fmt)
+    if spec is None or not spec.supports_lut_gemv():
+        raise ValueError(
+            f"lut_gemv needs a grouped ELUT format "
+            f"{formats.lut_gemv_formats()}, got {pw.fmt!r} weights")
     k = x_q.shape[-1]
     if k != pw.k:
         raise ValueError(
             f"lut_gemv: activation K={k} does not match weight K={pw.k}")
-    if k % 4 != 0:
-        raise ValueError(f"lut_gemv needs K % 4 == 0, got K={k}")
+    if k % spec.k_align != 0:
+        raise ValueError(
+            f"lut_gemv needs K % {spec.k_align} == 0 for {pw.fmt}, got K={k}")
     lead = x_q.shape[:-1]
     n = 1
     for d in lead:
@@ -163,7 +179,7 @@ def lut_gemv(
         # batched fallback via the registry: same LUT semantics, GEMM regime.
         from repro.core import dispatch
 
-        name = "tl1_lut" if lossless else "tl1_lut_lossy"
+        name = f"{pw.fmt}_lut" + ("" if lossless else "_lossy")
         return dispatch.mpgemm(
             x_q, s_x, pw,
             dispatch.KernelPlan(gemv=name, gemm=name, interpret=interpret),
@@ -172,20 +188,21 @@ def lut_gemv(
     if s_x.size != 1:
         raise ValueError(
             f"lut_gemv needs a scalar activation scale, got shape {s_x.shape}")
-    from repro.core import packing
+    from repro.core import elut
 
     x1 = x_q.reshape(k)
-    lut = packing.tl1_build_lut(x1[None, :])[0]  # [G, 9] int32
+    lut = elut.build_lut(x1[None, :], spec.base, spec.group)[0]  # [G, C] int32
     s_lut = jnp.float32(1.0)
     if not lossless:
-        s_lut = jnp.maximum(jnp.max(jnp.abs(lut)).astype(jnp.float32), 1.0) / 127.0
-        lut = jnp.clip(jnp.round(lut / s_lut), -127, 127).astype(jnp.int32)
-    lut_even, lut_odd = lut[0::2], lut[1::2]
+        lut, s_lut = elut.quantize_lut(lut)
+    fpb = 8 // spec.field_bits
+    lut_planes = tuple(lut[f::fpb] for f in range(fpb))
     m = pw.m
-    ghb = _pick(128, k // 4)  # bytes per k-step tile
-    y32 = tl1_lut_gemv(
-        lut_even, lut_odd, pw.planes["p"],
-        bm=_pick(128, m), g_blk=2 * ghb,
+    n_bytes = pw.planes["p"].shape[1]
+    y32 = elut_lut_gemv(
+        lut_planes, pw.planes["p"],
+        n_entries=spec.lut_size, field_bits=spec.field_bits,
+        bm=_pick(128, m), byte_blk=_pick(128, n_bytes),
         lossless=lossless, interpret=interpret,
     )[:, 0]
     y = y32.astype(jnp.float32) * (s_lut * s_x.reshape(()) * pw.scale)

@@ -29,7 +29,7 @@ import jax
 import numpy as np
 
 from repro import configs
-from repro.core import dispatch
+from repro.core import dispatch, formats
 from repro.core.bitlinear import QuantConfig
 from repro.core.dispatch import KernelPlan
 from repro.infer.engine import Engine
@@ -38,13 +38,6 @@ from repro.serve import Request, ServeConfig, ServeEngine
 
 
 def build_plan(args) -> KernelPlan:
-    if args.lut:  # deprecated alias, kept so existing invocations still work
-        if args.fmt in ("tl1", "tl2"):
-            print(f"[serve] --lut is deprecated; use --gemv/--gemm "
-                  f"(mapping to the {args.lut} LUT kernels)")
-            return dispatch.lut_plan(args.fmt, lossless=(args.lut == "lossless"))
-        # historical behavior: lut was silently ignored for non-LUT formats
-        print(f"[serve] --lut has no effect for fmt={args.fmt!r} (ignored)")
     return KernelPlan(gemv=args.gemv, gemm=args.gemm, backend=args.backend)
 
 
@@ -72,15 +65,19 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-0.5b")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--fmt", default="i2s",
-                    choices=["i2s", "tl1", "tl2", "tl2k", "int4", "fp"])
+    ap.add_argument("--fmt", default="i2s", choices=list(formats.names()),
+                    help="weight format (any registry entry, incl. the "
+                         "non-ternary ELUT formats int2/int3)")
+    ap.add_argument("--act", default="token", choices=["token", "tensor"],
+                    help="activation quant granularity (default: token — "
+                         "composition-invariant under batching; 'tensor' is "
+                         "the bit-exact b1.58 scheme but ties logits to the "
+                         "step batch composition)")
     ap.add_argument("--gemv", default="auto",
                     help="kernel name for the N=1 decode regime (default: auto)")
     ap.add_argument("--gemm", default="auto",
                     help="kernel name for the batched regime (default: auto)")
     ap.add_argument("--backend", default="auto", choices=["auto", "xla", "pallas"])
-    ap.add_argument("--lut", default="", choices=["", "lossless", "lossy"],
-                    help="DEPRECATED: use --gemv/--gemm")
     ap.add_argument("--autotune-cache", default="",
                     help="autotune cache JSON: loaded if it exists; "
                          "written after --autotune")
@@ -109,9 +106,17 @@ def main():
     args = ap.parse_args()
 
     plan = build_plan(args)
+    if args.act == "tensor" and (args.slots > 1 or args.prefill_chunk > 1):
+        # the composition-dependent-logits caveat (DESIGN.md §7): one absmax
+        # per step means a request's logits depend on what it is batched with
+        print("[serve] WARNING: per-TENSOR activation quant with batched "
+              f"serving (slots={args.slots}, chunk={args.prefill_chunk}) ties "
+              "each request's logits to the step's batch composition; use the "
+              "default --act token for composition-invariant serving")
     cfg = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
     cfg = cfg.replace(dtype="float32",
-                      quant=QuantConfig(mode="quant", fmt=args.fmt, plan=plan))
+                      quant=QuantConfig(mode="quant", fmt=args.fmt, plan=plan,
+                                        act=args.act))
 
     if args.autotune_cache:
         import os

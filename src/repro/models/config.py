@@ -95,9 +95,9 @@ class ModelConfig:
         return dataclasses.replace(self, quant=quant)
 
     def with_plan(self, plan) -> "ModelConfig":
-        """Override the mpGEMM KernelPlan (clears any legacy impl/lut flags)."""
+        """Override the mpGEMM KernelPlan."""
         return dataclasses.replace(
-            self, quant=dataclasses.replace(self.quant, plan=plan, impl=None, lut=None))
+            self, quant=dataclasses.replace(self.quant, plan=plan))
 
     def replace(self, **kw) -> "ModelConfig":
         return dataclasses.replace(self, **kw)

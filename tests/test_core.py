@@ -18,7 +18,10 @@ from _hypo import given, settings, st
 from repro.core import bitlinear, mpgemm, packing, quant
 from repro.core.qtensor import FORMAT_BPW, pack_ternary, pack_weight, unpack_weight
 
-FORMATS = ["i2s", "tl1", "tl2", "tl2k", "tq1", "int4"]
+# Every integer format: ternary {-1,0,1} is a valid code set for all of
+# them, so the ternary equivalence sweeps cover int2/int3 too (full-range
+# non-ternary coverage lives in test_formats.py).
+FORMATS = ["i2s", "tl1", "tl2", "tl2k", "tq1", "int4", "int2", "int3"]
 
 
 def random_ternary(rng: np.random.Generator, m: int, k: int) -> jnp.ndarray:

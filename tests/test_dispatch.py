@@ -121,20 +121,37 @@ def test_plan_override_and_errors():
         dispatch.mpgemm(x_q[:, :512], jnp.float32(1.0), pw)
 
 
-def test_legacy_string_flags_shim():
-    """Old impl=/lut= call sites keep their exact historical routing."""
-    x_q, w = _data(5, 4, 768, 32)
-    ref = np.asarray(mpgemm.mpgemm_xla(
-        x_q, jnp.float32(1.0), pack_ternary(w, jnp.float32(1.0), "i2s")))
-    mark = dispatch.decision_count()
-    y_p = mpgemm.mpgemm(x_q, jnp.float32(1.0),
-                        pack_ternary(w, jnp.float32(1.0), "i2s"), impl="pallas")
-    y_l = mpgemm.mpgemm(x_q, jnp.float32(1.0),
-                        pack_ternary(w, jnp.float32(1.0), "tl1"), lut="lossless")
-    np.testing.assert_array_equal(np.asarray(y_p), ref)
-    np.testing.assert_array_equal(np.asarray(y_l), ref)
-    kinds = [(d.kernel, d.source) for d in dispatch.decisions_since(mark)]
-    assert kinds == [("pallas", "legacy"), ("tl1_lut", "legacy")]
+def test_legacy_string_shim_removed():
+    """The deprecated impl=/lut= string shim is gone: ``mpgemm`` the module
+    no longer exposes a dispatching entry point, and QuantConfig rejects the
+    old flags — every call site must route through dispatch.mpgemm(plan)."""
+    assert not hasattr(mpgemm, "mpgemm")
+    with pytest.raises(TypeError):
+        QuantConfig(mode="quant", fmt="tl1", impl="pallas")
+    with pytest.raises(TypeError):
+        QuantConfig(mode="quant", fmt="tl1", lut="lossless")
+
+
+def test_registry_enumerated_from_formats():
+    """KernelSpecs are derived from the format registry: every grouped ELUT
+    format (incl. the non-ternary int2/int3) has XLA LUT kernels and is
+    covered by the true-LUT GEMV kernel, with cost hints derived from the
+    spec's table size (hbm 8·C/g, MXU inflation C/g)."""
+    from repro.core import formats as fmtreg
+
+    for f in fmtreg.lut_gemv_formats():
+        spec_f = fmtreg.get(f)
+        for name in (f"{f}_lut", f"{f}_lut_lossy"):
+            ks = dispatch.REGISTRY[name]
+            assert ks.fmts == (f,)
+            assert ks.hbm_bpw == pytest.approx(8.0 * spec_f.lut_size / spec_f.group)
+            assert ks.mxu_inflation == pytest.approx(spec_f.lut_size / spec_f.group)
+        assert f in dispatch.REGISTRY["lut_gemv"].fmts
+        assert f in dispatch.REGISTRY["pallas"].fmts
+    assert {"int2", "int3"} <= set(fmtreg.lut_gemv_formats())
+    # ternary napkin math: tl1 C/g = 9/2, tl2 folded table 14/3
+    assert dispatch.REGISTRY["tl1_lut"].mxu_inflation == pytest.approx(4.5)
+    assert dispatch.REGISTRY["tl2_lut"].mxu_inflation == pytest.approx(14 / 3)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,253 @@
+"""Format registry + parametric ELUT engine (DESIGN.md §2, paper Appendix).
+
+The refactor's acceptance claims, as executable assertions:
+  * every REGISTERED format round-trips pack/unpack over its full code
+    range, property-based, including tl2 split-K with K not divisible by 24
+    and the non-ternary int2/int3 formats;
+  * the ternary ELUT instances are bit-identical to the legacy tl1/tl2/
+    lut_gemv kernels on matched shapes (the legacy kernels' contract was
+    exact int32 equality with the MAD oracle and the XLA LUT references —
+    asserted here against both, so equality is transitive and exact);
+  * int2/int3 pass mpGEMM-vs-fp32-reference through the same
+    registry-driven dispatch, GEMV and GEMM regimes;
+  * the serve-facing engine routes non-ternary ELUT decode through the
+    true-LUT GEMV kernel exactly like tl1.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypo import given, settings, st
+
+from repro import configs
+from repro.core import dispatch, elut, formats, mpgemm, packing
+from repro.core.bitlinear import QuantConfig
+from repro.core.dispatch import KernelPlan
+from repro.core.qtensor import pack_quantized, pack_weight, unpack_weight
+from repro.infer.engine import Engine, Request
+from repro.models import lm
+
+INTERPRET = True  # CPU container: Pallas kernel bodies execute via interpret
+
+PACKABLE = [f for f in formats.names() if f != "fp"]
+
+
+def random_codes(rng: np.random.Generator, fmt: str, m: int, k: int) -> jnp.ndarray:
+    """Full-range code matrix for a format (ternary for native int4)."""
+    spec = formats.get(fmt)
+    lo, hi = spec.levels if spec.base else (-1, 1)
+    return jnp.asarray(rng.integers(lo, hi + 1, size=(m, k)), jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# Registry round-trips (property-based, full code range)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m=st.integers(1, 9),
+    k_units=st.sampled_from([4, 13, 25, 192, 250]),  # K = 4·u: 16, 52, 100, 768, 1000
+    seed=st.integers(0, 2**31 - 1),
+    fmt=st.sampled_from(PACKABLE),
+)
+def test_registry_roundtrip_property(m, k_units, seed, fmt):
+    """Pack/unpack is a bijection on valid code matrices for EVERY registered
+    format.  K = 4·k_units deliberately includes values not divisible by 24
+    (52, 100, 1000): tl2/tl2k exercise block-fitting split-K with a tl1 tail."""
+    k = 4 * k_units
+    rng = np.random.default_rng(seed)
+    w = random_codes(rng, fmt, m, k)
+    pw = pack_quantized(w, jnp.float32(1.0), fmt)
+    rt = unpack_weight(pw)
+    np.testing.assert_array_equal(np.asarray(rt, np.int8), np.asarray(w))
+
+
+def test_tl2_split_k_not_multiple_of_24():
+    """K=1000: ThreeK=984 (tl2 planes) + TwoK=16 (tl1 tail), exact."""
+    rng = np.random.default_rng(24)
+    w = random_codes(rng, "tl2", 8, 1000)
+    pw = pack_quantized(w, jnp.float32(1.0), "tl2")
+    assert pw.three_k == 984 and set(pw.planes) == {"idx", "sign", "tail"}
+    np.testing.assert_array_equal(np.asarray(unpack_weight(pw)), np.asarray(w))
+
+
+def test_format_spec_derived_quantities():
+    """The napkin math the cost hints are built from, per spec."""
+    tl1 = formats.get("tl1")
+    assert (tl1.base, tl1.group, tl1.lut_size) == (3, 2, 9)
+    assert tl1.mxu_inflation == pytest.approx(4.5)      # C/g = 9/2
+    assert tl1.lut_hbm_bpw == pytest.approx(36.0)       # 8·C/g
+    int2 = formats.get("int2")
+    assert (int2.base, int2.group, int2.lut_size) == (4, 2, 16)
+    assert int2.levels == (-2, 1) and int2.bpw == 2.0
+    assert int2.mxu_inflation == pytest.approx(8.0)
+    int3 = formats.get("int3")
+    assert (int3.base, int3.group, int3.lut_size) == (8, 2, 64)
+    assert int3.levels == (-4, 3) and int3.bpw == 4.0
+    assert int3.mxu_inflation == pytest.approx(32.0)
+    tl2 = formats.get("tl2")
+    assert tl2.lut_size == 14                            # folded mirror table
+    assert tl2.mxu_inflation == pytest.approx(14 / 3)
+    assert formats.lut_gemv_formats() == ("tl1", "int2", "int3")
+    assert not formats.get("i2s").supports_lut_gemv()    # g=1: no table win
+
+
+def test_unknown_format_rejected():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.integers(-1, 2, size=(4, 16)), jnp.int8)
+    with pytest.raises(ValueError, match="unknown format"):
+        pack_quantized(w, jnp.float32(1.0), "int5")
+
+
+# ---------------------------------------------------------------------------
+# Ternary ELUT instances == legacy tl1/tl2/lut_gemv behaviour (bit-identical)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 4))
+def test_elut_ternary_matches_legacy_tl1_lut(seed, n):
+    """elut_mpgemm at (3, 2) == the legacy tl1_lut one-hot reference ==
+    the MAD oracle, exactly (int32 accumulation)."""
+    rng = np.random.default_rng(seed)
+    k, m = 768, 32
+    w = random_codes(rng, "tl1", m, k)
+    x_q = jnp.asarray(rng.integers(-127, 128, size=(n, k)), jnp.int8)
+    pw = pack_quantized(w, jnp.float32(1.0), "tl1")
+    ref = np.asarray(mpgemm.mpgemm_xla(x_q, jnp.float32(1.0), pw))
+    y_elut = np.asarray(elut.elut_mpgemm(x_q, jnp.float32(1.0), pw, lossless=True))
+    y_tl1 = np.asarray(mpgemm.tl1_lut(x_q, jnp.float32(1.0), pw, lossless=True))
+    np.testing.assert_array_equal(y_elut, ref)
+    np.testing.assert_array_equal(y_elut, y_tl1)
+
+
+def test_elut_pack_bit_identical_to_legacy_layouts():
+    """The parametric packer reproduces the exact legacy byte layouts:
+    tl1 = (3,2,4) nibble codes, i2s = (3,1,2) 2-bit fields, tq1 = (3,5,8)."""
+    rng = np.random.default_rng(7)
+    w = jnp.asarray(rng.integers(-1, 2, size=(8, 760)), jnp.int8)
+    # hand-computed legacy tl1 bytes: code = 3·(w0+1) + (w1+1), lo|hi<<4
+    t = (np.asarray(w, np.int32) + 1).reshape(8, -1, 2)
+    code = t[..., 0] * 3 + t[..., 1]
+    legacy_tl1 = (code[:, 0::2] | (code[:, 1::2] << 4)).astype(np.uint8)
+    np.testing.assert_array_equal(
+        np.asarray(packing.elut_pack(w, 3, 2, 4)), legacy_tl1)
+    # legacy i2s bytes: 2-bit codes w+1, 4 per byte little-endian
+    c = (np.asarray(w, np.int32) + 1).reshape(8, -1, 4)
+    legacy_i2s = (c[..., 0] | (c[..., 1] << 2) | (c[..., 2] << 4)
+                  | (c[..., 3] << 6)).astype(np.uint8)
+    np.testing.assert_array_equal(
+        np.asarray(packing.elut_pack(w, 3, 1, 2)), legacy_i2s)
+    # legacy tq1 bytes: base-3 big-endian over 5 trits
+    t5 = (np.asarray(w, np.int32) + 1).reshape(8, -1, 5)
+    legacy_tq1 = (t5[..., 0] * 81 + t5[..., 1] * 27 + t5[..., 2] * 9
+                  + t5[..., 3] * 3 + t5[..., 4]).astype(np.uint8)
+    np.testing.assert_array_equal(
+        np.asarray(packing.elut_pack(w, 3, 5, 8, pad=True)), legacy_tq1)
+
+
+@pytest.mark.parametrize("lossless", [True, False])
+def test_lut_gemv_ternary_matches_legacy_contract(lossless):
+    """The parametric GEMV kernel at (3, 2) keeps the legacy lut_gemv
+    contract on matched shapes: exact int32 equality with the MAD oracle
+    when lossless, bounded deviation when lossy."""
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(3)
+    k, m = 1024, 128
+    w = random_codes(rng, "tl1", m, k)
+    x_q = jnp.asarray(rng.integers(-127, 128, size=(k,)), jnp.int8)
+    pw = pack_quantized(w, jnp.float32(1.0), "tl1")
+    y = ops.lut_gemv(x_q, jnp.float32(1.0), pw, lossless=lossless,
+                     interpret=INTERPRET)
+    y_ref = np.asarray(ref.mpgemm_int32(x_q[None], w))[0]
+    if lossless:
+        np.testing.assert_array_equal(np.asarray(y, np.int64),
+                                      y_ref.astype(np.int64))
+    else:
+        rel = np.abs(np.asarray(y) - y_ref).max() / max(np.abs(y_ref).max(), 1)
+        assert 0 <= rel < 0.05
+
+
+# ---------------------------------------------------------------------------
+# Non-ternary ELUT formats through registry-driven dispatch
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1, 5])
+@pytest.mark.parametrize("fmt", ["int2", "int3"])
+def test_nonternary_mpgemm_vs_fp32_reference(fmt, n):
+    """dispatch.mpgemm on int2/int3 == the fp32 dequantized matmul (to fp
+    rounding), both regimes, full code range."""
+    rng = np.random.default_rng(17 + n)
+    k, m = 768, 64
+    w = random_codes(rng, fmt, m, k)
+    s_w, s_x = jnp.float32(0.37), jnp.float32(0.0113)
+    x_q = jnp.asarray(rng.integers(-127, 128, size=(n, k)), jnp.int8)
+    pw = pack_quantized(w, s_w, fmt)
+    mark = dispatch.decision_count()
+    y = np.asarray(dispatch.mpgemm(x_q, s_x, pw, KernelPlan(interpret=INTERPRET)))
+    ref = (np.asarray(x_q, np.float64) * float(s_x)) @ \
+          (np.asarray(w, np.float64) * float(s_w)).T
+    np.testing.assert_allclose(y, ref, rtol=1e-5, atol=1e-5)
+    (dec,) = dispatch.decisions_since(mark)
+    assert dec.fmt == fmt and dispatch.REGISTRY[dec.kernel].lossless
+    if n == 1:
+        assert dec.kernel == "lut_gemv"  # the ELUT decode regime
+
+
+@pytest.mark.parametrize("fmt", ["int2", "int3"])
+def test_nonternary_quantize_pack_weight(fmt):
+    """pack_weight runs the format's own training-side rule: absmean scale,
+    codes clipped to the format's levels, dequant error bounded by s/2."""
+    spec = formats.get(fmt)
+    w = jax.random.normal(jax.random.PRNGKey(0), (16, 256))
+    pw = pack_weight(w, fmt)
+    codes = np.asarray(unpack_weight(pw))
+    lo, hi = spec.levels
+    assert codes.min() >= lo and codes.max() <= hi
+    # levels beyond ternary are actually used (non-ternary quantizer)
+    assert codes.min() < -1 or codes.max() > 1
+    inside = (codes > lo) & (codes < hi)  # clipped entries deviate more
+    err = np.abs(np.asarray(w) - codes * float(pw.scale))
+    assert err[inside].max() <= float(pw.scale) / 2 + 1e-6
+
+
+@pytest.mark.parametrize("fmt", ["int2", "int3"])
+def test_elut_lossy_bounded_nonternary(fmt):
+    """The T-MAC int8-requantized table stays boundedly lossy at (4,2)/(8,2)."""
+    rng = np.random.default_rng(5)
+    k, m, n = 1536, 64, 4
+    w = random_codes(rng, fmt, m, k)
+    x_q = jnp.asarray(rng.integers(-127, 128, size=(n, k)), jnp.int8)
+    pw = pack_quantized(w, jnp.float32(1.0), fmt)
+    ref = np.asarray(mpgemm.mpgemm_xla(x_q, jnp.float32(1.0), pw))
+    y0 = np.asarray(elut.elut_mpgemm(x_q, jnp.float32(1.0), pw, lossless=False))
+    rel = np.abs(y0 - ref).max() / np.abs(ref).max()
+    assert 0 < rel < 0.05, rel
+
+
+# ---------------------------------------------------------------------------
+# Serve threading: the engine's decode regime rides the ELUT GEMV kernel
+# ---------------------------------------------------------------------------
+
+
+def test_engine_single_slot_decode_routes_lut_gemv_int2():
+    cfg = configs.smoke("qwen1.5-0.5b").replace(
+        dtype="float32", quant=QuantConfig(mode="quant", fmt="int2"))
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    eng = Engine(params, cfg, batch_slots=1, max_seq=32)
+    eng.submit(Request(rid=0, prompt=[3, 1, 4], max_new_tokens=3))
+    done = eng.run()
+    assert len(done) == 1 and len(done[0].out_tokens) == 3
+    gemv = [d for d in eng.kernel_decisions() if d.regime == "gemv"]
+    assert gemv and all(d.kernel == "lut_gemv" for d in gemv)
+
+
+def test_lut_plan_generalizes_to_elut_formats():
+    plan = dispatch.lut_plan("int3", lossless=False)
+    assert plan.gemv == "lut_gemv_lossy" and plan.gemm == "int3_lut_lossy"
+    spec, src = dispatch.select("int3", 1, 768, 64, plan)
+    assert spec.name == "lut_gemv_lossy" and src == "override"

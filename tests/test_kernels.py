@@ -45,8 +45,27 @@ def test_mpgemm_kernels_vs_oracle(fmt, n, k, m):
     np.testing.assert_array_equal(np.asarray(y, np.int64), y_ref.astype(np.int64))
 
 
+@pytest.mark.parametrize("fmt", ["int2", "int3"])
+@pytest.mark.parametrize("n,k,m", [(8, 768, 128), (3, 768, 256)])
+def test_mpgemm_kernel_nonternary_full_range(fmt, n, k, m):
+    """The parametric MAD kernel at (4,2)/(8,2) over the full code range."""
+    from repro.core import formats
+    from repro.core.qtensor import pack_quantized
+
+    lo, hi = formats.get(fmt).levels
+    rng = np.random.default_rng(n + k)
+    w = jnp.asarray(rng.integers(lo, hi + 1, size=(m, k)), jnp.int8)
+    x_q = jnp.asarray(rng.integers(-127, 128, size=(n, k)), jnp.int8)
+    pw = pack_quantized(w, jnp.float32(1.0), fmt)
+    y = ops.mpgemm_pallas(x_q, jnp.float32(1.0), pw, interpret=INTERPRET)
+    np.testing.assert_array_equal(
+        np.asarray(y, np.int64),
+        np.asarray(ref.mpgemm_int32(x_q, w), np.int64))
+
+
 @settings(max_examples=10, deadline=None)
-@given(seed=st.integers(0, 2**31 - 1), fmt=st.sampled_from(["i2s", "tl1", "tl2k"]))
+@given(seed=st.integers(0, 2**31 - 1),
+       fmt=st.sampled_from(["i2s", "tl1", "tl2k", "int2", "int3"]))
 def test_mpgemm_kernels_property(seed, fmt):
     x_q, w = _data(seed, 4, 768, 128)
     pw = pack_ternary(w, jnp.float32(1.0), fmt)
@@ -77,13 +96,24 @@ def test_act_quant_kernel(shape, dtype):
     assert float(s_k) == pytest.approx(float(s_r), rel=1e-6)
 
 
+LUT_GEMV_CASES = [  # (fmt, k, m): full shape sweep for tl1, spot for int2/int3
+    ("tl1", 512, 128), ("tl1", 1024, 256), ("tl1", 512, 64),
+    ("int2", 512, 128), ("int3", 512, 64),
+]
+
+
 @pytest.mark.parametrize("lossless", [True, False])
-@pytest.mark.parametrize("k,m", [(512, 128), (1024, 256), (512, 64)])
-def test_lut_gemv_kernel(k, m, lossless):
+@pytest.mark.parametrize("fmt,k,m", LUT_GEMV_CASES)
+def test_lut_gemv_kernel(k, m, lossless, fmt):
+    """True-LUT GEMV, parametric over (b, g): ternary tl1 plus the
+    non-ternary int2/int3 ELUT instances, full code range."""
+    from repro.core import formats
+
+    lo, hi = formats.get(fmt).levels
     rng = np.random.default_rng(k + m)
-    w = jnp.asarray(rng.integers(-1, 2, size=(m, k)), jnp.int8)
+    w = jnp.asarray(rng.integers(lo, hi + 1, size=(m, k)), jnp.int8)
     x_q = jnp.asarray(rng.integers(-127, 128, size=(k,)), jnp.int8)
-    pw = pack_ternary(w, jnp.float32(1.0), "tl1")
+    pw = pack_ternary(w, jnp.float32(1.0), fmt)
     y = ops.lut_gemv(x_q, jnp.float32(1.0), pw, lossless=lossless, interpret=INTERPRET)
     y_ref = np.asarray(ref.mpgemm_int32(x_q[None], w))[0]
     if lossless:
@@ -156,7 +186,7 @@ def test_lut_gemv_shape_validation():
     pw_tl1 = pack_ternary(w, jnp.float32(1.0), "tl1")
     pw_i2s = pack_ternary(w, jnp.float32(1.0), "i2s")
     x = jnp.asarray(rng.integers(-127, 128, size=(k,)), jnp.int8)
-    with pytest.raises(ValueError, match="tl1 weights"):
+    with pytest.raises(ValueError, match="grouped ELUT format"):
         ops.lut_gemv(x, jnp.float32(1.0), pw_i2s, interpret=INTERPRET)
     with pytest.raises(ValueError, match="does not match"):
         ops.lut_gemv(x[: k // 2], jnp.float32(1.0), pw_tl1, interpret=INTERPRET)
