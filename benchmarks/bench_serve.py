@@ -1,8 +1,9 @@
 """Serving-subsystem benchmark (DESIGN.md §7): throughput + TTFT vs load.
 
-Sweeps the 2×2 serving matrix — dense vs paged KV, token-by-token vs
-chunked prefill — at two offered loads on the smoke config, measuring per
-cell:
+Sweeps the serving matrix — dense vs paged KV × token-by-token vs chunked
+vs BATCHED-concurrent prefill (``prefill_budget`` = slots · chunk: one
+[S, C] call per tick at mpGEMM N = S·C) — at two offered loads on the
+smoke config, measuring per cell:
 
   * wall throughput (generated tok/s),
   * TTFT mean / p95 (submit → first generated token; the chunked-prefill
@@ -10,9 +11,18 @@ cell:
     at prompt length ≥ 64 must beat token-by-token prefill),
   * queue wait p95 and KV-block occupancy (paged cells).
 
-All four cells run in the composition-invariant ``act="token"`` quant mode
-so generated tokens are comparable across cells (recorded as
+All cells run in the composition-invariant ``act="token"`` quant mode so
+generated tokens are comparable across cells (recorded as
 ``tokens_match_dense``).  Emits ``BENCH_serve.json``.
+
+CI smoke: ``python -m benchmarks.bench_serve --smoke`` runs the tiny 2×2
+(dense/paged × sequential/batched chunked prefill) sweep into the
+gitignored ``BENCH_serve.smoke.new.json`` and exits non-zero if the cell
+schema drifted, a baseline cell dropped out of the sweep, tokens stopped
+matching the dense reference, or any cell's wall time regressed
+reproducibly > 2× against the committed ``BENCH_serve.smoke.json``
+(sweep-share-normalized, confirmed by one re-sweep; refresh the baseline
+with ``--smoke --update-baseline`` on an idle machine).
 """
 
 from __future__ import annotations
@@ -23,38 +33,62 @@ import time
 import jax
 import numpy as np
 
+from benchmarks import smoke_gate
 from repro import configs
 from repro.core.bitlinear import QuantConfig
 from repro.models import lm
 from repro.serve import Request, ServeConfig, ServeEngine
 
 ARTIFACT = "BENCH_serve.json"
+SMOKE_BASELINE = "BENCH_serve.smoke.json"
+SMOKE_OUT = "BENCH_serve.smoke.new.json"
 PROMPT_LEN = 64          # the acceptance point: chunked must win TTFT here
 MAX_NEW = 8
 SLOTS = 3
 MAX_SEQ = 128
 CHUNK = 32
 BLOCK = 16
-MODES = [  # (label, paged, prefill_chunk)
-    ("dense_token", False, 1),
-    ("dense_chunked", False, CHUNK),
-    ("paged_token", True, 1),
-    ("paged_chunked", True, CHUNK),
+BUDGET = SLOTS * CHUNK   # batched cells: every prefilling slot packs a row
+MODES = [  # (label, paged, prefill_chunk, prefill_budget)
+    ("dense_token", False, 1, 0),
+    ("dense_chunked", False, CHUNK, 0),
+    ("dense_batched", False, CHUNK, BUDGET),
+    ("paged_token", True, 1, 0),
+    ("paged_chunked", True, CHUNK, 0),
+    ("paged_batched", True, CHUNK, BUDGET),
 ]
 LOADS = [3, 6]           # offered requests (≤ slots: unqueued; > slots: queued)
 
+# smoke gate: the 2×2 dense/paged × sequential/batched matrix at one
+# prompt-heavy load (every slot prefilling concurrently), reduced shapes
+SMOKE_PROMPT_LEN = 24
+SMOKE_MAX_NEW = 4
+SMOKE_CHUNK = 8
+SMOKE_MODES = [
+    ("dense_chunked", False, SMOKE_CHUNK, 0),
+    ("dense_batched", False, SMOKE_CHUNK, SLOTS * SMOKE_CHUNK),
+    ("paged_chunked", True, SMOKE_CHUNK, 0),
+    ("paged_batched", True, SMOKE_CHUNK, SLOTS * SMOKE_CHUNK),
+]
+SMOKE_LOADS = [3]
+REGRESSION_FACTOR = 2.0
+CELL_KEYS = {"mode", "paged", "prefill_chunk", "prefill_budget",
+             "load_requests", "prompt_len", "slots", "tokens_match_dense",
+             "wall_s", "throughput_tok_s", "ttft_mean_s", "ttft_p95_s",
+             "queue_wait_p95_s", "preemptions"}
 
-def _prompts(cfg, n):
+
+def _prompts(cfg, n, prompt_len):
     rng = np.random.default_rng(0)
-    return [rng.integers(0, cfg.vocab, size=PROMPT_LEN).tolist() for _ in range(n)]
+    return [rng.integers(0, cfg.vocab, size=prompt_len).tolist() for _ in range(n)]
 
 
-def _run_cell(params, cfg, paged, chunk, prompts):
+def _run_cell(params, cfg, paged, chunk, budget, prompts, max_new):
     eng = ServeEngine(params, cfg, ServeConfig(
         batch_slots=SLOTS, max_seq=MAX_SEQ, paged=paged,
-        block_size=BLOCK, prefill_chunk=chunk))
+        block_size=BLOCK, prefill_chunk=chunk, prefill_budget=budget))
     for i, p in enumerate(prompts):
-        eng.submit(Request(rid=i, prompt=p, max_new_tokens=MAX_NEW))
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=max_new))
     t0 = time.perf_counter()
     done = eng.run()
     wall = time.perf_counter() - t0
@@ -70,25 +104,34 @@ def _run_cell(params, cfg, paged, chunk, prompts):
     }, {r.rid: r.out_tokens for r in done}
 
 
-def run() -> list:
+def run(smoke: bool = False, artifact: str | None = None) -> list:
+    artifact = artifact or (SMOKE_OUT if smoke else ARTIFACT)
+    modes, loads = (SMOKE_MODES, SMOKE_LOADS) if smoke else (MODES, LOADS)
+    prompt_len = SMOKE_PROMPT_LEN if smoke else PROMPT_LEN
+    max_new = SMOKE_MAX_NEW if smoke else MAX_NEW
     rows = []
     cfg = configs.smoke("qwen1.5-0.5b").replace(
         dtype="float32",
         quant=QuantConfig(mode="quant", fmt="i2s", act="token"))
     params = lm.init(jax.random.PRNGKey(0), cfg)
     cells = []
-    for load in LOADS:
-        prompts = _prompts(cfg, load)
+    for load in loads:
+        prompts = _prompts(cfg, load, prompt_len)
         ref_tokens = None
-        for label, paged, chunk in MODES:
-            # warm the jit caches so TTFT measures serving, not tracing
-            _run_cell(params, cfg, paged, chunk, [prompts[0][:PROMPT_LEN]])
-            m, toks = _run_cell(params, cfg, paged, chunk, prompts)
-            if label == "dense_token":
+        for label, paged, chunk, budget in modes:
+            # warm the jit caches AT THE MEASURED LOAD so TTFT measures
+            # serving, not tracing — a 1-request warmup misses the shapes
+            # only multi-slot runs hit (scrub sizes, queueing), and the
+            # leftover compiles land on whichever cell runs them first
+            _run_cell(params, cfg, paged, chunk, budget, prompts, max_new)
+            m, toks = _run_cell(params, cfg, paged, chunk, budget, prompts,
+                                max_new)
+            if ref_tokens is None:  # first mode of the load = the reference
                 ref_tokens = toks
             cell = {
                 "mode": label, "paged": paged, "prefill_chunk": chunk,
-                "load_requests": load, "prompt_len": PROMPT_LEN,
+                "prefill_budget": budget,
+                "load_requests": load, "prompt_len": prompt_len,
                 "slots": SLOTS, "tokens_match_dense": toks == ref_tokens,
                 **m,
             }
@@ -97,28 +140,90 @@ def run() -> list:
                 f"serve_{label}_load{load}", m["ttft_mean_s"] * 1e6,
                 f"ttft_p95={m['ttft_p95_s']}s_thru={m['throughput_tok_s']}tok/s"
                 f"_match={toks == ref_tokens}"))
-    # the acceptance comparison: chunked vs token TTFT at prompt_len >= 64
     by = {(c["mode"], c["load_requests"]): c for c in cells}
-    for load in LOADS:
-        tok_t = by[("paged_token", load)]["ttft_mean_s"]
-        chk_t = by[("paged_chunked", load)]["ttft_mean_s"]
-        speedup = round(tok_t / max(chk_t, 1e-9), 2)  # fast backends round→~0
-        rows.append((f"serve_chunked_speedup_load{load}", 0.0,
-                     f"ttft_token={tok_t}s_chunked={chk_t}s_x{speedup}"))
+    for load in loads:
+        # the acceptance comparisons: chunked vs token TTFT at prompt_len
+        # >= 64, and batched vs sequential chunked throughput at a
+        # prompt-heavy load (>= 2 slots prefilling concurrently)
+        if ("paged_token", load) in by:
+            tok_t = by[("paged_token", load)]["ttft_mean_s"]
+            chk_t = by[("paged_chunked", load)]["ttft_mean_s"]
+            speedup = round(tok_t / max(chk_t, 1e-9), 2)  # fast backends → ~0
+            rows.append((f"serve_chunked_speedup_load{load}", 0.0,
+                         f"ttft_token={tok_t}s_chunked={chk_t}s_x{speedup}"))
+        for kv in ("dense", "paged"):
+            seqc = by.get((f"{kv}_chunked", load))
+            batc = by.get((f"{kv}_batched", load))
+            if seqc and batc:
+                win = round(batc["throughput_tok_s"]
+                            / max(seqc["throughput_tok_s"], 1e-9), 2)
+                rows.append((
+                    f"serve_batched_speedup_{kv}_load{load}", 0.0,
+                    f"thru_seq={seqc['throughput_tok_s']}"
+                    f"_batched={batc['throughput_tok_s']}tok/s_x{win}"))
     blob = {
         "backend": jax.default_backend(),
         "arch": "qwen1.5-0.5b(smoke)",
-        "prompt_len": PROMPT_LEN, "max_new": MAX_NEW, "slots": SLOTS,
-        "block_size": BLOCK, "prefill_chunk": CHUNK,
+        "smoke": smoke,
+        "prompt_len": prompt_len, "max_new": max_new, "slots": SLOTS,
+        "block_size": BLOCK,
+        "prefill_chunk": SMOKE_CHUNK if smoke else CHUNK,
+        "prefill_budget": (SLOTS * SMOKE_CHUNK) if smoke else BUDGET,
         "act_quant": "token (composition-invariant; see DESIGN.md §7)",
         "cells": cells,
     }
-    with open(ARTIFACT, "w") as f:
+    with open(artifact, "w") as f:
         json.dump(blob, f, indent=1)
-    rows.append((f"artifact_{ARTIFACT}", 0.0, f"{len(cells)}cells"))
+    rows.append((f"artifact_{artifact}", 0.0, f"{len(cells)}cells"))
     return rows
 
 
+# ---------------------------------------------------------------------------
+# CI smoke: schema + token-identity + per-cell regression gate
+# ---------------------------------------------------------------------------
+
+
+def _cell_key(c: dict) -> tuple:
+    return (c.get("mode"), c.get("load_requests"))
+
+
+def _normalized(blob: dict) -> dict:
+    """Per-cell wall-time shares of the sweep total (see smoke_gate)."""
+    return smoke_gate.share_of_total(
+        [(_cell_key(c), c["wall_s"]) for c in blob.get("cells", [])
+         if c.get("wall_s")])
+
+
+def _identity_check(c: dict) -> list:
+    """Serving-specific gate check: every cell's greedy tokens must match
+    the load's reference cell (act=token serving is composition-invariant,
+    so divergence means a real numerics break, not noise)."""
+    if c.get("tokens_match_dense", False):
+        return []
+    return [("identity", _cell_key(c),
+             f"cell {_cell_key(c)} tokens diverged from the reference cell "
+             "(batched/sequential/paged must be token-identical at "
+             "act=token)")]
+
+
+def check_regression(old_blob: dict, new_blob: dict,
+                     factor: float = REGRESSION_FACTOR) -> list:
+    """Shared gate checks (schema drift, dropped cells, >factor
+    share-normalized wall regressions — see smoke_gate.check_cells) plus
+    the serving-only token-identity check."""
+    return smoke_gate.check_cells(
+        old_blob, new_blob, cell_key=_cell_key, cell_keys=CELL_KEYS,
+        normalized=_normalized, factor=factor,
+        extra_cell_checks=(_identity_check,))
+
+
+def main(argv: list | None = None) -> int:
+    return smoke_gate.gate_main(
+        argv, tag="bench_serve", run=run, check_regression=check_regression,
+        baseline=SMOKE_BASELINE, out=SMOKE_OUT, factor=REGRESSION_FACTOR,
+        smoke_help="tiny 2x2 dense/paged x sequential/batched sweep with "
+                   "schema + token-identity checks")
+
+
 if __name__ == "__main__":
-    for name, us, derived in run():
-        print(f"{name},{us:.1f},{derived}")
+    raise SystemExit(main())

@@ -4,25 +4,51 @@
   bench_quality  — Table 2: lossless / lossy inference quality
   bench_tradeoff — Fig 8 / Appendix A-B: compute-memory trade-off vs batch
   bench_roofline — §Roofline: aggregated dry-run terms per (arch × shape)
-  bench_serve    — serving matrix: dense/paged × token/chunked, TTFT vs load
+  bench_serve    — serving matrix: dense/paged × token/chunked/batched,
+                   TTFT + throughput vs load
 
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,derived`` CSV.  ``--only NAME`` (repeatable)
+restricts the run to the named suites — e.g. ``--only serve`` regenerates
+``BENCH_serve.json`` without paying for the mpGEMM sweep (what the CI
+serving gate wants).
 """
 
+import argparse
 import sys
 import traceback
 
 
-def main() -> None:
+def _suites() -> dict:
     from benchmarks import (bench_mpgemm, bench_quality, bench_roofline,
                             bench_serve, bench_tradeoff)
 
+    return {
+        "mpgemm": bench_mpgemm,
+        "quality": bench_quality,
+        "tradeoff": bench_tradeoff,
+        "roofline": bench_roofline,
+        "serve": bench_serve,
+    }
+
+
+def main(argv=None) -> None:
+    suites = _suites()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", action="append", choices=sorted(suites),
+                    metavar="SUITE",
+                    help="run only this suite (repeatable); default: all of "
+                         + ", ".join(suites))
+    args = ap.parse_args(argv)
+    picked = args.only or list(suites)
+
     print("name,us_per_call,derived")
-    for mod in (bench_mpgemm, bench_quality, bench_tradeoff, bench_roofline,
-                bench_serve):
+    for name in suites:  # registry order, filtered — stable output order
+        if name not in picked:
+            continue
+        mod = suites[name]
         try:
-            for name, us, derived in mod.run():
-                print(f"{name},{us:.1f},{derived}")
+            for row_name, us, derived in mod.run():
+                print(f"{row_name},{us:.1f},{derived}")
         except Exception:
             traceback.print_exc()
             print(f"{mod.__name__},-1,FAILED", file=sys.stdout)

@@ -1,0 +1,160 @@
+"""Shared CLI scaffolding for the benchmark smoke gates (CI).
+
+Both gates (``bench_mpgemm --smoke``, ``bench_serve --smoke``) follow the
+same protocol: run a reduced sweep into a gitignored ``*.smoke.new.json``
+scratch artifact (committed artifacts are never clobbered), compare it
+against a committed ``*.smoke.json`` baseline with a suite-specific
+``check_regression(old_blob, new_blob)``, and — because single-pass
+timings jitter well past any sane factor under CI-runner contention —
+confirm TIMING failures on one independent re-sweep before tripping,
+while schema/identity failures always fail.  This module is the ONE home
+of that protocol; the suites supply only their sweep and their checker.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+
+def share_of_total(pairs: list) -> dict:
+    """(key, value) pairs → key → value / total.
+
+    The gates compare each cell's *share* of the sweep, not raw time:
+    normalizing by the whole sweep's aggregate cancels machine speed and
+    load, which raw microseconds — and small single-cell denominators —
+    do not.  Empty / all-zero input → {} (nothing gateable)."""
+    total = sum(v for _, v in pairs)
+    if not total:
+        return {}
+    return {k: v / total for k, v in pairs}
+
+
+def check_cells(old_blob: dict, new_blob: dict, *, cell_key, cell_keys: set,
+                normalized, factor: float, extra_cell_checks=(),
+                timing_keys=None) -> list:
+    """The shared gate checks; returns (kind, key, message) failures.
+
+    * cell-schema drift — a cell missing expected keys OR carrying unknown
+      ones (renames look like one of each) always fails;
+    * baseline coverage — every baseline cell must still be swept: a cell
+      silently dropping out of the sweep is the headline regression these
+      gates exist to catch;
+    * timing — share-normalized ratios (see :func:`share_of_total`) beyond
+      ``factor``, compared only when backends match (cross-backend timings
+      are not comparable).  Callers re-sweep to confirm these
+      (:func:`gate_main`) because single-pass timings jitter.
+
+    ``extra_cell_checks``: suite-specific callables ``cell -> [failures]``
+    (e.g. the serving gate's token-identity check).
+    """
+    failures = []
+    for c in new_blob.get("cells", []):
+        missing = cell_keys - set(c)
+        extra = set(c) - cell_keys
+        if missing:
+            failures.append(("schema", cell_key(c),
+                             f"cell {cell_key(c)} missing keys {sorted(missing)}"))
+        if extra:  # update the suite's CELL_KEYS with any schema change so
+            #        the gate validates the new shape
+            failures.append(("schema", cell_key(c),
+                             f"cell {cell_key(c)} has unknown keys {sorted(extra)}"))
+        for chk in extra_cell_checks:
+            failures.extend(chk(c))
+    new_keys = {cell_key(c) for c in new_blob.get("cells", [])}
+    for c in old_blob.get("cells", []):
+        if cell_key(c) not in new_keys:
+            failures.append(("schema", cell_key(c),
+                             f"baseline cell {cell_key(c)} missing from the "
+                             "fresh sweep (cell dropped?)"))
+    if old_blob.get("backend") != new_blob.get("backend"):
+        return failures
+    old_ratios = normalized(old_blob)
+    new_ratios = normalized(new_blob)
+    for key, new_r in new_ratios.items():
+        old_r = old_ratios.get(key)
+        if old_r and new_r > factor * old_r:
+            failures.append(
+                ("timing", key,
+                 f"cell {key}: {100 * new_r:.2f}% of sweep vs "
+                 f"{100 * old_r:.2f}% committed (> {factor}x regression)"))
+    # a baseline timing key vanishing from a still-present cell (e.g. a
+    # kernel dropping out of a cell's candidate set) is a coverage
+    # regression the cell-level check cannot see.  Presence is judged on
+    # the RAW sweep (``timing_keys(blob)``), not the noise-filtered
+    # ``normalized`` view: a cell drifting under a suite's noise-floor
+    # cutoff as machines change speed must not read as a dropped kernel.
+    # Classified "timing" so gate_main's re-sweep confirms it.
+    present = (set(new_ratios) if timing_keys is None
+               else timing_keys(new_blob))
+    for key in old_ratios:
+        if key not in present:
+            failures.append(
+                ("timing", key,
+                 f"baseline timing key {key} missing from the fresh sweep "
+                 "(kernel dropped from the cell's candidate set?)"))
+    return failures
+
+
+def gate_main(argv: list | None, *, tag: str, run, check_regression,
+              baseline: str, out: str, factor: float,
+              smoke_help: str) -> int:
+    """The gate CLI: ``--smoke`` (sweep + gate) / ``--update-baseline``.
+
+    ``run(smoke, artifact=None)`` performs the sweep and yields CSV rows;
+    ``check_regression(old, new)`` returns (kind, key, message) failures
+    where only ``kind == "timing"`` entries need re-sweep confirmation.
+    """
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help=f"{smoke_help} (written to the gitignored {out}; "
+                         "committed artifacts are never overwritten) + "
+                         f"gate vs the committed {baseline} (CI)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help=f"write the smoke sweep to {baseline} (refreshing "
+                         "the committed gate baseline) instead of gating; "
+                         "implies --smoke")
+    args = ap.parse_args(argv)
+
+    if args.update_baseline:
+        for name, us, derived in run(smoke=True, artifact=baseline):
+            print(f"{name},{us:.1f},{derived}")
+        return 0
+    old_blob = None
+    if args.smoke:
+        if not os.path.exists(baseline):
+            # the baseline's absence in CI is itself a defect — a green
+            # step that checked nothing is worse than a red one
+            print(f"[{tag}] FAIL: committed {baseline} not found; run "
+                  "--update-baseline on an idle machine and commit the "
+                  "result")
+            return 1
+        with open(baseline) as f:
+            old_blob = json.load(f)
+    for name, us, derived in run(smoke=args.smoke):
+        print(f"{name},{us:.1f},{derived}")
+    if old_blob is None:
+        return 0
+    with open(out) as f:
+        new_blob = json.load(f)
+    failures = check_regression(old_blob, new_blob)
+    if any(kind == "timing" for kind, _, _ in failures):
+        print(f"[{tag}] {len(failures)} candidate failure(s); re-sweeping "
+              "to filter measurement noise")
+        run(smoke=True)
+        with open(out) as f:
+            second_blob = json.load(f)
+        confirmed = {key for kind, key, _ in
+                     check_regression(old_blob, second_blob)
+                     if kind == "timing"}
+        failures = [f for f in failures
+                    if f[0] != "timing" or f[1] in confirmed]
+    for _, _, msg in failures:
+        print(f"[{tag}] REGRESSION: {msg}")
+    if failures:
+        return 1
+    print(f"[{tag}] smoke gate ok ({len(new_blob['cells'])} cells, no "
+          f"schema drift, no reproducible >{factor}x cell regression)")
+    return 0

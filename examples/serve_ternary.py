@@ -55,14 +55,15 @@ def main():
     same = results["i2s"] == results["tl2k"] == results["tl1_lossless"]
     print("lossless formats generate identically:", same)
 
-    # the serving subsystem (DESIGN.md §7): paged KV + chunked prefill +
-    # admission scheduling, same tokens as the dense engine in the
-    # composition-invariant act="token" quant mode.
+    # the serving subsystem (DESIGN.md §7): paged KV + BATCHED concurrent
+    # prefill (prefill_budget = slots · chunk → one [3, 8] call per tick at
+    # mpGEMM N = 24) + admission scheduling, same tokens as the dense
+    # engine in the composition-invariant act="token" quant mode.
     cfg = base.replace(quant=QuantConfig(mode="quant", fmt="i2s", act="token"))
     dense = Engine(params, cfg, batch_slots=3, max_seq=96)
     srv = ServeEngine(params, cfg, ServeConfig(
         batch_slots=3, max_seq=96, paged=True, block_size=16,
-        prefill_chunk=8))
+        prefill_chunk=8, prefill_budget=24))
     for i, p in enumerate(prompts):
         dense.submit(Request(rid=i, prompt=p, max_new_tokens=12))
         srv.submit(Request(rid=i, prompt=p, max_new_tokens=12),
@@ -71,7 +72,7 @@ def main():
     t0 = time.perf_counter()
     got = {r.rid: r.out_tokens for r in srv.run()}
     s = srv.metrics_summary()
-    print(f"paged+chunked : {s['generated_tokens']} tokens in "
+    print(f"paged+batched : {s['generated_tokens']} tokens in "
           f"{time.perf_counter() - t0:5.2f}s, ttft p95 {s['ttft_p95']:.2f}s, "
           f"matches dense: {got == ref}")
 

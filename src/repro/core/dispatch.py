@@ -245,13 +245,16 @@ _CHUNK_BUCKETS: set[int] = set()
 
 
 def register_chunk_bucket(n: int) -> None:
-    """Pin an exact N-bucket for a serving prefill-chunk size.
+    """Pin an exact N-bucket for a serving prefill batch.
 
     The serving engine's chunked prefill always dispatches at exactly
-    N = chunk, so snapping that N to its own bucket lets the autotune cache
-    store a winner for the shape that actually runs, instead of smearing it
-    into the next power of two (a 48-token chunk would otherwise share the
-    64 bucket).  Power-of-two chunks are already exact; idempotent.
+    N = chunk (sequential per-slot chunks) or N = S·C (batched concurrent
+    prefill: S = budget // C rows, padding included, every tick), so
+    snapping that N to its own bucket lets the autotune cache store a
+    winner for the shape that actually runs, instead of smearing it into
+    the next power of two (a 48-token chunk would otherwise share the 64
+    bucket; a 3·32 = 96 batched tick the 128 one).  Power-of-two values
+    are already exact; idempotent.
     """
     if n > 1:
         _CHUNK_BUCKETS.add(int(n))

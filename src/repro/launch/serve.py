@@ -48,7 +48,8 @@ def make_engine(args, params, cfg):
         batch_slots=args.slots, max_seq=args.max_seq, paged=args.paged,
         block_size=args.block_size,
         kv_blocks=args.kv_blocks or None,
-        prefill_chunk=args.prefill_chunk))
+        prefill_chunk=args.prefill_chunk,
+        prefill_budget=args.prefill_budget))
 
 
 def submit_burst(eng, cfg, rng, rids, max_new):
@@ -99,6 +100,10 @@ def main():
                     help="total KV pool blocks (0 → slots·ceil(max_seq/bs))")
     ap.add_argument("--prefill-chunk", type=int, default=1,
                     help="prompt tokens per prefill chunk (1 → token-by-token)")
+    ap.add_argument("--prefill-budget", type=int, default=0,
+                    help="prefill tokens per tick, packed as ONE batched "
+                         "[budget//chunk, chunk] call (mpGEMM N = S*C); "
+                         "0 → sequential per-slot chunks")
     ap.add_argument("--bursty", type=int, default=0,
                     help="bursty-arrival simulation: N bursts of --requests "
                          "requests with decode ticks between bursts")
@@ -126,7 +131,18 @@ def main():
                   f"({len(dispatch.active_cache().entries)} entries)")
 
     d, f = cfg.d_model, cfg.d_ff or cfg.d_model
-    batch_ns = [1, args.slots] + ([args.prefill_chunk] if args.prefill_chunk > 1 else [])
+    batch_ns = [1, args.slots]
+    if args.prefill_chunk > 1:
+        if args.prefill_budget > 0:
+            # the batched concurrent prefill tick always runs at N = S·C
+            # (S capped by the slot count exactly as the engine caps it);
+            # the per-slot N = chunk shape never dispatches in this mode
+            from repro.serve.scheduler import max_prefill_rows
+            batch_ns.append(max_prefill_rows(args.prefill_budget,
+                                             args.prefill_chunk, args.slots)
+                            * args.prefill_chunk)
+        else:
+            batch_ns.append(args.prefill_chunk)
     layer_shapes = [(n, k, m) for n in batch_ns
                     for (k, m) in ((d, d), (d, f), (f, d))]
     if args.explain:
@@ -165,7 +181,8 @@ def main():
 
     toks = sum(len(r.out_tokens) for r in done)
     mode = (f"paged(bs={args.block_size})" if args.paged else "dense") + \
-           (f"+chunk{args.prefill_chunk}" if args.prefill_chunk > 1 else "+token")
+           (f"+chunk{args.prefill_chunk}" if args.prefill_chunk > 1 else "+token") + \
+           (f"+budget{args.prefill_budget}" if args.prefill_budget > 0 else "")
     print(f"[serve] {args.arch} fmt={args.fmt} {mode}: "
           f"{len(done)} requests, {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s on CPU; see benchmarks for TPU projections)")

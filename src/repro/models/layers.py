@@ -379,8 +379,11 @@ def attn_apply(
 ):
     """Self-attention ('attn' global causal, 'local' windowed, encoder bidi).
 
-    pos: None (train, 0-based), scalar (prefill / lockstep decode), or [B]
-    (continuous-batching decode with per-slot positions).
+    pos: None (train, 0-based), scalar (prefill / lockstep decode), [B]
+    (continuous-batching decode with per-slot positions), or [B, S] (an
+    explicit per-token position matrix — batched concurrent prefill, where
+    pos = −1 marks masked padding tokens that must neither be cached nor
+    attended).
     table: [B, L] block table → the cache is a paged pool (serving).
     chunked: S > 1 writes are a prefill CHUNK — attend over the whole cache
     (which already contains earlier chunks), not just the fresh k/v.
@@ -388,9 +391,12 @@ def attn_apply(
     b, s, _ = x.shape
     window = cfg.window if kind == "local" else None
     pos0 = jnp.asarray(0 if pos is None else pos, jnp.int32)
-    if pos0.ndim == 0:
-        pos0 = jnp.broadcast_to(pos0, (b,))
-    positions = pos0[:, None] + jnp.arange(s, dtype=jnp.int32)[None]  # [B, S]
+    if pos0.ndim == 2:
+        positions = pos0                                          # [B, S]
+    else:
+        if pos0.ndim == 0:
+            pos0 = jnp.broadcast_to(pos0, (b,))
+        positions = pos0[:, None] + jnp.arange(s, dtype=jnp.int32)[None]
 
     q, k, v = _project_qkv(p, x, x, cfg)
     q = rope(q, positions, cfg.rope_theta)
@@ -618,14 +624,28 @@ def rglru_state_init(cfg: ModelConfig, batch: int) -> dict:
     }
 
 
-def _causal_conv(x: jax.Array, w: jax.Array, hist: jax.Array | None):
-    """Depthwise causal conv along time. x: [B, S, C]; w: [cw, C]."""
+def _causal_conv(x: jax.Array, w: jax.Array, hist: jax.Array | None,
+                 n_valid: jax.Array | None = None):
+    """Depthwise causal conv along time. x: [B, S, C]; w: [cw, C].
+
+    ``n_valid`` ([B] int32) marks per-row valid PREFIX lengths (batched
+    concurrent prefill pads short final chunks on the right): the carried
+    history then ends at each row's last valid input, ``xp[n : n + cw - 1]``,
+    instead of the tail of the padded row.  ``n_valid = 0`` rows keep their
+    history untouched.  None → the dense tail (every input valid)."""
     cw = w.shape[0]
     if hist is None:
         hist = jnp.zeros((x.shape[0], cw - 1, x.shape[-1]), x.dtype)
     xp = jnp.concatenate([hist, x.astype(F32)], axis=1)
     y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(cw))
-    new_hist = xp[:, -(cw - 1):] if cw > 1 else hist
+    if cw > 1:
+        if n_valid is None:
+            new_hist = xp[:, -(cw - 1):]
+        else:
+            idx = n_valid[:, None] + jnp.arange(cw - 1, dtype=jnp.int32)[None]
+            new_hist = jnp.take_along_axis(xp, idx[:, :, None], axis=1)
+    else:
+        new_hist = hist
     return y, new_hist
 
 
@@ -633,13 +653,24 @@ def rglru_apply(p, x, cfg: ModelConfig, *, state=None, pos=None):
     xin = bitlinear.apply(p["in"], x, cfg.quant).astype(F32)     # [B, S, dr]
     gate = bitlinear.apply(p["gate"], x, cfg.quant).astype(F32)
     hist = state["conv"] if state is not None else None
-    xc, new_hist = _causal_conv(xin, p["conv_w"], hist)
+    posm = None if pos is None else jnp.asarray(pos)
+    # A [B, S] position matrix (batched concurrent prefill) marks padding
+    # tokens with pos < 0: they must be IDENTITY steps of the recurrence and
+    # invisible to the conv history carry (padding is on the right, so real
+    # prefix outputs are untouched either way).
+    tok_mask = (posm >= 0) if (posm is not None and posm.ndim == 2
+                               and x.shape[1] > 1) else None
+    nv = None if tok_mask is None else jnp.sum(tok_mask.astype(jnp.int32), axis=1)
+    xc, new_hist = _causal_conv(xin, p["conv_w"], hist, n_valid=nv)
 
     r = jax.nn.sigmoid(xc * p["wr"] + p["br"])                   # recurrence gate
     i = jax.nn.sigmoid(xc * p["wi"] + p["bi"])                   # input gate
     log_a = 8.0 * r * jax.nn.log_sigmoid(p["lam"])               # a_t = a^(8 r_t)
     a = jnp.exp(log_a)
     bterm = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xc)
+    if tok_mask is not None:  # identity transition: h unchanged, exact (·1, +0)
+        a = jnp.where(tok_mask[..., None], a, 1.0)
+        bterm = jnp.where(tok_mask[..., None], bterm, 0.0)
 
     if state is not None and x.shape[1] == 1:
         h = a[:, 0] * state["h"] + bterm[:, 0]
@@ -744,7 +775,12 @@ def ssd_apply(p, x, cfg: ModelConfig, *, state=None, pos=None, chunk: int = 64):
     z, xr, bmat, cmat, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + s, 2 * di + 2 * s], axis=-1)
 
     hist = state["conv"] if state is not None else None
-    xbc, new_hist = _causal_conv(jnp.concatenate([xr, bmat, cmat], -1), p["conv_w"], hist)
+    posm = None if pos is None else jnp.asarray(pos)
+    tok_mask = (posm >= 0) if (posm is not None and posm.ndim == 2
+                               and l > 1) else None  # see rglru_apply
+    nv = None if tok_mask is None else jnp.sum(tok_mask.astype(jnp.int32), axis=1)
+    xbc, new_hist = _causal_conv(jnp.concatenate([xr, bmat, cmat], -1),
+                                 p["conv_w"], hist, n_valid=nv)
     xbc = jax.nn.silu(xbc)
     xr, bmat, cmat = jnp.split(xbc, [di, di + s], axis=-1)
 
@@ -752,6 +788,9 @@ def ssd_apply(p, x, cfg: ModelConfig, *, state=None, pos=None, chunk: int = 64):
     a_log = -jnp.exp(p["A_log"]) * dt
     xh = xr.reshape(b, l, h, ph)
     xbar = xh * dt[..., None]
+    if tok_mask is not None:  # identity SSM step: decay 1, no state injection
+        a_log = jnp.where(tok_mask[..., None], a_log, 0.0)
+        xbar = jnp.where(tok_mask[..., None, None], xbar, 0.0)
 
     if state is not None and l == 1:
         hprev = state["h"]

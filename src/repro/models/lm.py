@@ -389,6 +389,30 @@ def prefill_chunk(params, tok: jax.Array, pos: jax.Array, cfg: ModelConfig,
     return _head(params, x[:, -1:], cfg), state
 
 
+def prefill_chunk_batched(params, tok: jax.Array, pos: jax.Array,
+                          cfg: ModelConfig, state, *, table=None):
+    """Consume prompt chunks for S sequences AT ONCE: tok [S, C], pos [S, C].
+
+    The batched-concurrent-prefill core (DESIGN.md §7): the S chunks flatten
+    to one mpGEMM batch N = S·C — one GEMM-regime call and one dispatch
+    decision replace S per-slot calls at N = C.  ``pos`` is an explicit
+    per-token position matrix; entries < 0 are masked padding (whole padding
+    rows, or the right-padded tail of a short final chunk): they write only
+    to the trash slot/block, are invisible to attention, and are identity
+    steps for recurrent (RG-LRU / SSD) state and conv history.  Returns
+    logits at each row's LAST VALID position ([S, 1, V]) plus the state —
+    padding rows return garbage logits the caller must ignore.
+    """
+    if cfg.is_encdec():
+        raise ValueError("chunked prefill supports decoder-only stacks")
+    x = _embed(params, tok, cfg)
+    x, state, _ = stack_apply(params["stack"], x, cfg, states=state, pos=pos,
+                              table=table, chunked=True)
+    n_valid = jnp.sum((pos >= 0).astype(jnp.int32), axis=1)
+    last = jnp.maximum(n_valid - 1, 0)[:, None, None]            # [S, 1, 1]
+    return _head(params, jnp.take_along_axis(x, last, axis=1), cfg), state
+
+
 def pack(params, cfg: ModelConfig):
     """Quantize+pack every BitLinear for inference (the paper's convert step)."""
     return bitlinear.pack_tree(params, cfg.quant)

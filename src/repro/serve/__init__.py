@@ -1,5 +1,6 @@
-"""Serving subsystem (DESIGN.md §7): paged KV cache, chunked prefill,
-admission scheduling, and per-request telemetry.
+"""Serving subsystem (DESIGN.md §7): paged KV cache, chunked prefill
+(sequential per-slot, or batched concurrently across slots under a
+token budget), admission scheduling, and per-request telemetry.
 
 Public surface:
 

@@ -3,11 +3,13 @@
 One :class:`ServeEngine` owns B slots over ONE model decode state and runs a
 tick loop; each tick it (1) admits queued requests — gated on free KV blocks,
 preempting strictly-lower-priority work when the scheduler says so, (2)
-advances every prefilling slot by one prompt chunk (a batch-1 [1, C] call →
-the GEMM/MAD dispatch regime), and (3) runs one batched decode step for every
-slot past its prompt ([B, 1] — the GEMV regime at one slot).  Sampling is a
-single jitted call over all slots per tick (one host sync), not a per-slot
-``argmax``.
+advances the prefilling slots by one prompt chunk each — sequentially
+(batch-1 [1, C] calls, the ``prefill_budget=0`` fallback) or BATCHED
+(``prefill_budget`` > 0: one [S, C] call stacking up to S = budget // C
+slots' chunks, flattening to mpGEMM batch N = S·C) — and (3) runs one
+batched decode step for every slot past its prompt ([B, 1] — the GEMV
+regime at one slot).  Sampling is a single jitted call over all slots per
+tick (one host sync), not a per-slot ``argmax``.
 
 Legacy compatibility: ``prefill_chunk=1, paged=False`` reproduces the
 original ``infer.engine.Engine`` semantics exactly — prompts consumed
@@ -31,6 +33,7 @@ from repro.core.dispatch import KernelPlan
 from repro.models import lm
 from repro.models.config import ModelConfig
 from repro.serve import kvcache, prefill
+from repro.serve import scheduler as scheduler_mod
 from repro.serve.kvcache import BlockAllocator, BlockTables, PagedKVConfig
 from repro.serve.metrics import RequestMetrics, ServeStats
 from repro.serve.scheduler import AdmissionScheduler, Request, Submission
@@ -46,6 +49,9 @@ class ServeConfig:
     block_size: int = 16
     kv_blocks: int | None = None  # pool size; None → slots · ceil(max_seq/bs)
     prefill_chunk: int = 1        # tokens per prefill chunk; 1 → legacy ticks
+    prefill_budget: int = 0       # prefill tokens per tick, packed as ONE
+    #                               [budget // chunk, chunk] batched call;
+    #                               0 → sequential per-slot chunks (PR-2 path)
     preemption: bool = True       # evict lower-priority work under pressure
 
 
@@ -75,6 +81,11 @@ def _jitted_chunk(cfg: ModelConfig, paged: bool):
     return prefill.make_chunk_fn(cfg, paged=paged)
 
 
+@lru_cache(maxsize=None)
+def _jitted_batched_chunk(cfg: ModelConfig, paged: bool):
+    return prefill.make_batched_chunk_fn(cfg, paged=paged)
+
+
 class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, serve: ServeConfig | None = None,
                  *, pack: bool = True, seed: int = 0,
@@ -91,10 +102,18 @@ class ServeEngine:
         self.key = jax.random.PRNGKey(seed)
         self._clock = clock
         self._chunked = scfg.prefill_chunk > 1
+        self._batched_prefill = scfg.prefill_budget > 0
+        self._prefill_rows = scheduler_mod.max_prefill_rows(
+            scfg.prefill_budget, scfg.prefill_chunk, scfg.batch_slots)
         self._pending_scrub: list[int] = []
         self._stall_ticks = 0
         self._has_recurrent = any(k in ("rec", "ssd") for k in cfg.block_pattern)
 
+        if self._batched_prefill and not self._chunked:
+            raise ValueError(
+                "prefill_budget needs prefill_chunk > 1 (token-by-token "
+                "prompts are consumed by the batched decode tick already); "
+                "set prefill_chunk or drop the budget")
         if (scfg.paged or self._chunked) and cfg.is_encdec():
             raise ValueError("paged/chunked serving supports decoder-only "
                              "stacks; enc-dec models use the dense engine")
@@ -115,8 +134,15 @@ class ServeEngine:
         self._decision_mark = dispatch.decision_count()
         self._step_fn = _jitted_step(cfg, scfg.paged)
         self._chunk_fn = _jitted_chunk(cfg, scfg.paged) if self._chunked else None
+        self._bchunk_fn = (_jitted_batched_chunk(cfg, scfg.paged)
+                           if self._batched_prefill else None)
         self._sample_fn = _SAMPLE_FN
-        if self._chunked:
+        if self._batched_prefill:
+            # the batched tick always flattens to exactly N = S·C (padding
+            # rows compute too) — pin THAT bucket, not the per-slot chunk
+            dispatch.register_chunk_bucket(
+                self._prefill_rows * scfg.prefill_chunk)
+        elif self._chunked:
             dispatch.register_chunk_bucket(scfg.prefill_chunk)
 
     # -- introspection ------------------------------------------------------
@@ -127,9 +153,11 @@ class ServeEngine:
         Decisions are logged at trace time.  The batched decode tick always
         steps all ``batch_slots`` (idle slots pad at pos −1), so only a
         single-slot engine takes the N=1 GEMV regime (``lut_gemv`` for tl1);
-        prefill CHUNKS flatten to N=chunk and always dispatch GEMM.  Jitted
-        steps are shared per (cfg, paged) across engines — a second engine
-        over an already-traced config records no new decisions (nothing was
+        prefill CHUNKS flatten to N=chunk sequentially, or to N=S·C
+        (S = budget // chunk, padding rows included) under batched
+        concurrent prefill, and always dispatch GEMM.  Jitted steps are
+        shared per (cfg, paged) across engines — a second engine over an
+        already-traced config records no new decisions (nothing was
         re-dispatched; the cached executable embeds the same routing).
         """
         return dispatch.decisions_since(self._decision_mark)
@@ -172,18 +200,49 @@ class ServeEngine:
                       if sl is not None
                       and (not self._chunked or sl.cursor >= sl.n_base)]
         if self._chunked:
-            progress |= self._prefill_tick(now, finished)
+            if self._batched_prefill:
+                progress |= self._prefill_tick_batched(now, finished)
+            else:
+                progress |= self._prefill_tick(now, finished)
         progress |= self._decode_tick_host(decode_idx, now, finished)
         if progress or finished:
             self._stall_ticks = 0
         else:
             self._stall_ticks += 1
             if self._stall_ticks > 3:
-                raise RuntimeError(
-                    "serving stalled: no slot can make progress (KV pool too "
-                    "small for the admitted sequences and nothing evictable; "
-                    "raise --kv-blocks or lower concurrency)")
+                raise RuntimeError(self._stall_message())
         return finished
+
+    def _stall_message(self) -> str:
+        """Actionable stall diagnosis: which slots are blocked, how many KV
+        blocks each still needs, and what the pool has left."""
+        lines = []
+        for i, sl in enumerate(self.slots):
+            if sl is None:
+                continue
+            prefilling = sl.cursor < sl.n_base
+            target = (min(sl.n_base, sl.cursor + self.scfg.prefill_chunk)
+                      if prefilling and self._chunked else sl.cursor + 1)
+            phase = "prefill" if prefilling else "decode"
+            if self.pcfg is not None:
+                rid = sl.sub.req.rid
+                need = (self.pcfg.blocks_for(target)
+                        - len(self.allocator.owned(rid)))
+                lines.append(
+                    f"slot {i} (rid {rid}, prio {sl.sub.priority}, {phase} "
+                    f"at pos {sl.cursor}/{sl.n_base}) needs {max(need, 0)} "
+                    f"more KV block(s)")
+            else:
+                lines.append(f"slot {i} (rid {sl.sub.req.rid}, {phase} at "
+                             f"pos {sl.cursor}/{sl.n_base})")
+        pool = (f"{self.allocator.free_count} of {self.pcfg.num_blocks} KV "
+                "blocks free" if self.pcfg is not None else "dense KV cache")
+        blocked = "; ".join(lines) if lines else "no occupied slots"
+        return (f"serving stalled for {self._stall_ticks} ticks: no slot can "
+                f"make progress and nothing is evictable "
+                f"(preemption={self.scfg.preemption}). Blocked: {blocked}. "
+                f"Pool: {pool}; queued requests: {len(self.sched)}. "
+                "Raise --kv-blocks, lower concurrency, or enable preemption.")
 
     def run(self) -> list[Request]:
         done: list[Request] = []
@@ -322,6 +381,67 @@ class ServeEngine:
                     jnp.asarray([sl.sub.req.temperature], jnp.float32), sk)
                 self._emit(i, sl, int(tok[0]), now, finished)
         return progress
+
+    def _prefill_tick_batched(self, now, finished) -> bool:
+        """ONE [S, C] call advances up to S = budget // C prefilling slots.
+
+        Row packing is the scheduler's token-budget policy
+        (:func:`repro.serve.scheduler.plan_prefill_rows`); the call shape is
+        ALWAYS [S, C] — unused rows are padding (out-of-bounds slot index,
+        all-(−1) positions), short final chunks are right-padded with
+        pos = −1 tokens — so one trace serves every occupancy and the
+        flattened mpGEMM batch is always N = S·C."""
+        c = self.scfg.prefill_chunk
+        prefilling = [(i, sl.sub) for i, sl in enumerate(self.slots)
+                      if sl is not None and sl.cursor < sl.n_base]
+        staged = []
+        for i in scheduler_mod.plan_prefill_rows(prefilling):
+            if len(staged) >= self._prefill_rows:
+                break
+            sl = self.slots[i]
+            if sl is None:
+                continue  # evicted by an earlier row's growth this tick
+            end = min(sl.n_base, sl.cursor + c)
+            if not self._ensure_blocks(i, sl, end, now):
+                continue  # block-stalled: the next-ranked slot backfills
+            staged.append((i, sl, sl.cursor, end))
+        # an _ensure_blocks call for a LATER row may have preempted an
+        # earlier staged slot (same hazard as the decode tick): drop rows
+        # whose slot changed hands — their table rows now point at trash and
+        # their progress resumes via re-prefill after re-admission.
+        staged = [(i, sl, s0, s1) for i, sl, s0, s1 in staged
+                  if self.slots[i] is sl]
+        if not staged:
+            return False
+        rows = self._prefill_rows
+        toks = np.zeros((rows, c), np.int32)
+        pos = np.full((rows, c), -1, np.int32)
+        idx = np.full((rows,), len(self.slots), np.int32)  # OOB → padding row
+        for r, (i, sl, s0, s1) in enumerate(staged):
+            n = s1 - s0
+            toks[r, :n] = sl.tokens[s0:s1]
+            pos[r, :n] = np.arange(s0, s1, dtype=np.int32)
+            idx[r] = i
+        self._flush_scrub()
+        logits, self.state = self._bchunk_fn(
+            self.params, self.state, self._table_dev(), jnp.asarray(toks),
+            jnp.asarray(pos), jnp.asarray(idx))
+        fin = []
+        for r, (i, sl, s0, s1) in enumerate(staged):
+            sl.cursor = s1
+            sl.sub.metrics.n_prefill_chunks += 1
+            if sl.cursor >= sl.n_base:  # prompt done: first token from chunk
+                fin.append((r, i, sl))
+        if fin:
+            self.key, sk = jax.random.split(self.key)
+            sel = jnp.asarray([r for r, _, _ in fin], jnp.int32)
+            temps = jnp.asarray([sl.sub.req.temperature for _, _, sl in fin],
+                                jnp.float32)
+            toks_out = np.asarray(            # ONE host sync for every row
+                self._sample_fn(logits[sel, -1, :], temps, sk))
+            for j, (r, i, sl) in enumerate(fin):
+                self._emit(i, sl, int(toks_out[j]), now, finished)
+        return True
 
     def _decode_tick_host(self, decode_idx: list, now, finished) -> bool:
         b = len(self.slots)

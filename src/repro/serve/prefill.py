@@ -1,22 +1,32 @@
 """Chunked prefill (DESIGN.md §7): consume prompts in C-token chunks.
 
-A chunk runs as a batch-1 call of :func:`repro.models.lm.prefill_chunk`, so
-its flattened mpGEMM batch is N = C — prefill chunks ride the GEMM (MAD/MXU)
-regime of the PR-1 dispatch table while the engine's single-token decode tick
-keeps its regime (GEMV / ``lut_gemv`` at one slot).  Chunks for one slot
-interleave with decode ticks for the others.
+Sequential mode: a chunk runs as a batch-1 call of
+:func:`repro.models.lm.prefill_chunk`, so its flattened mpGEMM batch is
+N = C — prefill chunks ride the GEMM (MAD/MXU) regime of the PR-1 dispatch
+table while the engine's single-token decode tick keeps its regime (GEMV /
+``lut_gemv`` at one slot).  Chunks for one slot interleave with decode
+ticks for the others.
+
+Batched concurrent mode (``ServeConfig.prefill_budget`` > 0): the chunks of
+ALL prefilling slots stack into ONE jitted [S, C] call of
+:func:`repro.models.lm.prefill_chunk_batched`, flattening to mpGEMM batch
+N = S·C — one kernel launch and one host sync per tick instead of S.
 
 State surgery: the model decode state mixes PER-SLOT leaves (recurrent /
-conv states; dense KV rows) with SHARED paged pools (batch-free).  A chunk
-for slot *i* slices the per-slot leaves with ``dynamic_slice`` (traced *i* →
-one trace serves every slot), runs the chunk at batch 1, and merges the
-per-slot leaves back; shared pools pass through whole, already updated by
-the chunk's block-table writes.
+conv states; dense KV rows) with SHARED paged pools (batch-free).
+Sequential chunks slice/merge slot *i*'s leaves with ``dynamic_slice`` on a
+traced scalar slot id; batched chunks GATHER the leaves over a traced
+[S] slot-index vector and SCATTER them back.  Padding rows carry an
+out-of-bounds slot index: the gather clamps (mode="clip" — harmless reads
+of some real slot), the scatter DROPS them (mode="drop" — no state is
+written), so one [S, C] trace serves every occupancy.  Shared pools pass
+through whole, already updated by the chunk's block-table writes.
 """
 
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.models import lm
 from repro.serve.kvcache import map_layer_states
@@ -26,30 +36,31 @@ def _is_shared(kind: str, paged: bool) -> bool:
     return paged and kind in ("attn", "local")
 
 
-def slice_slot(state, cfg, i, *, paged: bool):
-    """Extract slot ``i``'s batch-1 view of the decode state."""
+def _read_per_slot(state, cfg, paged, leaf_fn):
+    """Per-slot-leaf read walk: ``leaf_fn(array, batch_axis)`` per leaf;
+    shared paged pools pass through untouched."""
 
     def one(st, kind, stacked):
         if _is_shared(kind, paged):
             return st
         axis = 1 if stacked else 0
-        return jax.tree_util.tree_map(
-            lambda a: jax.lax.dynamic_slice_in_dim(a, i, 1, axis), st)
+        return jax.tree_util.tree_map(lambda a: leaf_fn(a, axis), st)
 
     return map_layer_states(state, cfg, one)
 
 
-def merge_slot(full, part, cfg, i, *, paged: bool):
-    """Write slot ``i``'s updated batch-1 state back into the full state."""
+def _write_per_slot(full, part, cfg, paged, leaf_fn):
+    """Two-tree write walk: ``leaf_fn(full_leaf, part_leaf, batch_axis)``
+    per per-slot leaf; shared paged pools take ``part`` whole (the pool
+    itself was updated in place-of)."""
     pattern = cfg.block_pattern
 
     def merge_layer(f, p, kind, stacked):
         if _is_shared(kind, paged):
-            return p  # the pool itself was updated in place-of
+            return p
         axis = 1 if stacked else 0
         return jax.tree_util.tree_map(
-            lambda a, b: jax.lax.dynamic_update_slice_in_dim(a, b, i, axis),
-            f, p)
+            lambda a, b: leaf_fn(a, b, axis), f, p)
 
     scan = tuple(
         f if f is None else merge_layer(f, p, pattern[j], True)
@@ -58,6 +69,20 @@ def merge_slot(full, part, cfg, i, *, paged: bool):
     rest = [f if f == () else merge_layer(f, p, pattern[j], False)
             for j, (f, p) in enumerate(zip(full["rest"], part["rest"]))]
     return {"scan": scan, "rest": rest}
+
+
+def slice_slot(state, cfg, i, *, paged: bool):
+    """Extract slot ``i``'s batch-1 view of the decode state."""
+    return _read_per_slot(
+        state, cfg, paged,
+        lambda a, axis: jax.lax.dynamic_slice_in_dim(a, i, 1, axis))
+
+
+def merge_slot(full, part, cfg, i, *, paged: bool):
+    """Write slot ``i``'s updated batch-1 state back into the full state."""
+    return _write_per_slot(
+        full, part, cfg, paged,
+        lambda a, b, axis: jax.lax.dynamic_update_slice_in_dim(a, b, i, axis))
 
 
 def make_chunk_fn(cfg, *, paged: bool):
@@ -76,5 +101,55 @@ def make_chunk_fn(cfg, *, paged: bool):
         logits, newpart = lm.prefill_chunk(params, toks, pos0, cfg, part,
                                            table=trow)
         return logits, merge_slot(state, newpart, cfg, slot, paged=paged)
+
+    return jax.jit(_chunk)
+
+
+# ---------------------------------------------------------------------------
+# Batched concurrent prefill: gather/scatter over a slot-index VECTOR
+# ---------------------------------------------------------------------------
+
+
+def gather_slots(state, cfg, idx, *, paged: bool):
+    """Batch-S view of the per-slot state leaves, rows gathered at ``idx``.
+
+    ``idx`` is a traced [S] int32 vector; out-of-bounds entries (padding
+    rows) clamp to the last real slot — their reads are harmless because
+    :func:`scatter_slots` drops the same rows on the way back."""
+    return _read_per_slot(
+        state, cfg, paged,
+        lambda a, axis: jnp.take(a, idx, axis=axis, mode="clip"))
+
+
+def scatter_slots(full, part, cfg, idx, *, paged: bool):
+    """Write S updated batch rows back into the full state at ``idx``.
+
+    Out-of-bounds indices are DROPPED (padding rows write nothing); real
+    indices are unique by construction (one row per prefilling slot), so
+    the scatter is conflict-free."""
+    return _write_per_slot(
+        full, part, cfg, paged,
+        lambda a, b, axis: a.at[(slice(None),) * axis + (idx,)].set(
+            b, mode="drop"))
+
+
+def make_batched_chunk_fn(cfg, *, paged: bool):
+    """Jitted ``(params, state, table, toks [S, C], pos [S, C], idx [S]) →
+    (per-row last-valid logits [S, 1, V], new state)``.
+
+    One trace serves every (occupancy, final-chunk-length) combination: the
+    [S, C] shape is FIXED by the engine's token budget — idle rows carry an
+    out-of-bounds ``idx`` and all-(−1) positions, short final chunks are
+    right-padded with pos = −1 tokens — so unlike the sequential path there
+    is no per-chunk-length retrace.  ``table`` is traced but unused (XLA
+    prunes it) in dense mode.
+    """
+
+    def _chunk(params, state, table, toks, pos, idx):
+        part = gather_slots(state, cfg, idx, paged=paged)
+        trows = jnp.take(table, idx, axis=0, mode="clip") if paged else None
+        logits, newpart = lm.prefill_chunk_batched(params, toks, pos, cfg,
+                                                   part, table=trows)
+        return logits, scatter_slots(state, newpart, cfg, idx, paged=paged)
 
     return jax.jit(_chunk)

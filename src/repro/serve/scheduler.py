@@ -63,6 +63,38 @@ class Submission:
                 self.arrival)
 
 
+def max_prefill_rows(budget: int, chunk: int, slots: int | None = None) -> int:
+    """Rows an [S, C] batched-prefill tick packs under a token budget.
+
+    The ONE home of the token-budget policy: every row costs one full chunk
+    of budget — short final chunks are right-padded to C on-device, so the
+    device work per row is C tokens regardless of how many are real.  A
+    budget below one chunk still packs a single row (the tick must be able
+    to make progress); ``slots`` caps the rows at the engine's slot count
+    (more rows than slots could never hold real chunks — callers sizing
+    the [S, C] call or its autotune N-bucket must pass it)."""
+    if budget <= 0 or chunk <= 0:
+        return 0
+    rows = max(1, budget // chunk)
+    return rows if slots is None else min(rows, slots)
+
+
+def plan_prefill_rows(prefilling: list) -> list:
+    """Packing ORDER for batched prefill rows: best submissions first.
+
+    ``prefilling`` is [(slot, submission)]; the order is the queue's own
+    (:meth:`Submission.sort_key`: priority desc, deadline, arrival).  Slot
+    order would starve high-index slots — admission always fills the lowest
+    free slot, so under a tight budget every new arrival in a low slot
+    would jump a half-prefilled request in a high one; arrival order is
+    starvation-free (a waiting request only yields to strictly
+    better-ranked work).  The engine stages the first
+    :func:`max_prefill_rows` candidates that can actually make progress
+    this tick — a block-stalled pick must not waste its row, the
+    next-ranked slot backfills it."""
+    return [s for s, _ in sorted(prefilling, key=lambda t: t[1].sort_key())]
+
+
 class AdmissionScheduler:
     def __init__(self):
         self._q: collections.deque[Submission] = collections.deque()

@@ -122,6 +122,135 @@ def test_paged_chunked_tokens_match_dense_engine(quant):
 
 
 # ---------------------------------------------------------------------------
+# Batched concurrent prefill (PR 4): one [S, C] call per tick at N = S·C
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
+def test_batched_prefill_tokens_match_sequential_mixed_occupancy(model, paged):
+    """The tentpole acceptance claim: at act=token, batched concurrent
+    prefill emits tokens BIT-IDENTICAL to sequential chunked prefill across
+    mixed occupancy — prompts of different lengths (slots finish their
+    chunk streams at different ticks), short final chunks (padded rows),
+    and more requests than slots (admission waves leave padding rows)."""
+    cfg, params = model
+    prompts = _prompts(cfg, 5, lo=3, hi=12)   # lengths 3..11, chunk 4 →
+    #                                           full AND partial final chunks
+
+    def run(budget):
+        se = _serve(params, cfg, batch_slots=3, max_seq=64, paged=paged,
+                    block_size=8, prefill_chunk=4, prefill_budget=budget)
+        for i, p in enumerate(prompts):
+            se.submit(Request(rid=i, prompt=p, max_new_tokens=5))
+        return _tokens(se.run())
+
+    assert run(budget=12) == run(budget=0)    # 3 rows of 4 vs per-slot chunks
+
+
+def test_batched_prefill_matches_sequential_recurrent_arch():
+    """Padded final chunks must be IDENTITY steps for recurrent state and
+    invisible to the conv-history carry (RG-LRU): batched tokens must equal
+    sequential tokens on a recurrent-block architecture too."""
+    cfg = configs.smoke("recurrentgemma-2b").replace(
+        dtype="float32", quant=QuantConfig(mode="quant", fmt="i2s", act="token"))
+    params = lm.init(KEY, cfg)
+    prompts = _prompts(cfg, 3, lo=3, hi=10)
+
+    def run(budget):
+        se = _serve(params, cfg, batch_slots=2, max_seq=48, paged=True,
+                    block_size=8, prefill_chunk=4, prefill_budget=budget)
+        for i, p in enumerate(prompts):
+            se.submit(Request(rid=i, prompt=p, max_new_tokens=4))
+        return _tokens(se.run())
+
+    assert run(budget=8) == run(budget=0)
+
+
+def test_batched_prefill_dispatches_one_gemm_at_s_times_c():
+    """The throughput mechanism: the batched tick's mpGEMM flattens to
+    N = S·C (one call), not S calls at N = C — and the engine pins an exact
+    autotune bucket for that batch."""
+    cfg = _cfg(quant=QuantConfig(mode="quant", fmt="tl1"))
+    params = lm.init(KEY, cfg)
+    se = _serve(params, cfg, batch_slots=3, max_seq=32, paged=True,
+                block_size=8, prefill_chunk=4, prefill_budget=12)
+    for i in range(3):
+        se.submit(Request(rid=i, prompt=[1 + i, 2, 3, 4, 5, 6, 7, 8],
+                          max_new_tokens=2))
+    se.run()
+    gemm_ns = {d.n for d in se.kernel_decisions() if d.regime == "gemm"}
+    assert 12 in gemm_ns, \
+        f"batched prefill must flatten to N = S*C = 12, got {gemm_ns}"
+    assert 4 not in gemm_ns, \
+        "no per-slot N = C chunk call may survive in batched mode " \
+        f"(got {gemm_ns}; N=3 is the batched decode tick)"
+    assert dispatch.n_bucket(12) == 12, \
+        "the batched tick's N = S*C must get its own autotune bucket"
+
+
+def test_prefill_budget_zero_keeps_sequential_path(model):
+    """Regression: prefill_budget=0 must stay trace-for-trace identical to
+    the PR-2 sequential path — same jitted per-slot chunk callable, no
+    batched machinery, and every prefill GEMM at N ≤ chunk (never S·C)."""
+    cfg, params = model
+    se = _serve(params, cfg, batch_slots=3, max_seq=64, paged=True,
+                block_size=8, prefill_chunk=4)          # budget defaults to 0
+    assert se._bchunk_fn is None
+    from repro.serve.engine import _jitted_chunk
+    assert se._chunk_fn is _jitted_chunk(se.cfg, True), \
+        "budget=0 must reuse the shared PR-2 per-slot chunk callable"
+    for i, p in enumerate(_prompts(cfg, 3)):
+        se.submit(Request(rid=i, prompt=p, max_new_tokens=3))
+    se.run()
+    # decisions log at TRACE time and the per-(cfg, paged) callables are
+    # shared across engines, so a warm cache records nothing new — assert
+    # only that nothing dispatched ABOVE the sequential shapes (chunk C=4
+    # per slot, slots=3 for the batched decode tick): no stacked S·C call.
+    gemm_ns = {d.n for d in se.kernel_decisions() if d.regime == "gemm"}
+    assert all(n <= 4 for n in gemm_ns), \
+        f"sequential prefill must dispatch at N <= chunk, got {gemm_ns}"
+
+
+def test_prefill_budget_requires_chunking(model):
+    cfg, params = model
+    with pytest.raises(ValueError, match="prefill_budget"):
+        _serve(params, cfg, batch_slots=2, max_seq=32,
+               prefill_chunk=1, prefill_budget=8)
+
+
+def test_prefill_row_packing_is_starvation_free():
+    """Under a tight budget, rows go to the queue-order BEST submissions
+    (priority desc, then arrival), not the lowest slot index — admission
+    fills low slots first, so slot order would let every new arrival jump
+    a half-prefilled request in a high slot forever."""
+    from repro.serve.scheduler import plan_prefill_rows
+
+    old = Submission(req=Request(rid=0, prompt=[1]))   # arrival 0
+    new = Submission(req=Request(rid=1, prompt=[1]))
+    old.arrival, new.arrival = 0, 7
+    assert plan_prefill_rows([(0, new), (2, old)]) == [2, 0]
+    urgent = Submission(req=Request(rid=2, prompt=[1]), priority=5)
+    urgent.arrival = 9
+    assert plan_prefill_rows([(0, new), (1, urgent), (2, old)]) == [1, 2, 0]
+
+
+def test_prefill_budget_throttles_rows_per_tick(model):
+    """A budget of ONE chunk serves one slot per tick (the others wait
+    their turn) and still completes every request with identical tokens."""
+    cfg, params = model
+    prompts = _prompts(cfg, 3)
+
+    def run(budget):
+        se = _serve(params, cfg, batch_slots=3, max_seq=64, paged=True,
+                    block_size=8, prefill_chunk=4, prefill_budget=budget)
+        for i, p in enumerate(prompts):
+            se.submit(Request(rid=i, prompt=p, max_new_tokens=3))
+        return _tokens(se.run())
+
+    assert run(budget=4) == run(budget=0)     # 1 row/tick, same tokens
+
+
+# ---------------------------------------------------------------------------
 # Dispatch regimes (PR 1 interaction)
 # ---------------------------------------------------------------------------
 
@@ -257,6 +386,25 @@ def test_mid_tick_growth_preemption_drops_staged_victim(model):
     assert done[1] == ref_b
     assert done[0] == ref_a, "staged-then-evicted request must resume losslessly"
     assert {m.rid: m.n_preemptions for m in se.stats.finished}[0] >= 1
+
+
+def test_stall_error_names_blocked_slots_and_block_demand(model):
+    """The stall detector must diagnose, not just die: the error names each
+    blocked slot (rid, phase, position), its outstanding KV-block demand,
+    and the pool's free count, so the operator knows WHAT to resize."""
+    cfg, params = model
+    # pool of 2 blocks admits the request (history 7 + 1 → 2 blocks) but can
+    # never grow to position 9; preemption off → nothing evictable → stall
+    se = _serve(params, cfg, batch_slots=1, max_seq=16, paged=True,
+                block_size=4, kv_blocks=2, prefill_chunk=4, preemption=False)
+    se.submit(Request(rid=7, prompt=[1, 2, 3, 4, 5, 6, 7], max_new_tokens=8))
+    with pytest.raises(RuntimeError) as ei:
+        se.run()
+    msg = str(ei.value)
+    assert "slot 0" in msg and "rid 7" in msg, msg
+    assert "1 more KV block" in msg, msg
+    assert "0 of 2 KV blocks free" in msg, msg
+    assert "preemption=False" in msg, msg
 
 
 def test_overlong_prompt_rejected(model):
