@@ -7,9 +7,12 @@ A BitLinear is a drop-in linear layer with three operating modes:
                 (per-tensor absmean ternary) and activations (per-tensor
                 absmax int8), matmul in fp.  This is the scheme inference
                 must match bit-for-bit to be "lossless" (paper §2.1).
-  * ``quant`` — integer inference: the weight is a PackedWeight (i2s / tl1 /
-                tl2 / tq1 / int4), activations are quantized per the config,
-                and the contraction runs through ``repro.core.mpgemm``.
+  * ``quant`` — integer inference: the weight is a PackedWeight in any
+                registered format (i2s / tl1 / tl2 / tq1 / int4 / int2 /
+                int3, or a grouped-scale ``*_g128`` variant whose
+                [K//G, M] scale plane rides the pytree beside the codes),
+                activations are quantized per the config, and the
+                contraction runs through ``repro.core.dispatch.mpgemm``.
 
 Packing is generic over any parameter pytree: ``pack_tree`` rewrites every
 ``BitLinearParams`` leaf in place, so whole models (dense / MoE / SSM /
@@ -154,7 +157,8 @@ def pack_tree(params: Any, cfg: QuantConfig) -> Any:
 
     Weights may carry leading stack dims (pattern-scan repeats, MoE experts:
     [n_rep, E, M, K]) — packing is vmapped over them, giving per-matrix
-    absmean scales (the per-tensor granularity of the b1.58 scheme).
+    absmean scales (the per-tensor granularity of the b1.58 scheme), or
+    per-matrix [K//G, M] scale planes for grouped formats.
     """
 
     def _pack_nd(w: jax.Array):

@@ -90,15 +90,22 @@ class KernelSpec:
 
     def cost(self, fmt: str, n: int, k: int, m: int) -> float:
         """Roofline cost hint in µs: max(HBM time, MXU time)."""
+        fspec = fmtreg.get(fmt)
         bpw = self.hbm_bpw
+        scale_bytes = 0.0
         if bpw is None or fmt in ("fp", "int4"):
             # fused decode (or a native-dtype dot): HBM traffic is the
-            # format's true packed bpw regardless of the kernel
+            # format's true packed bpw regardless of the kernel — which for
+            # grouped formats already amortizes the fp32 scale plane (32/G)
             bpw = fmtreg.bpw(fmt)
+        elif fspec.group_scale_cols:
+            # kernel-specified operand traffic (unpacked int8 / one-hot)
+            # excludes the extra [K//G, M] fp32 scale-plane read
+            scale_bytes = 4.0 * m * (k // fspec.group_scale_cols)
         infl = self.mxu_inflation
         if infl is None:
-            infl = fmtreg.get(fmt).mxu_inflation
-        mem = (m * k * bpw / 8 + n * k) / _HBM_BYTES_PER_US
+            infl = fspec.mxu_inflation
+        mem = (m * k * bpw / 8 + n * k + scale_bytes) / _HBM_BYTES_PER_US
         comp = 2.0 * n * m * k * infl / _MXU_OPS_PER_US
         return max(mem, comp)
 
@@ -287,7 +294,11 @@ class AutotuneCache:
 
     @staticmethod
     def key(backend: str, fmt: str, n: int, k: int, m: int) -> str:
-        return f"{backend}|{fmt}|M{m}|K{k}|N{n_bucket(n)}"
+        # grouped formats key on G too: a tuned winner at one scale-group
+        # size must not leak onto a future re-registration at another
+        g = fmtreg.get(fmt).group_scale_cols if fmt in fmtreg.REGISTRY else None
+        sfx = f"|G{g}" if g else ""
+        return f"{backend}|{fmt}|M{m}|K{k}|N{n_bucket(n)}{sfx}"
 
     def get(self, key: str) -> str | None:
         e = self.entries.get(key)

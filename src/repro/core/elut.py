@@ -60,13 +60,40 @@ def lut_accumulate(lut: jax.Array, codes: jax.Array,
     return y32, s_lut
 
 
+def lut_accumulate_grouped(lut: jax.Array, codes: jax.Array,
+                           scale: jax.Array, lossless: bool) -> jax.Array:
+    """Per-group-scale variant of :func:`lut_accumulate` (DESIGN.md §2).
+
+    The code-group axis is split at scale-group boundaries ([..., S, r, C]
+    segments, r = G/g codes per scale group); each segment's one-hot
+    contraction is an exact int32 partial that its fp32 scale ``scale[s, m]``
+    multiplies at accumulator granularity.  Returns fp32 [..., M] with the
+    weight scales (and the lossy table scale, if any) applied.
+    """
+    s_groups, m = scale.shape
+    if not lossless:
+        lut, s_lut = quantize_lut(lut)
+    else:
+        s_lut = jnp.float32(1.0)
+    kg, c = lut.shape[-2:]
+    r = kg // s_groups
+    onehot = jax.nn.one_hot(codes, c, dtype=jnp.int8)  # [M, Kg, C]
+    p32 = jnp.einsum(
+        "...src,msrc->...sm",
+        lut.reshape(*lut.shape[:-2], s_groups, r, c).astype(jnp.int32),
+        onehot.reshape(m, s_groups, r, c).astype(jnp.int32),
+    )
+    return (p32.astype(jnp.float32) * scale).sum(axis=-2) * s_lut
+
+
 def elut_mpgemm(x_q: jax.Array, s_x, pw: PackedWeight,
                 lossless: bool = True) -> jax.Array:
     """mpGEMM via the parametric element-wise LUT.  fp32 [..., M].
 
     Works for every registered format with a plain code plane
     (``spec.elut``): tl1 reproduces ``tl1_lut`` bit-exactly; int2/int3 run
-    the identical algorithm at (4, 2) / (8, 2).
+    the identical algorithm at (4, 2) / (8, 2); grouped-scale variants
+    apply the [K//G, M] scale plane via the segment-sum reshape.
     """
     spec = formats.get(pw.fmt)
     if not spec.elut:
@@ -76,5 +103,9 @@ def elut_mpgemm(x_q: jax.Array, s_x, pw: PackedWeight,
     lut = build_lut(x_q, spec.base, spec.group)        # [..., G, C] int32
     codes = packing.elut_codes(pw.planes["p"], spec.field_bits)
     codes = codes[:, : pw.k // spec.group]             # drop pad-group columns
+    if spec.group_scale_cols:
+        y = lut_accumulate_grouped(lut, codes.astype(jnp.int32),
+                                   pw.scale, lossless)
+        return y * jnp.asarray(s_x, jnp.float32)
     y32, s_lut = lut_accumulate(lut, codes.astype(jnp.int32), lossless)
     return y32.astype(jnp.float32) * (s_lut * jnp.asarray(s_x, jnp.float32) * pw.scale)

@@ -56,6 +56,15 @@ class FormatSpec:
     elut: bool = False              # parametric ELUT kernels apply
     pallas: bool = False            # a fused Pallas kernel path exists
     lut_entries: int = 0            # table-size override (tl2's folded 14)
+    # Per-group weight scales: one fp32 scale per G K-columns per output row
+    # (scale plane [K//G, M], packing module docstring).  None = per-tensor
+    # scalar scale (the b1.58 default) — the two paths must stay bit-identical
+    # at None (asserted in tests/test_regression_golden.py).
+    group_scale_cols: int | None = None
+    # Lossless contract: integer accumulation reproduces the quantized
+    # reference computation EXACTLY (conformance harness gates atol=0).
+    # False only for the fp passthrough baseline (no integer semantics).
+    lossless: bool = True
 
     # -- derived quantities (the napkin math the cost hints are built from) --
 
@@ -134,6 +143,11 @@ def pallas_formats() -> tuple:
 
 def lut_gemv_formats() -> tuple:
     return tuple(f for f, s in REGISTRY.items() if s.supports_lut_gemv())
+
+
+def grouped_formats() -> tuple:
+    """Formats carrying per-group weight scales (group_scale_cols set)."""
+    return tuple(f for f, s in REGISTRY.items() if s.group_scale_cols)
 
 
 class _BpwView:
@@ -216,8 +230,48 @@ _tl2k_pack, _tl2k_unpack = _splitk_fns(
     packing.tl2k_pack, packing.tl2k_unpack, packing.tl2k_split_k)
 
 
+def _lcm(a: int, b: int) -> int:
+    import math
+
+    return a * b // math.gcd(a, b)
+
+
+def grouped_variant(base_name: str, group_cols: int) -> FormatSpec:
+    """Derive the per-group-scale variant of a registered code format.
+
+    Codes, planes, pack/unpack are IDENTICAL to the base format (scales are a
+    separate [K//G, M] plane, not woven into the byte stream); only the
+    training-side quantize rule (per-group absmean) and the K alignment
+    (lcm of the base alignment and G, so every group is complete) change.
+    bpw accounts for the fp32 scale row amortized over its G columns.
+    """
+    base = get(base_name)
+    if base.quantize is None or not base.planes:
+        raise ValueError(f"format {base_name!r} has no quantize/pack path")
+    if base.elut and group_cols % base.weights_per_byte != 0:
+        # Pallas kernels split the K reduction at group boundaries in BYTE
+        # units; a group must cover whole packed bytes.
+        raise ValueError(
+            f"group_scale_cols={group_cols} must be a multiple of "
+            f"{base.weights_per_byte} (weights/byte) for {base_name!r}")
+    lo, hi = base.levels
+    return FormatSpec(
+        name=f"{base_name}_g{group_cols}",
+        bpw=base.bpw + 32.0 / group_cols,
+        base=base.base, group=base.group, field_bits=base.field_bits,
+        k_align=_lcm(base.k_align, group_cols),
+        planes=base.planes,
+        pack=base.pack, unpack=base.unpack,
+        quantize=partial(quant.absmean_lowbit_grouped,
+                         lo=lo, hi=hi, group_cols=group_cols),
+        elut=base.elut, pallas=base.pallas,
+        group_scale_cols=group_cols,
+    )
+
+
 # fp — bf16 baseline (paper's Float16 baseline); packing handled by qtensor.
-register(FormatSpec(name="fp", bpw=16.0, planes=("w",)))
+# No integer semantics → exempt from the atol=0 conformance contract.
+register(FormatSpec(name="fp", bpw=16.0, planes=("w",), lossless=False))
 
 # int4 — XLA-native sub-byte dtype storage of the ternary codes (the TPU dot
 # consumes int4 directly; no code plane, no unpack intermediate).
@@ -242,6 +296,14 @@ register(_elut_spec("tq1", 3, 5, 8, k_align=1, pad=True,
 # int3 = (b=8, g=2): levels {-4..3}, 64-entry LUT, 4.00 bpw (byte code field).
 register(_elut_spec("int2", 4, 2, 4))
 register(_elut_spec("int3", 8, 2, 8))
+
+# Grouped-scale variants (GPTQ/AWQ-style 128-column groups along K) of every
+# plain code-plane format — same packed bytes, per-group absmean quantize,
+# scale plane [K//128, M].  tq1's groups need not align to its 5-weight bytes
+# (it is MAD/XLA-only: scales apply on the unpacked logical columns).
+GROUP_SCALE_COLS = 128
+for _base in ("i2s", "tl1", "tq1", "int2", "int3"):
+    register(grouped_variant(_base, GROUP_SCALE_COLS))
 
 # TL2 — mirror-consolidated sign+index planes (base 3, folded 14-entry table)
 # with block-fitting split-K; the TwoK tail is packed tl1.

@@ -46,6 +46,24 @@ def _int_dot(x_q: jax.Array, w_t: jax.Array) -> jax.Array:
     )
 
 
+def grouped_int_dot(x_q: jax.Array, w_t: jax.Array, scale: jax.Array) -> jax.Array:
+    """Segment-sum contraction for per-group weight scales (DESIGN.md §2).
+
+    The K reduction is split at group boundaries: [..., S, G] × [M, S, G]
+    per-group int32 partials (exact), each scaled by its fp32 group scale
+    ``scale[s, m]``, then summed — scale application at ACCUMULATOR
+    granularity, never per element.  Returns fp32 [..., M] (weight scales
+    applied; the caller multiplies the activation scale).
+    """
+    s_groups, m = scale.shape
+    k = x_q.shape[-1]
+    g = k // s_groups
+    xs = x_q.astype(jnp.int32).reshape(*x_q.shape[:-1], s_groups, g)
+    ws = w_t.astype(jnp.int32).reshape(m, s_groups, g)
+    p32 = jnp.einsum("...sk,msk->...sm", xs, ws)
+    return (p32.astype(jnp.float32) * scale).sum(axis=-2)
+
+
 def mpgemm_xla(x_q: jax.Array, s_x: jax.Array, pw: PackedWeight) -> jax.Array:
     """Canonical reference: unpack + int dot + rescale.  Returns fp32 [..., M]."""
     if pw.fmt == "fp":
@@ -58,6 +76,9 @@ def mpgemm_xla(x_q: jax.Array, s_x: jax.Array, pw: PackedWeight) -> jax.Array:
             (((x_q.ndim - 1,), (1,)), ((), ())),
             preferred_element_type=jnp.int32,
         )
+    elif pw.scale.ndim:  # grouped weight scales: split K at group boundaries
+        y = grouped_int_dot(x_q, unpack_weight(pw), pw.scale)
+        return y * jnp.asarray(s_x, jnp.float32)
     else:
         y32 = _int_dot(x_q, unpack_weight(pw))
     return y32.astype(jnp.float32) * (jnp.asarray(s_x, jnp.float32) * pw.scale)
@@ -131,9 +152,27 @@ def mpgemm_q8_block(
     x_q: int8 [..., K]; s_x_blocks: fp32 [..., K/block].  The per-block scale
     must multiply each block's partial sum — this is what breaks bit-exact
     alignment with the b1.58 per-tensor training scheme (paper §2.3).
+
+    Grouped-weight-scale formats compose: the reduction splits at the
+    FINEST common boundary seg = gcd(act block, weight group) so both the
+    activation block scale and the weight group scale multiply exact int32
+    partials.
     """
+    import math
+
     w_t = unpack_weight(pw).astype(jnp.int8)
     K = x_q.shape[-1]
+    if pw.scale.ndim:
+        g_w = K // pw.scale.shape[0]
+        seg = math.gcd(block, g_w)
+        ns = K // seg
+        xb = x_q.reshape(*x_q.shape[:-1], ns, seg)
+        wb = w_t.reshape(w_t.shape[0], ns, seg)
+        p32 = jnp.einsum("...nk,mnk->...nm",
+                         xb.astype(jnp.int32), wb.astype(jnp.int32))
+        s_act = jnp.repeat(s_x_blocks, block // seg, axis=-1)     # [..., ns]
+        s_w = jnp.repeat(pw.scale, g_w // seg, axis=0)            # [ns, M]
+        return (p32.astype(jnp.float32) * s_act[..., None] * s_w).sum(axis=-2)
     nb = K // block
     xb = x_q.reshape(*x_q.shape[:-1], nb, block)
     wb = w_t.reshape(w_t.shape[0], nb, block)

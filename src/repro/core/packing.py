@@ -30,6 +30,17 @@ part (multiple of 24, packed tl2) and a TwoK tail (packed tl1).
 
 The registry in :mod:`repro.core.formats` binds these functions to format
 names; nothing outside that registry should branch on a format string.
+
+**Grouped weight scales** (``FormatSpec.group_scale_cols = G``): the packed
+code planes are IDENTICAL to the per-tensor layout — scales are not woven
+into the byte stream (which would misalign the code fields) but travel as a
+separate fp32 plane of shape ``[K//G, M]`` beside the codes
+(``PackedWeight.scale``).  The layout is *group-major*: row ``s`` holds the
+scales of K-columns ``[s·G, (s+1)·G)`` for every output row, so a kernel
+walking K in consumption order streams scale rows sequentially, one
+``[1, M]`` row per G columns — the same HBM-order argument as the code
+planes.  Dequant: ``w[m, k] ≈ w_q[m, k] · scale[k // G, m]``; per-tensor is
+the degenerate ``scale`` scalar (``group_scale_cols=None``).
 """
 
 from __future__ import annotations
@@ -98,6 +109,31 @@ def elut_unpack(p: jax.Array, k: int, b: int, g: int,
         digits.append((code // (b ** (g - 1 - i))) % b - offset)
     w = jnp.stack(digits, axis=-1).reshape(p.shape[0], -1)
     return w[:, :k].astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# Grouped-scale plane layout (module docstring: group-major [K//G, M])
+# ---------------------------------------------------------------------------
+
+
+def group_scale_shape(m: int, k: int, group_cols: int) -> tuple[int, int]:
+    """Shape of the fp32 scale plane for an [M, K] weight at group size G."""
+    if k % group_cols != 0:
+        raise ValueError(
+            f"grouped scales need K % {group_cols} == 0, got K={k}")
+    return (k // group_cols, m)
+
+
+def expand_group_scales(scale: jax.Array, k: int) -> jax.Array:
+    """[K//G, M] scale plane -> per-element [M, K] fp32 (dequant references).
+
+    Broadcasts each group row across its G columns; inverse of the grouping,
+    used by the XLA unpack reference and the conformance harness's
+    dequantized-weight oracle.
+    """
+    kg, m = scale.shape
+    g = k // kg
+    return jnp.repeat(scale.T.astype(jnp.float32), g, axis=1).reshape(m, k)
 
 
 # ---------------------------------------------------------------------------

@@ -20,7 +20,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core import formats
+from repro.core import formats, packing
 from repro.core.formats import FORMAT_BPW  # re-export (legacy import site)
 
 __all__ = ["FORMAT_BPW", "PackedWeight", "pack_weight", "pack_ternary",
@@ -37,7 +37,7 @@ class PackedWeight:
     """Packed low-bit weight of logical shape [M, K] (output-major)."""
 
     planes: dict  # str -> jax.Array
-    scale: jax.Array  # fp32 scalar (absmean)
+    scale: jax.Array  # fp32 absmean: scalar, or [K//G, M] for grouped formats
     fmt: str
     shape: tuple  # (M, K)
     three_k: int = 0  # split-K formats only: K prefix on the main path
@@ -66,6 +66,8 @@ class PackedWeight:
                 total += int(p.size) * 4
             else:
                 total += int(p.size) * p.dtype.itemsize * 8
+        if self.scale.ndim:  # grouped: the [K//G, M] scale plane is HBM too
+            total += int(self.scale.size) * 32
         return total
 
     def bpw(self) -> float:
@@ -85,12 +87,29 @@ def pack_weight(w: jax.Array, fmt: str) -> PackedWeight:
 
 def pack_quantized(w_q: jax.Array, scale: jax.Array, fmt: str) -> PackedWeight:
     """Pack an already-quantized int8 code matrix (values in the format's
-    ``levels`` range; ternary {-1,0,1} is valid for every integer format)."""
+    ``levels`` range; ternary {-1,0,1} is valid for every integer format).
+
+    For grouped formats (``spec.group_scale_cols``) ``scale`` is the
+    [K//G, M] scale plane; a scalar is broadcast to it (every group shares
+    one scale — how per-tensor test/bench weights ride grouped formats).
+    """
     M, K = w_q.shape
     scale = jnp.asarray(scale, jnp.float32)
     spec = formats.get(fmt)
     if spec.pack is None:
         raise ValueError(f"format {fmt!r} has no integer pack path")
+    if spec.group_scale_cols:
+        gshape = packing.group_scale_shape(M, K, spec.group_scale_cols)
+        if scale.ndim == 0:
+            scale = jnp.full(gshape, scale, jnp.float32)
+        elif scale.shape != gshape:
+            raise ValueError(
+                f"format {fmt!r} needs a {gshape} scale plane "
+                f"(G={spec.group_scale_cols}), got shape {scale.shape}")
+    elif scale.ndim:
+        raise ValueError(
+            f"format {fmt!r} uses a per-tensor scalar scale, "
+            f"got shape {scale.shape}")
     planes = spec.pack(w_q)
     three_k = spec.split_k(K)[0] if spec.split_k is not None else 0
     return PackedWeight(planes, scale, fmt, (M, K), three_k=three_k)

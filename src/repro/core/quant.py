@@ -46,6 +46,29 @@ def absmean_lowbit(w: jax.Array, lo: int, hi: int) -> tuple[jax.Array, jax.Array
     return w_q.astype(jnp.int8), s
 
 
+def absmean_lowbit_grouped(
+    w: jax.Array, lo: int, hi: int, group_cols: int
+) -> tuple[jax.Array, jax.Array]:
+    """Per-group absmean quantization: one scale per ``group_cols``-column
+    group along K (the contraction axis) per output row — the granularity of
+    GPTQ/AWQ-style group-quantized checkpoints, applied to the b1.58 absmean
+    rule.
+
+    w: fp [M, K] with K % group_cols == 0.  Returns
+    (w_q int8 [M, K], scale fp32 [K//group_cols, M]) — the scale layout is
+    group-major (``packing`` module docstring): dequant is
+    ``w[m, k] ≈ w_q[m, k] · s[k // group_cols, m]``.
+    """
+    M, K = w.shape
+    if K % group_cols != 0:
+        raise ValueError(
+            f"grouped absmean needs K % {group_cols} == 0, got K={K}")
+    w32 = w.astype(jnp.float32).reshape(M, K // group_cols, group_cols)
+    s = jnp.maximum(jnp.mean(jnp.abs(w32), axis=-1), EPS)     # [M, K/G]
+    w_q = jnp.clip(jnp.round(w32 / s[..., None]), float(lo), float(hi))
+    return w_q.reshape(M, K).astype(jnp.int8), s.T.astype(jnp.float32)
+
+
 def ternary_quant(w: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Quantize weights to ternary {-1, 0, 1} with a per-tensor absmean scale.
 

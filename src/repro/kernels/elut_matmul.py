@@ -38,6 +38,13 @@ tl1_matmul, lut_gemv):
     low/high byte planes, looks up twice, and recombines exactly
     (``acc_hi·256 + acc_lo`` — the **pack-and-unpack** technique); the
     lossy ``_0`` variant takes a single int8-requantized table.
+
+Both paths have ``*_grouped`` variants for per-group weight scales
+(DESIGN.md §2): the K walk splits at scale-group boundaries (``group_bytes``
+packed bytes per group), each group's int32 partial finishes exactly, and
+one fp32 multiply per (group, output) folds it into the fp32 accumulator —
+the per-tensor kernels above are untouched, so ``group_scale_cols=None``
+stays bit-identical.
 """
 
 from __future__ import annotations
@@ -124,6 +131,102 @@ def elut_matmul(
 
 
 # ---------------------------------------------------------------------------
+# Arithmetic-decode MAD path with per-group weight scales
+#
+# The K reduction splits at scale-group boundaries (``group_bytes`` packed
+# byte columns per group): each group's digit-plane dots accumulate into an
+# exact int32 partial, which ONE fp32 multiply by the group's scale row then
+# folds into the fp32 output tile — scale application at accumulator
+# granularity, so the integer part of the computation stays as exact as the
+# per-tensor kernel's.  The per-tensor kernels above are untouched
+# (group_scale_cols=None stays bit-identical by construction).
+# ---------------------------------------------------------------------------
+
+
+def _elut_mad_grouped_kernel(*refs, b: int, g: int, field_bits: int,
+                             group_bytes: int):
+    *x_refs, p_ref, s_ref, out_ref = refs
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    fpb = 8 // field_bits
+    mask = (1 << field_bits) - 1
+    offset = b // 2
+    p = p_ref[...].astype(jnp.int16)  # uint8 [bm, bkc] -> int16 for div/mod
+    acc = out_ref[...]
+    for s in range(p.shape[1] // group_bytes):
+        sl = slice(s * group_bytes, (s + 1) * group_bytes)
+        ps = p[:, sl]
+        acc32 = None
+        plane = 0
+        for f in range(fpb):
+            code = (ps >> (f * field_bits)) & mask
+            for i in range(g):
+                d16 = (code // (b ** (g - 1 - i))) % b
+                d = d16.astype(jnp.int8) - offset
+                part = jax.lax.dot_general(
+                    x_refs[plane][:, sl], d,
+                    (((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.int32,
+                )
+                acc32 = part if acc32 is None else acc32 + part
+                plane += 1
+        acc = acc + acc32.astype(jnp.float32) * s_ref[s, :][None, :]
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "b", "g", "field_bits", "group_bytes", "bn", "bm", "bkc", "interpret"))
+def elut_matmul_grouped(
+    x_planes: tuple,
+    packed: jax.Array,
+    scales: jax.Array,
+    *,
+    b: int,
+    g: int,
+    field_bits: int,
+    group_bytes: int,
+    bn: int = 128,
+    bm: int = 128,
+    bkc: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Grouped-scale variant of :func:`elut_matmul`.  scales: fp32
+    [K/G, M] group-major scale plane (G = group_bytes · wpb weight columns
+    per group).  Returns fp32 [N, M] with the weight scales applied (the
+    wrapper multiplies the activation scale).
+
+    Requires bkc % group_bytes == 0 (K blocks cover whole scale groups) on
+    top of the :func:`elut_matmul` tiling contract.
+    """
+    if bkc % group_bytes != 0:
+        raise ValueError(
+            f"bkc={bkc} must cover whole scale groups of {group_bytes} bytes")
+    n, kb = x_planes[0].shape
+    m = packed.shape[0]
+    grid = (n // bn, m // bm, kb // bkc)
+    gpb = bkc // group_bytes  # scale groups per K block
+
+    x_spec = pl.BlockSpec((bn, bkc), lambda i, j, k: (i, k))
+    p_spec = pl.BlockSpec((bm, bkc), lambda i, j, k: (j, k))
+    s_spec = pl.BlockSpec((gpb, bm), lambda i, j, k: (k, j))
+    o_spec = pl.BlockSpec((bn, bm), lambda i, j, k: (i, j))
+
+    return pl.pallas_call(
+        functools.partial(_elut_mad_grouped_kernel, b=b, g=g,
+                          field_bits=field_bits, group_bytes=group_bytes),
+        grid=grid,
+        in_specs=[x_spec] * len(x_planes) + [p_spec, s_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=interpret,
+    )(*x_planes, packed, scales.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
 # True-LUT GEMV path (batch-1 decode regime)
 # ---------------------------------------------------------------------------
 
@@ -200,3 +303,108 @@ def elut_lut_gemv(
         out_shape=jax.ShapeDtypeStruct((m, 1), jnp.int32),
         interpret=interpret,
     )(*lut_planes, packed)
+
+
+# ---------------------------------------------------------------------------
+# True-LUT GEMV path with per-group weight scales
+#
+# Same compare-and-accumulate lookup, but the byte walk splits at scale-group
+# boundaries: the int16 pack-and-unpack accumulation (acc_hi·256 + acc_lo)
+# completes EXACTLY within each group before its single fp32 scale multiply —
+# the lossless contract survives grouping because no scale ever touches a
+# partial table entry, only a finished per-group int32 accumulator.
+# ---------------------------------------------------------------------------
+
+
+def _elut_gemv_grouped_kernel(*refs, n_entries: int, field_bits: int,
+                              lossless: bool, group_bytes: int):
+    *lut_refs, p_ref, s_ref, out_ref = refs
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    fpb = 8 // field_bits
+    mask = (1 << field_bits) - 1
+    p = p_ref[...].astype(jnp.int16)  # [bm, byte_blk] packed code bytes
+    acc = out_ref[...]
+    for s in range(p.shape[1] // group_bytes):
+        sl = slice(s * group_bytes, (s + 1) * group_bytes)
+        ps = p[:, sl]
+        acc_lo = None   # int32 per-group accumulators (exact)
+        acc_hi = None
+        for f, lut_ref in enumerate(lut_refs):
+            codes = (ps >> (f * field_bits)) & mask
+            lut = lut_ref[...][sl, :]           # [group_bytes, C] int32
+            for c in range(n_entries):
+                m01 = (codes == c).astype(jnp.int8)      # [bm, group_bytes]
+                col = lut[:, c]                           # [group_bytes]
+                if lossless:
+                    # pack-and-unpack: two int8-range lookups, exact recombine
+                    col_lo = (col & 0xFF).astype(jnp.int32)
+                    col_hi = (col >> 8).astype(jnp.int32)
+                    part_lo = jnp.dot(m01.astype(jnp.int32), col_lo,
+                                      preferred_element_type=jnp.int32)
+                    part_hi = jnp.dot(m01.astype(jnp.int32), col_hi,
+                                      preferred_element_type=jnp.int32)
+                    acc_lo = part_lo if acc_lo is None else acc_lo + part_lo
+                    acc_hi = part_hi if acc_hi is None else acc_hi + part_hi
+                else:
+                    part = jnp.dot(m01.astype(jnp.int32), col,
+                                   preferred_element_type=jnp.int32)
+                    acc_lo = part if acc_lo is None else acc_lo + part
+        y32 = (acc_hi * 256 + acc_lo) if lossless else acc_lo  # [bm] int32
+        acc = acc + y32.astype(jnp.float32)[:, None] * s_ref[s, :][:, None]
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_entries", "field_bits", "group_bytes", "bm", "byte_blk", "lossless",
+    "interpret"))
+def elut_lut_gemv_grouped(
+    lut_planes: tuple,
+    packed: jax.Array,
+    scales: jax.Array,
+    *,
+    n_entries: int,
+    field_bits: int,
+    group_bytes: int,
+    bm: int = 128,
+    byte_blk: int = 128,
+    lossless: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    """Grouped-scale variant of :func:`elut_lut_gemv`.  scales: fp32
+    [K/G, M] group-major scale plane (G = group_bytes · wpb weight columns).
+    Returns fp32 [M, 1] with the weight scales applied; the wrapper
+    multiplies the activation scale (and the lossy table scale, which is
+    global and therefore commutes out of the group sum).
+
+    Requires byte_blk % group_bytes == 0 on top of the
+    :func:`elut_lut_gemv` tiling contract.
+    """
+    if byte_blk % group_bytes != 0:
+        raise ValueError(
+            f"byte_blk={byte_blk} must cover whole scale groups of "
+            f"{group_bytes} bytes")
+    m = packed.shape[0]
+    n_bytes = packed.shape[1]
+    grid = (m // bm, n_bytes // byte_blk)
+    gpb = byte_blk // group_bytes  # scale groups per byte block
+
+    lut_spec = pl.BlockSpec((byte_blk, n_entries), lambda i, k: (k, 0))
+    p_spec = pl.BlockSpec((bm, byte_blk), lambda i, k: (i, k))
+    s_spec = pl.BlockSpec((gpb, bm), lambda i, k: (k, i))
+    o_spec = pl.BlockSpec((bm, 1), lambda i, k: (i, 0))
+
+    return pl.pallas_call(
+        functools.partial(_elut_gemv_grouped_kernel, n_entries=n_entries,
+                          field_bits=field_bits, lossless=lossless,
+                          group_bytes=group_bytes),
+        grid=grid,
+        in_specs=[lut_spec] * len(lut_planes) + [p_spec, s_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        interpret=interpret,
+    )(*lut_planes, packed, scales.astype(jnp.float32))

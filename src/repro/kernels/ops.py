@@ -24,7 +24,8 @@ import jax.numpy as jnp
 from repro.core import formats
 from repro.core.qtensor import PackedWeight
 from repro.kernels.act_quant import act_quant as _act_quant
-from repro.kernels.elut_matmul import elut_lut_gemv, elut_matmul
+from repro.kernels.elut_matmul import (elut_lut_gemv, elut_lut_gemv_grouped,
+                                       elut_matmul, elut_matmul_grouped)
 from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
 from repro.kernels.tl2_matmul import tl2_matmul
 
@@ -76,6 +77,11 @@ def mpgemm_pallas(
     m = pw.m
     spec = formats.get(pw.fmt)
 
+    if spec.elut and spec.group_scale_cols:
+        # grouped kernel applies the [K//G, M] weight scales in-kernel
+        yf = _elut_mad_grouped(x2, pw.planes["p"], pw.scale, m, spec, interpret)
+        y = yf * jnp.asarray(s_x, jnp.float32)
+        return y.reshape(*lead, m)
     if spec.elut:
         y32 = _elut_mad(x2, pw.planes["p"], m, spec, interpret)
     elif pw.fmt == "tl2k":
@@ -97,6 +103,29 @@ def _elut_mad(x2, packed, m, spec, interpret):
         planes, packed,
         b=spec.base, g=spec.group, field_bits=spec.field_bits,
         bn=bn, bm=_pick(128, m), bkc=_pick(128, kb),
+        interpret=interpret,
+    )
+    return y[:n]
+
+
+def _group_blk(block: int, group_bytes: int, n_groups: int) -> int:
+    """Largest K-block ≤ ~``block`` bytes covering whole scale groups."""
+    return group_bytes * _pick(max(1, block // group_bytes), n_groups)
+
+
+def _elut_mad_grouped(x2, packed, scales, m, spec, interpret):
+    wpb = spec.weights_per_byte
+    group_bytes = spec.group_scale_cols // wpb
+    bn = _pick(128, ((x2.shape[0] + 127) // 128) * 128)
+    x2p, n = _pad_rows(x2, bn)
+    planes = _deinterleave(x2p, wpb)
+    kb = planes[0].shape[1]
+    y = elut_matmul_grouped(
+        planes, packed, scales,
+        b=spec.base, g=spec.group, field_bits=spec.field_bits,
+        group_bytes=group_bytes,
+        bn=bn, bm=_pick(128, m),
+        bkc=_group_blk(128, group_bytes, kb // group_bytes),
         interpret=interpret,
     )
     return y[:n]
@@ -199,6 +228,19 @@ def lut_gemv(
     lut_planes = tuple(lut[f::fpb] for f in range(fpb))
     m = pw.m
     n_bytes = pw.planes["p"].shape[1]
+    if spec.group_scale_cols:
+        group_bytes = spec.group_scale_cols // spec.weights_per_byte
+        yf = elut_lut_gemv_grouped(
+            lut_planes, pw.planes["p"], pw.scale,
+            n_entries=spec.lut_size, field_bits=spec.field_bits,
+            group_bytes=group_bytes,
+            bm=_pick(128, m),
+            byte_blk=_group_blk(128, group_bytes, n_bytes // group_bytes),
+            lossless=lossless, interpret=interpret,
+        )[:, 0]
+        # the lossy table scale is global, so it commutes out of the group sum
+        y = yf * (s_lut * s_x.reshape(()))
+        return y.reshape(*lead, m)
     y32 = elut_lut_gemv(
         lut_planes, pw.planes["p"],
         n_entries=spec.lut_size, field_bits=spec.field_bits,

@@ -1,0 +1,83 @@
+"""Regenerate the per-tensor golden fixtures (tests/test_regression_golden.py).
+
+The committed ``golden_per_tensor.json`` was produced by running this script
+at the commit IMMEDIATELY BEFORE grouped weight scales landed — it pins the
+``group_scale_cols=None`` path (packed bytes, absmean scales, mpGEMM outputs,
+smoke-model logits) to the pre-grouped-scales numerics, bit for bit.  Only
+rerun it if a deliberate, reviewed numeric change to the per-tensor path is
+being made; the diff of the fixture IS the numeric diff under review.
+
+    PYTHONPATH=src python tests/golden/make_golden.py
+"""
+
+from __future__ import annotations
+
+import base64
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "golden_per_tensor.json")
+FMTS = ("i2s", "tl1", "tq1")
+M, K = 8, 256
+SEED = 20260731
+
+
+def b64(a: np.ndarray) -> str:
+    return base64.b64encode(np.ascontiguousarray(a).tobytes()).decode()
+
+
+def main() -> None:
+    from repro import configs
+    from repro.core import dispatch, formats
+    from repro.core.bitlinear import QuantConfig
+    from repro.core.dispatch import KernelPlan
+    from repro.core.qtensor import pack_weight
+    from repro.models import lm
+
+    rng = np.random.default_rng(SEED)
+    w_fp = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+    x_q1 = jnp.asarray(rng.integers(-127, 128, size=(1, K)), jnp.int8)
+    x_q3 = jnp.asarray(rng.integers(-127, 128, size=(3, K)), jnp.int8)
+    s_x = jnp.float32(0.0123)
+
+    blob: dict = {"seed": SEED, "m": M, "k": K, "formats": {}}
+    for fmt in FMTS:
+        pw = pack_weight(w_fp, fmt)
+        entry = {
+            "scale": float(np.asarray(pw.scale, np.float32)),
+            "scale_hex": np.asarray(pw.scale, np.float32).tobytes().hex(),
+            "planes": {name: {"shape": list(p.shape),
+                              "dtype": str(np.asarray(p).dtype),
+                              "b64": b64(np.asarray(p))}
+                       for name, p in pw.planes.items()},
+        }
+        # dispatch through the canonical XLA reference kernel: int32
+        # accumulation + one elementwise fp32 rescale — platform-stable bytes.
+        for tag, x_q in (("gemv", x_q1), ("gemm", x_q3)):
+            y = dispatch.mpgemm(x_q, s_x, pw, KernelPlan(gemv="xla", gemm="xla"))
+            entry[f"y_{tag}_b64"] = b64(np.asarray(y, np.float32))
+        blob["formats"][fmt] = entry
+
+    # smoke-model logits per format (float32 end to end, greedy determinism)
+    tokens = jnp.asarray(rng.integers(0, 512, size=(1, 8)), jnp.int32)
+    blob["tokens"] = np.asarray(tokens).tolist()
+    for fmt in FMTS:
+        cfg = configs.smoke("qwen1.5-0.5b").replace(
+            dtype="float32",
+            quant=QuantConfig(mode="quant", fmt=fmt, act="tensor"))
+        params = lm.pack(lm.init(jax.random.PRNGKey(0), cfg), cfg)
+        logits, _ = lm.forward(params, {"tokens": tokens}, cfg)
+        blob["formats"][fmt]["logits_b64"] = b64(np.asarray(logits, np.float32))
+        blob["formats"][fmt]["logits_shape"] = list(logits.shape)
+
+    with open(FIXTURE, "w") as f:
+        json.dump(blob, f, indent=1, sort_keys=True)
+    print(f"wrote {FIXTURE}")
+
+
+if __name__ == "__main__":
+    main()

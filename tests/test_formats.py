@@ -55,8 +55,13 @@ def random_codes(rng: np.random.Generator, fmt: str, m: int, k: int) -> jnp.ndar
 def test_registry_roundtrip_property(m, k_units, seed, fmt):
     """Pack/unpack is a bijection on valid code matrices for EVERY registered
     format.  K = 4·k_units deliberately includes values not divisible by 24
-    (52, 100, 1000): tl2/tl2k exercise block-fitting split-K with a tl1 tail."""
+    (52, 100, 1000): tl2/tl2k exercise block-fitting split-K with a tl1 tail.
+    Formats with a stricter k_align (the grouped-scale variants: 128) round
+    K up to their alignment."""
+    spec = formats.get(fmt)
     k = 4 * k_units
+    if k % spec.k_align:
+        k = -(-k // spec.k_align) * spec.k_align
     rng = np.random.default_rng(seed)
     w = random_codes(rng, fmt, m, k)
     pw = pack_quantized(w, jnp.float32(1.0), fmt)
@@ -90,8 +95,17 @@ def test_format_spec_derived_quantities():
     tl2 = formats.get("tl2")
     assert tl2.lut_size == 14                            # folded mirror table
     assert tl2.mxu_inflation == pytest.approx(14 / 3)
-    assert formats.lut_gemv_formats() == ("tl1", "int2", "int3")
+    assert formats.lut_gemv_formats() == (
+        "tl1", "int2", "int3", "tl1_g128", "int2_g128", "int3_g128")
     assert not formats.get("i2s").supports_lut_gemv()    # g=1: no table win
+    assert not formats.get("i2s_g128").supports_lut_gemv()
+    # grouped variants: same (b, g) napkin math, +32/G bpw for the scale plane
+    int2g = formats.get("int2_g128")
+    assert int2g.group_scale_cols == 128 and int2g.k_align == 128
+    assert int2g.bpw == pytest.approx(2.25)
+    assert int2g.mxu_inflation == pytest.approx(8.0)
+    assert formats.grouped_formats() == (
+        "i2s_g128", "tl1_g128", "tq1_g128", "int2_g128", "int3_g128")
 
 
 def test_unknown_format_rejected():
