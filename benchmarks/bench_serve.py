@@ -1,25 +1,30 @@
 """Serving-subsystem benchmark (DESIGN.md §7): throughput + TTFT vs load.
 
-Sweeps the serving matrix — dense vs paged KV × token-by-token vs chunked
-vs BATCHED-concurrent prefill (``prefill_budget`` = slots · chunk: one
-[S, C] call per tick at mpGEMM N = S·C) — at two offered loads on the
-smoke config, measuring per cell:
+Two sweeps share one artifact (``BENCH_serve.json``):
 
-  * wall throughput (generated tok/s),
-  * TTFT mean / p95 (submit → first generated token; the chunked-prefill
-    headline: one [1, C] GEMM-regime call replaces C decode ticks, so TTFT
-    at prompt length ≥ 64 must beat token-by-token prefill),
-  * queue wait p95 and KV-block occupancy (paged cells).
+* the serving MATRIX — dense vs paged KV × token-by-token vs chunked vs
+  BATCHED-concurrent prefill (``prefill_budget`` = slots · chunk: one
+  [S, C] call per tick at mpGEMM N = S·C) — at two offered loads;
+* BURSTY WORKLOADS at production shape — hundreds of requests arriving in
+  bursts against 8 slots, in a shared-prefix mix (few-shot templates:
+  4 templates × ~150 requests) and a long-context mix (half template +
+  long tail, half unique long prompts), each run with the prefix cache
+  OFF and ON.  The ON cell must decode bit-identical tokens (act=token is
+  composition-invariant) while skipping the shared prefill — the headline
+  ≥2× TTFT win with a nonzero prefix-hit rate in telemetry.  The workload
+  generator is deterministic under ``--seed``.
 
-All cells run in the composition-invariant ``act="token"`` quant mode so
-generated tokens are comparable across cells (recorded as
-``tokens_match_dense``).  Emits ``BENCH_serve.json``.
+Per cell: wall throughput (generated tok/s), TTFT mean / p50 / p95
+(submit → first generated token), queue wait p95, preemptions, and the
+prefix telemetry (hit rate, prefill tokens skipped, blocks reused).
 
-CI smoke: ``python -m benchmarks.bench_serve --smoke`` runs the tiny 2×2
-(dense/paged × sequential/batched chunked prefill) sweep into the
-gitignored ``BENCH_serve.smoke.new.json`` and exits non-zero if the cell
-schema drifted, a baseline cell dropped out of the sweep, tokens stopped
-matching the dense reference, or any cell's wall time regressed
+CI smoke: ``python -m benchmarks.bench_serve --smoke`` runs the tiny
+dense/paged × sequential/batched sweep PLUS a shared-prefix cell
+(6 shared-template requests over 3 slots — the queued second wave hits
+the index) into the gitignored ``BENCH_serve.smoke.new.json`` and exits
+non-zero if the cell schema drifted, a baseline cell dropped out, tokens
+stopped matching the dense reference, the prefix cell stopped hitting,
+its TTFT win disappeared reproducibly, or any cell's wall time regressed
 reproducibly > 2× against the committed ``BENCH_serve.smoke.json``
 (sweep-share-normalized, confirmed by one re-sweep; refresh the baseline
 with ``--smoke --update-baseline`` on an idle machine).
@@ -49,65 +54,150 @@ MAX_SEQ = 128
 CHUNK = 32
 BLOCK = 16
 BUDGET = SLOTS * CHUNK   # batched cells: every prefilling slot packs a row
-MODES = [  # (label, paged, prefill_chunk, prefill_budget)
-    ("dense_token", False, 1, 0),
-    ("dense_chunked", False, CHUNK, 0),
-    ("dense_batched", False, CHUNK, BUDGET),
-    ("paged_token", True, 1, 0),
-    ("paged_chunked", True, CHUNK, 0),
-    ("paged_batched", True, CHUNK, BUDGET),
+MODES = [  # (label, paged, prefill_chunk, prefill_budget, prefix_cache)
+    ("dense_token", False, 1, 0, False),
+    ("dense_chunked", False, CHUNK, 0, False),
+    ("dense_batched", False, CHUNK, BUDGET, False),
+    ("paged_token", True, 1, 0, False),
+    ("paged_chunked", True, CHUNK, 0, False),
+    ("paged_batched", True, CHUNK, BUDGET, False),
 ]
 LOADS = [3, 6]           # offered requests (≤ slots: unqueued; > slots: queued)
 
-# smoke gate: the 2×2 dense/paged × sequential/batched matrix at one
-# prompt-heavy load (every slot prefilling concurrently), reduced shapes
-SMOKE_PROMPT_LEN = 24
+# bursty workloads: production shape — many requests, bursts, 8 slots
+WORK_SLOTS = 8
+WORK_MAX_SEQ = 224
+WORK_CHUNK = 32
+WORK_BUDGET = 4 * WORK_CHUNK
+WORK_BURST = 16          # requests per arrival burst
+WORK_DRAIN = 4           # engine ticks between bursts (partial drain)
+WORK_MAX_NEW = 4
+WORKLOADS = ("shared_prefix", "longctx_mix")
+
+# smoke gate: dense/paged × sequential/batched at one prompt-heavy load,
+# plus the shared-prefix cell.  Load EXCEEDS the slot count on purpose:
+# prefix insertion happens at prompt completion, so a simultaneous
+# admission of every request would see an empty index — the queued second
+# wave is what hits.
+SMOKE_PROMPT_LEN = 24    # BLOCK-sized shared template + 8 private tokens
+SMOKE_SHARED = BLOCK
 SMOKE_MAX_NEW = 4
 SMOKE_CHUNK = 8
 SMOKE_MODES = [
-    ("dense_chunked", False, SMOKE_CHUNK, 0),
-    ("dense_batched", False, SMOKE_CHUNK, SLOTS * SMOKE_CHUNK),
-    ("paged_chunked", True, SMOKE_CHUNK, 0),
-    ("paged_batched", True, SMOKE_CHUNK, SLOTS * SMOKE_CHUNK),
+    ("dense_chunked", False, SMOKE_CHUNK, 0, False),
+    ("dense_batched", False, SMOKE_CHUNK, SLOTS * SMOKE_CHUNK, False),
+    ("paged_chunked", True, SMOKE_CHUNK, 0, False),
+    ("paged_batched", True, SMOKE_CHUNK, SLOTS * SMOKE_CHUNK, False),
+    ("paged_prefix", True, SMOKE_CHUNK, SLOTS * SMOKE_CHUNK, True),
 ]
-SMOKE_LOADS = [3]
+SMOKE_LOADS = [6]
 REGRESSION_FACTOR = 2.0
-CELL_KEYS = {"mode", "paged", "prefill_chunk", "prefill_budget",
-             "load_requests", "prompt_len", "slots", "tokens_match_dense",
-             "wall_s", "throughput_tok_s", "ttft_mean_s", "ttft_p95_s",
-             "queue_wait_p95_s", "preemptions"}
+CELL_KEYS = {"mode", "workload", "paged", "prefill_chunk", "prefill_budget",
+             "prefix_cache", "load_requests", "prompt_len", "slots",
+             "tokens_match_dense", "wall_s", "throughput_tok_s",
+             "ttft_mean_s", "ttft_p50_s", "ttft_p95_s", "queue_wait_p95_s",
+             "preemptions", "prefix_hit_rate", "prefill_tokens_skipped",
+             "blocks_reused"}
 
 
-def _prompts(cfg, n, prompt_len):
-    rng = np.random.default_rng(0)
-    return [rng.integers(0, cfg.vocab, size=prompt_len).tolist() for _ in range(n)]
+def _prompts(cfg, n, prompt_len, shared=0, seed=0):
+    """``n`` prompts of ``prompt_len`` tokens; the first ``shared`` tokens
+    are one common template (what the prefix cell reuses)."""
+    rng = np.random.default_rng(seed)
+    tpl = rng.integers(0, cfg.vocab, size=shared).tolist()
+    return [tpl + rng.integers(0, cfg.vocab,
+                               size=prompt_len - shared).tolist()
+            for _ in range(n)]
 
 
-def _run_cell(params, cfg, paged, chunk, budget, prompts, max_new):
-    eng = ServeEngine(params, cfg, ServeConfig(
-        batch_slots=SLOTS, max_seq=MAX_SEQ, paged=paged,
-        block_size=BLOCK, prefill_chunk=chunk, prefill_budget=budget))
-    for i, p in enumerate(prompts):
-        eng.submit(Request(rid=i, prompt=p, max_new_tokens=max_new))
-    t0 = time.perf_counter()
-    done = eng.run()
-    wall = time.perf_counter() - t0
+def bursty_workload(cfg, workload, seed):
+    """Deterministic production-shaped prompt mixes (the --seed surface).
+
+    ``shared_prefix``: ~150 requests over 4 few-shot templates (192 tokens
+    = 12 full blocks: system prompt + examples) plus short private suffixes
+    — the prefix cache's best case, where prefill dominates cold TTFT.
+    ``longctx_mix``: 64 requests, half template + LONG private tail, half
+    fully unique long prompts — partial hits under real KV pressure.
+    """
+    rng = np.random.default_rng(seed)
+    if workload == "shared_prefix":
+        tpls = [rng.integers(0, cfg.vocab, size=192).tolist()
+                for _ in range(4)]
+        return [tpls[int(rng.integers(0, len(tpls)))]
+                + rng.integers(0, cfg.vocab,
+                               size=int(rng.integers(8, 17))).tolist()
+                for _ in range(144)]
+    if workload == "longctx_mix":
+        tpl = rng.integers(0, cfg.vocab, size=96).tolist()
+        out = []
+        for i in range(64):
+            if i % 2 == 0:
+                out.append(tpl + rng.integers(
+                    0, cfg.vocab, size=int(rng.integers(32, 65))).tolist())
+            else:
+                out.append(rng.integers(
+                    0, cfg.vocab, size=int(rng.integers(128, 177))).tolist())
+        return out
+    raise ValueError(f"unknown workload {workload!r}")
+
+
+def _metrics_cell(eng, done, wall):
     s = eng.metrics_summary()
     toks = sum(len(r.out_tokens) for r in done)
     return {
         "wall_s": round(wall, 3),
         "throughput_tok_s": round(toks / wall, 2),
         "ttft_mean_s": round(s["ttft_mean"], 6),
+        "ttft_p50_s": round(s["ttft_p50"], 6),
         "ttft_p95_s": round(s["ttft_p95"], 6),
         "queue_wait_p95_s": round(s["queue_wait_p95"], 6),
         "preemptions": s["preemptions"],
-    }, {r.rid: r.out_tokens for r in done}
+        "prefix_hit_rate": round(s["prefix_hit_rate"], 4),
+        "prefill_tokens_skipped": s["prefill_tokens_skipped"],
+        "blocks_reused": s["blocks_reused"],
+    }
 
 
-def run(smoke: bool = False, artifact: str | None = None) -> list:
+def _run_cell(params, cfg, paged, chunk, budget, prompts, max_new, *,
+              prefix=False, slots=SLOTS, max_seq=MAX_SEQ):
+    eng = ServeEngine(params, cfg, ServeConfig(
+        batch_slots=slots, max_seq=max_seq, paged=paged,
+        block_size=BLOCK, prefill_chunk=chunk, prefill_budget=budget,
+        prefix_cache=prefix))
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=max_new))
+    t0 = time.perf_counter()
+    done = eng.run()
+    wall = time.perf_counter() - t0
+    return _metrics_cell(eng, done, wall), {r.rid: r.out_tokens for r in done}
+
+
+def _run_bursty_cell(params, cfg, prompts, *, prefix):
+    """Bursty arrivals: WORK_BURST requests per burst, WORK_DRAIN ticks of
+    partial drain between bursts, then run to completion."""
+    eng = ServeEngine(params, cfg, ServeConfig(
+        batch_slots=WORK_SLOTS, max_seq=WORK_MAX_SEQ, paged=True,
+        block_size=BLOCK, prefill_chunk=WORK_CHUNK,
+        prefill_budget=WORK_BUDGET, prefix_cache=prefix))
+    done = []
+    t0 = time.perf_counter()
+    for b0 in range(0, len(prompts), WORK_BURST):
+        for i, p in enumerate(prompts[b0:b0 + WORK_BURST]):
+            eng.submit(Request(rid=b0 + i, prompt=p,
+                               max_new_tokens=WORK_MAX_NEW))
+        for _ in range(WORK_DRAIN):
+            done.extend(eng.step())
+    while eng.sched.pending or any(s is not None for s in eng.slots):
+        done.extend(eng.step())
+    wall = time.perf_counter() - t0
+    return _metrics_cell(eng, done, wall), {r.rid: r.out_tokens for r in done}
+
+
+def run(smoke: bool = False, artifact: str | None = None, seed: int = 0) -> list:
     artifact = artifact or (SMOKE_OUT if smoke else ARTIFACT)
     modes, loads = (SMOKE_MODES, SMOKE_LOADS) if smoke else (MODES, LOADS)
     prompt_len = SMOKE_PROMPT_LEN if smoke else PROMPT_LEN
+    shared = SMOKE_SHARED if smoke else 0
     max_new = SMOKE_MAX_NEW if smoke else MAX_NEW
     rows = []
     cfg = configs.smoke("qwen1.5-0.5b").replace(
@@ -116,21 +206,23 @@ def run(smoke: bool = False, artifact: str | None = None) -> list:
     params = lm.init(jax.random.PRNGKey(0), cfg)
     cells = []
     for load in loads:
-        prompts = _prompts(cfg, load, prompt_len)
+        prompts = _prompts(cfg, load, prompt_len, shared=shared, seed=seed)
         ref_tokens = None
-        for label, paged, chunk, budget in modes:
+        for label, paged, chunk, budget, prefix in modes:
             # warm the jit caches AT THE MEASURED LOAD so TTFT measures
             # serving, not tracing — a 1-request warmup misses the shapes
             # only multi-slot runs hit (scrub sizes, queueing), and the
             # leftover compiles land on whichever cell runs them first
-            _run_cell(params, cfg, paged, chunk, budget, prompts, max_new)
+            _run_cell(params, cfg, paged, chunk, budget, prompts, max_new,
+                      prefix=prefix)
             m, toks = _run_cell(params, cfg, paged, chunk, budget, prompts,
-                                max_new)
+                                max_new, prefix=prefix)
             if ref_tokens is None:  # first mode of the load = the reference
                 ref_tokens = toks
             cell = {
-                "mode": label, "paged": paged, "prefill_chunk": chunk,
-                "prefill_budget": budget,
+                "mode": label, "workload": "uniform", "paged": paged,
+                "prefill_chunk": chunk, "prefill_budget": budget,
+                "prefix_cache": prefix,
                 "load_requests": load, "prompt_len": prompt_len,
                 "slots": SLOTS, "tokens_match_dense": toks == ref_tokens,
                 **m,
@@ -139,8 +231,39 @@ def run(smoke: bool = False, artifact: str | None = None) -> list:
             rows.append((
                 f"serve_{label}_load{load}", m["ttft_mean_s"] * 1e6,
                 f"ttft_p95={m['ttft_p95_s']}s_thru={m['throughput_tok_s']}tok/s"
-                f"_match={toks == ref_tokens}"))
+                f"_match={toks == ref_tokens}"
+                + (f"_hit={m['prefix_hit_rate']}" if prefix else "")))
+    if not smoke:
+        for workload in WORKLOADS:
+            prompts = bursty_workload(cfg, workload, seed)
+            # shape warmup only (the [S, C] / [B, 1] traces at workload
+            # geometry); a full duplicate run of 100+ requests would double
+            # the sweep for no extra coverage
+            _run_bursty_cell(params, cfg, prompts[:2 * WORK_SLOTS],
+                             prefix=False)
+            ref_tokens = None
+            for prefix in (False, True):
+                m, toks = _run_bursty_cell(params, cfg, prompts,
+                                           prefix=prefix)
+                if ref_tokens is None:
+                    ref_tokens = toks
+                label = workload + ("_prefix" if prefix else "")
+                cells.append({
+                    "mode": label, "workload": workload, "paged": True,
+                    "prefill_chunk": WORK_CHUNK,
+                    "prefill_budget": WORK_BUDGET, "prefix_cache": prefix,
+                    "load_requests": len(prompts),
+                    "prompt_len": int(np.mean([len(p) for p in prompts])),
+                    "slots": WORK_SLOTS,
+                    "tokens_match_dense": toks == ref_tokens,
+                    **m,
+                })
+                rows.append((
+                    f"serve_{label}", m["ttft_mean_s"] * 1e6,
+                    f"ttft_p50={m['ttft_p50_s']}s_p95={m['ttft_p95_s']}s"
+                    f"_hit={m['prefix_hit_rate']}_match={toks == ref_tokens}"))
     by = {(c["mode"], c["load_requests"]): c for c in cells}
+    prefix_speedups = {}
     for load in loads:
         # the acceptance comparisons: chunked vs token TTFT at prompt_len
         # >= 64, and batched vs sequential chunked throughput at a
@@ -161,15 +284,24 @@ def run(smoke: bool = False, artifact: str | None = None) -> list:
                     f"serve_batched_speedup_{kv}_load{load}", 0.0,
                     f"thru_seq={seqc['throughput_tok_s']}"
                     f"_batched={batc['throughput_tok_s']}tok/s_x{win}"))
+    # the prefix-cache acceptance comparison: OFF vs ON TTFT per pair
+    for off_c, on_c in _prefix_pairs({"cells": cells}):
+        speedup = round(off_c["ttft_mean_s"] / max(on_c["ttft_mean_s"], 1e-9), 2)
+        prefix_speedups[on_c["mode"]] = speedup
+        rows.append((
+            f"serve_prefix_ttft_speedup_{on_c['mode']}", 0.0,
+            f"ttft_off={off_c['ttft_mean_s']}s_on={on_c['ttft_mean_s']}s"
+            f"_x{speedup}_hit={on_c['prefix_hit_rate']}"))
     blob = {
         "backend": jax.default_backend(),
         "arch": "qwen1.5-0.5b(smoke)",
-        "smoke": smoke,
+        "smoke": smoke, "seed": seed,
         "prompt_len": prompt_len, "max_new": max_new, "slots": SLOTS,
         "block_size": BLOCK,
         "prefill_chunk": SMOKE_CHUNK if smoke else CHUNK,
         "prefill_budget": (SLOTS * SMOKE_CHUNK) if smoke else BUDGET,
         "act_quant": "token (composition-invariant; see DESIGN.md §7)",
+        "prefix_ttft_speedup": prefix_speedups,
         "cells": cells,
     }
     with open(artifact, "w") as f:
@@ -179,7 +311,7 @@ def run(smoke: bool = False, artifact: str | None = None) -> list:
 
 
 # ---------------------------------------------------------------------------
-# CI smoke: schema + token-identity + per-cell regression gate
+# CI smoke: schema + token-identity + prefix-hit + per-cell regression gate
 # ---------------------------------------------------------------------------
 
 
@@ -197,32 +329,81 @@ def _normalized(blob: dict) -> dict:
 def _identity_check(c: dict) -> list:
     """Serving-specific gate check: every cell's greedy tokens must match
     the load's reference cell (act=token serving is composition-invariant,
-    so divergence means a real numerics break, not noise)."""
+    so divergence means a real numerics break, not noise) — including the
+    prefix-cache cell, whose reuse must be bit-identical to recompute."""
     if c.get("tokens_match_dense", False):
         return []
     return [("identity", _cell_key(c),
              f"cell {_cell_key(c)} tokens diverged from the reference cell "
-             "(batched/sequential/paged must be token-identical at "
-             "act=token)")]
+             "(batched/sequential/paged/prefix-cached must be "
+             "token-identical at act=token)")]
+
+
+def _prefix_hit_check(c: dict) -> list:
+    """A prefix-cache cell that stops hitting is a silent feature loss: the
+    smoke workload is built so the queued second wave MUST hit the index
+    (deterministic — not a timing check)."""
+    if not c.get("prefix_cache") or c.get("prefix_hit_rate", 0) > 0:
+        return []
+    return [("identity", _cell_key(c),
+             f"prefix-cache cell {_cell_key(c)} reports a zero hit rate "
+             "(shared-template second wave must reuse the index)")]
+
+
+def _prefix_pairs(blob: dict):
+    """(off_cell, on_cell) twins: same sweep point, prefix cache toggled."""
+    def twin_key(c):
+        return (c["workload"], c["paged"], c["prefill_chunk"],
+                c["prefill_budget"], c["load_requests"])
+    offs = {twin_key(c): c for c in blob.get("cells", [])
+            if not c.get("prefix_cache")}
+    return [(offs[twin_key(c)], c) for c in blob.get("cells", [])
+            if c.get("prefix_cache") and twin_key(c) in offs]
+
+
+def _prefix_win_check(new_blob: dict) -> list:
+    """The reproducible-TTFT-win gate: each prefix-ON cell must beat its
+    OFF twin's mean TTFT.  Classified "timing" so gate_main confirms a
+    failure on an independent re-sweep before tripping."""
+    failures = []
+    for off_c, on_c in _prefix_pairs(new_blob):
+        if on_c["ttft_mean_s"] >= off_c["ttft_mean_s"]:
+            failures.append(
+                ("timing", _cell_key(on_c),
+                 f"prefix cell {_cell_key(on_c)}: ttft {on_c['ttft_mean_s']}s "
+                 f"not better than cache-off {off_c['ttft_mean_s']}s "
+                 "(prefill skip stopped paying for itself)"))
+    return failures
 
 
 def check_regression(old_blob: dict, new_blob: dict,
                      factor: float = REGRESSION_FACTOR) -> list:
     """Shared gate checks (schema drift, dropped cells, >factor
     share-normalized wall regressions — see smoke_gate.check_cells) plus
-    the serving-only token-identity check."""
+    the serving-only token-identity, prefix-hit and TTFT-win checks."""
     return smoke_gate.check_cells(
         old_blob, new_blob, cell_key=_cell_key, cell_keys=CELL_KEYS,
         normalized=_normalized, factor=factor,
-        extra_cell_checks=(_identity_check,))
+        extra_cell_checks=(_identity_check, _prefix_hit_check),
+    ) + _prefix_win_check(new_blob)
 
 
 def main(argv: list | None = None) -> int:
+    import argparse
+    from functools import partial
+
+    # --seed is this suite's own knob (workload generator determinism);
+    # everything else is the shared gate CLI
+    ap = argparse.ArgumentParser(add_help=False)
+    ap.add_argument("--seed", type=int, default=0)
+    args, rest = ap.parse_known_args(argv)
     return smoke_gate.gate_main(
-        argv, tag="bench_serve", run=run, check_regression=check_regression,
+        rest, tag="bench_serve", run=partial(run, seed=args.seed),
+        check_regression=check_regression,
         baseline=SMOKE_BASELINE, out=SMOKE_OUT, factor=REGRESSION_FACTOR,
-        smoke_help="tiny 2x2 dense/paged x sequential/batched sweep with "
-                   "schema + token-identity checks")
+        smoke_help="tiny dense/paged x sequential/batched sweep plus a "
+                   "shared-prefix cell, with schema + token-identity + "
+                   "prefix-hit checks")
 
 
 if __name__ == "__main__":

@@ -35,6 +35,7 @@ from repro.core.dispatch import KernelPlan
 from repro.infer.engine import Engine
 from repro.models import lm
 from repro.serve import Request, ServeConfig, ServeEngine
+from repro.serve import qos as qos_mod
 
 
 def build_plan(args) -> KernelPlan:
@@ -42,22 +43,37 @@ def build_plan(args) -> KernelPlan:
 
 
 def make_engine(args, params, cfg):
-    if not (args.paged or args.prefill_chunk > 1 or args.bursty):
+    if not (args.paged or args.prefill_chunk > 1 or args.bursty
+            or args.prefix_cache):
         return Engine(params, cfg, batch_slots=args.slots, max_seq=args.max_seq)
     return ServeEngine(params, cfg, ServeConfig(
         batch_slots=args.slots, max_seq=args.max_seq, paged=args.paged,
         block_size=args.block_size,
         kv_blocks=args.kv_blocks or None,
         prefill_chunk=args.prefill_chunk,
-        prefill_budget=args.prefill_budget))
+        prefill_budget=args.prefill_budget,
+        prefix_cache=args.prefix_cache))
 
 
-def submit_burst(eng, cfg, rng, rids, max_new):
+def _request_qos(args, rng) -> str | None:
+    if args.qos == "mixed":
+        return str(rng.choice(sorted(qos_mod.CLASSES)))
+    return args.qos or None
+
+
+def submit_burst(eng, cfg, args, rng, rids, max_new, templates=None):
+    """Queue one burst.  With a prefix cache, prompts draw a shared template
+    prefix (2 blocks long — what a system prompt looks like at this scale)
+    plus a private suffix; otherwise they are fully random, as before."""
     for rid in rids:
-        prompt = rng.integers(0, cfg.vocab, size=rng.integers(3, 9)).tolist()
+        prompt = []
+        if templates:
+            prompt = list(templates[int(rng.integers(0, len(templates)))])
+        prompt += rng.integers(0, cfg.vocab, size=rng.integers(3, 9)).tolist()
         req = Request(rid=rid, prompt=prompt, max_new_tokens=max_new)
         if isinstance(eng, ServeEngine) and not isinstance(eng, Engine):
-            eng.submit(req, priority=int(rng.integers(0, 3)))
+            eng.submit(req, priority=int(rng.integers(0, 3)),
+                       qos=_request_qos(args, rng))
         else:
             eng.submit(req)
 
@@ -66,9 +82,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-0.5b")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--fmt", default="i2s", choices=list(formats.names()),
+    ap.add_argument("--fmt", default=None, choices=list(formats.names()),
                     help="weight format (any registry entry, incl. the "
-                         "non-ternary ELUT formats int2/int3)")
+                         "non-ternary ELUT formats int2/int3); default: "
+                         "picked by --qos objective, else i2s")
     ap.add_argument("--act", default="token", choices=["token", "tensor"],
                     help="activation quant granularity (default: token — "
                          "composition-invariant under batching; 'tensor' is "
@@ -107,10 +124,34 @@ def main():
     ap.add_argument("--bursty", type=int, default=0,
                     help="bursty-arrival simulation: N bursts of --requests "
                          "requests with decode ticks between bursts")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share prompt-prefix KV blocks across requests "
+                         "(paged, attention archs; inert otherwise)")
+    ap.add_argument("--qos", default=None,
+                    choices=sorted(qos_mod.CLASSES) + ["mixed"],
+                    help="QoS class applied to every request ('mixed': "
+                         "random per request); also picks the default --fmt "
+                         "via the registry objective")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="workload RNG seed (prompts, priorities, QoS mix)")
     ap.add_argument("--ckpt", default="", help="restore packed params from here")
     args = ap.parse_args()
 
     plan = build_plan(args)
+    cfg = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
+    if args.fmt is None:
+        # QoS objective → registry format (replica-level contract: weights
+        # are packed once at load, so the class picks THIS engine's format),
+        # restricted to formats whose K alignment divides this model's
+        # layer dims (grouped _g128 variants need K % 128 == 0)
+        dims = {cfg.d_model, cfg.d_ff or cfg.d_model}
+        compat = [n for n in formats.names()
+                  if all(k % formats.get(n).k_align == 0 for k in dims)]
+        args.fmt = (qos_mod.select_format(
+            "standard" if args.qos in (None, "mixed") else args.qos,
+            candidates=compat))
+        if args.qos:
+            print(f"[serve] qos={args.qos} -> fmt={args.fmt}")
     if args.act == "tensor" and (args.slots > 1 or args.prefill_chunk > 1):
         # the composition-dependent-logits caveat (DESIGN.md §7): one absmax
         # per step means a request's logits depend on what it is batched with
@@ -118,7 +159,6 @@ def main():
               f"serving (slots={args.slots}, chunk={args.prefill_chunk}) ties "
               "each request's logits to the step's batch composition; use the "
               "default --act token for composition-invariant serving")
-    cfg = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
     cfg = cfg.replace(dtype="float32",
                       quant=QuantConfig(mode="quant", fmt=args.fmt, plan=plan,
                                         act=args.act))
@@ -161,21 +201,29 @@ def main():
         params, _ = store.restore(params, args.ckpt)
 
     eng = make_engine(args, params, cfg)
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(args.seed)
+    templates = None
+    if args.prefix_cache:
+        if getattr(eng, "prefix_inert_reason", None):
+            print(f"[serve] prefix cache inert: {eng.prefix_inert_reason}")
+        templates = [rng.integers(0, cfg.vocab,
+                                  size=2 * args.block_size).tolist()
+                     for _ in range(max(1, args.requests // 3))]
 
     t0 = time.perf_counter()
     if args.bursty:
         done = []
         for b in range(args.bursty):
-            submit_burst(eng, cfg, rng,
+            submit_burst(eng, cfg, args, rng,
                          range(b * args.requests, (b + 1) * args.requests),
-                         args.max_new)
+                         args.max_new, templates)
             for _ in range(args.max_new // 2 + 1):  # partial drain per burst
                 done.extend(eng.step())
         while eng.sched.pending or any(s is not None for s in eng.slots):
             done.extend(eng.step())
     else:
-        submit_burst(eng, cfg, rng, range(args.requests), args.max_new)
+        submit_burst(eng, cfg, args, rng, range(args.requests), args.max_new,
+                     templates)
         done = eng.run()
     dt = time.perf_counter() - t0
 
@@ -191,8 +239,17 @@ def main():
         print(f"  ttft p50/p95 = {s['ttft_p50']:.3f}/{s['ttft_p95']:.3f}s  "
               f"queue p95 = {s['queue_wait_p95']:.3f}s  "
               f"preemptions = {s['preemptions']}"
-              + (f"  kv free/total = {s['kv_blocks_free']}/{s['kv_blocks']}"
+              + (f"  kv free/shared/total = {s['kv_blocks_free']}"
+                 f"/{s['kv_blocks_shared']}/{s['kv_blocks']}"
                  if args.paged else ""))
+        if args.prefix_cache:
+            print(f"  prefix hits = {s['prefix_hit_requests']}/{s['requests']} "
+                  f"requests, hit rate = {s['prefix_hit_rate']:.2f}, "
+                  f"prefill tokens skipped = {s['prefill_tokens_skipped']}, "
+                  f"blocks reused = {s['blocks_reused']}"
+                  + (f", cached = {s['prefix_cached_blocks']} "
+                     f"({s['prefix_evictable_blocks']} evictable)"
+                     if "prefix_cached_blocks" in s else ""))
     routed = sorted({(dc.regime, dc.n, dc.kernel, dc.source)
                      for dc in eng.kernel_decisions()})
     for regime, n, kernel, source in routed:

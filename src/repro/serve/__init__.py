@@ -1,12 +1,15 @@
 """Serving subsystem (DESIGN.md §7): paged KV cache, chunked prefill
 (sequential per-slot, or batched concurrently across slots under a
-token budget), admission scheduling, and per-request telemetry.
+token budget), prefix-sharing with copy-on-write, admission scheduling,
+and per-request telemetry.
 
 Public surface:
 
     ServeEngine / ServeConfig   the tick-loop engine (engine.py)
     Request / Submission        request + scheduling envelope (scheduler.py)
     PagedKVConfig               block-pool geometry (kvcache.py)
+    PrefixIndex                 radix index over prompt blocks (prefix.py)
+    QoSClass / select_format    per-request QoS classes (qos.py)
     RequestMetrics / ServeStats telemetry (metrics.py)
 
 ``repro.infer.engine.Engine`` is a thin legacy facade over ServeEngine
@@ -16,4 +19,6 @@ Public surface:
 from repro.serve.engine import ServeConfig, ServeEngine  # noqa: F401
 from repro.serve.kvcache import BlockAllocator, PagedKVConfig  # noqa: F401
 from repro.serve.metrics import RequestMetrics, ServeStats  # noqa: F401
+from repro.serve.prefix import PrefixIndex  # noqa: F401
+from repro.serve.qos import QoSClass, select_format  # noqa: F401
 from repro.serve.scheduler import AdmissionScheduler, Request, Submission  # noqa: F401

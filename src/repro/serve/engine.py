@@ -33,9 +33,11 @@ from repro.core.dispatch import KernelPlan
 from repro.models import lm
 from repro.models.config import ModelConfig
 from repro.serve import kvcache, prefill
+from repro.serve import qos as qos_mod
 from repro.serve import scheduler as scheduler_mod
 from repro.serve.kvcache import BlockAllocator, BlockTables, PagedKVConfig
 from repro.serve.metrics import RequestMetrics, ServeStats
+from repro.serve.prefix import PrefixIndex
 from repro.serve.scheduler import AdmissionScheduler, Request, Submission
 
 
@@ -53,6 +55,9 @@ class ServeConfig:
     #                               [budget // chunk, chunk] batched call;
     #                               0 → sequential per-slot chunks (PR-2 path)
     preemption: bool = True       # evict lower-priority work under pressure
+    prefix_cache: bool = False    # share prompt-prefix KV blocks across
+    #                               requests (paged + attention-only archs;
+    #                               otherwise inert, see prefix_inert_reason)
 
 
 @dataclasses.dataclass
@@ -61,6 +66,7 @@ class _Slot:
     tokens: list                  # history: prompt (+ resume) + generated
     n_base: int                   # prefix length that is prompt/resume
     cursor: int = 0               # positions written to the KV cache so far
+    indexed: bool = False         # prompt blocks published to the prefix index
 
 
 def _decode_tick(params, toks, pos, state, table, *, cfg: ModelConfig, paged: bool):
@@ -131,6 +137,29 @@ class ServeEngine:
             self.state = lm.init_state(cfg, scfg.batch_slots, scfg.max_seq)
             self._dummy_table = jnp.zeros((scfg.batch_slots, 1), jnp.int32)
 
+        # Prefix sharing needs paged block identity AND content-addressable
+        # layer state: attention KV at position p depends only on tokens
+        # 0..p, but RG-LRU / SSD hidden state is a per-slot carry no block
+        # gather can restore.  When the preconditions fail the cache is
+        # INERT (not an error): the engine records why, serves normally, and
+        # telemetry reports zero hits — so launchers can flip the flag on
+        # any architecture without branching.
+        self.prefix: PrefixIndex | None = None
+        self.prefix_inert_reason: str | None = None
+        if scfg.prefix_cache:
+            if not scfg.paged:
+                self.prefix_inert_reason = (
+                    "dense KV has no block identity to share; "
+                    "prefix cache needs paged=True")
+            elif self._has_recurrent:
+                self.prefix_inert_reason = (
+                    "recurrent/SSD layers carry per-slot hidden state that "
+                    "block reuse cannot restore; prefix cache inert")
+            else:
+                self.prefix = PrefixIndex(self.pcfg.block_size, self.allocator)
+                self.allocator.set_reclaimer(self.prefix.reclaim)
+        self._prefix_active = self.prefix is not None
+
         self._decision_mark = dispatch.decision_count()
         self._step_fn = _jitted_step(cfg, scfg.paged)
         self._chunk_fn = _jitted_chunk(cfg, scfg.paged) if self._chunked else None
@@ -167,12 +196,20 @@ class ServeEngine:
         if self.pcfg is not None:
             out["kv_blocks"] = self.pcfg.num_blocks
             out["kv_blocks_free"] = self.allocator.free_count
+            out["kv_blocks_shared"] = self.allocator.shared_count()
+        if self.prefix is not None:
+            out["prefix_cached_blocks"] = self.prefix.size
+            out["prefix_evictable_blocks"] = self.prefix.evictable_count()
         return out
 
     # -- request lifecycle --------------------------------------------------
 
     def submit(self, req: Request, *, priority: int = 0,
-               deadline: float | None = None) -> Submission:
+               deadline: float | None = None,
+               qos: str | None = None) -> Submission:
+        if qos is not None:
+            qcls = qos_mod.get(qos)
+            priority += qcls.priority_boost
         if not req.prompt:
             raise ValueError(
                 f"request {req.rid}: empty prompt (nothing to decode from); "
@@ -183,9 +220,10 @@ class ServeEngine:
                 f"cannot fit max_seq={self.scfg.max_seq} with room to "
                 "generate; raise max_seq or truncate the prompt")
         m = RequestMetrics(rid=req.rid, prompt_len=len(req.prompt),
-                           submit_t=self._clock())
+                           submit_t=self._clock(), qos=qos)
         return self.sched.submit(Submission(req=req, priority=priority,
-                                            deadline=deadline, metrics=m))
+                                            deadline=deadline, metrics=m,
+                                            qos=qos))
 
     def step(self) -> list[Request]:
         """One scheduler tick: admit → prefill chunks → batched decode.
@@ -235,8 +273,15 @@ class ServeEngine:
             else:
                 lines.append(f"slot {i} (rid {sl.sub.req.rid}, {phase} at "
                              f"pos {sl.cursor}/{sl.n_base})")
-        pool = (f"{self.allocator.free_count} of {self.pcfg.num_blocks} KV "
-                "blocks free" if self.pcfg is not None else "dense KV cache")
+        if self.pcfg is not None:
+            pool = (f"{self.allocator.free_count} of {self.pcfg.num_blocks} "
+                    "KV blocks free"
+                    f", {self.allocator.shared_count()} refcounted/shared")
+            if self.prefix is not None:
+                pool += (f", {self.prefix.size} prefix-cached "
+                         f"({self.prefix.evictable_count()} evictable)")
+        else:
+            pool = "dense KV cache"
         blocked = "; ".join(lines) if lines else "no occupied slots"
         return (f"serving stalled for {self._stall_ticks} ticks: no slot can "
                 f"make progress and nothing is evictable "
@@ -269,9 +314,10 @@ class ServeEngine:
                 self._evict(victim, now)
                 progress = True
                 continue
+            cached = 0
             if self.pcfg is not None:
-                if not AdmissionScheduler.admissible(
-                        best, self.allocator.free_count, self.pcfg):
+                cached = self._try_admit_paged(best)
+                if cached is None:
                     victim = (AdmissionScheduler.pick_victim(
                         self._running(), min_priority=best.priority)
                         if self.scfg.preemption else None)
@@ -280,13 +326,11 @@ class ServeEngine:
                     self._evict(victim, now)
                     progress = True
                     continue
-                got = self.allocator.alloc(best.req.rid,
-                                           best.blocks_needed(self.pcfg))
-                self._pending_scrub.extend(got)
                 self.tables.set_row(free_idx, self.allocator.owned(best.req.rid))
             self.sched.take(best)
             toks = list(best.tokens())
-            self.slots[free_idx] = _Slot(sub=best, tokens=toks, n_base=len(toks))
+            self.slots[free_idx] = _Slot(sub=best, tokens=toks,
+                                         n_base=len(toks), cursor=cached)
             if self._has_recurrent:  # slot reuse must not inherit h/conv carry
                 self.state = kvcache.reset_slot_states(self.state, self.cfg,
                                                        free_idx)
@@ -294,6 +338,60 @@ class ServeEngine:
                 best.metrics.admit_t = now
             progress = True
         return progress
+
+    def _try_admit_paged(self, best: Submission) -> int | None:
+        """Reserve KV residency for ``best``: adopt cached prefix blocks
+        (shared, refcount++), allocate the rest fresh, copy-on-write the
+        partial tail block.  Returns the cached token count — the admitted
+        slot's starting ``cursor``, so prefill computes only the un-shared
+        suffix — or None if the pool cannot satisfy the request even after
+        cache eviction (the caller preempts or stalls).
+
+        The cached length is capped at len(tokens) − 1: the LAST prompt
+        token is always computed (its logits emit the first generated
+        token), which also guarantees at least one fresh block is needed.
+        """
+        rid = best.req.rid
+        toks = best.tokens()
+        cached, hit_blocks, cow_src = 0, [], None
+        if self._prefix_active:
+            hit_blocks, hit_len = self.prefix.match(toks)
+            cached = min(hit_len, len(toks) - 1)
+        k_full, m_part = divmod(cached, self.pcfg.block_size)
+        if cached:
+            self.allocator.adopt(rid, hit_blocks[:k_full])
+            if m_part:
+                # pin the divergence block: it may be index-only (refcount
+                # 1) and the alloc below can trigger cache reclaim — the
+                # COW source must survive until it is copied.
+                cow_src = hit_blocks[k_full]
+                self.allocator.ref_inc(cow_src)
+        evictable = self.prefix.evictable_count() if self._prefix_active else 0
+        ok = AdmissionScheduler.admissible(
+            best, self.allocator.free_count + evictable, self.pcfg,
+            reuse_blocks=k_full)
+        got = (self.allocator.alloc(rid, best.blocks_needed(self.pcfg) - k_full)
+               if ok else None)
+        if got is None:
+            if cow_src is not None:
+                self.allocator.ref_dec(cow_src)
+            self.allocator.release(rid)  # roll back the adoption
+            return None
+        if cow_src is not None:
+            # flush queued scrubs BEFORE copying: the dst could be a block
+            # freed earlier this tick and still on the pending-scrub list —
+            # a later flush would wipe the copied positions.  The dst itself
+            # never joins the list; its tail is masked by the copy.
+            self._flush_scrub()
+            self.state = kvcache.cow_copy_block(self.state, self.cfg,
+                                                cow_src, got[0], m_part)
+            self.allocator.ref_dec(cow_src)
+            self._pending_scrub.extend(got[1:])
+        else:
+            self._pending_scrub.extend(got)
+        best.metrics.prefix_hit_tokens = cached
+        best.metrics.prefix_hit_blocks = k_full + (1 if m_part else 0)
+        return cached
 
     def _evict(self, idx: int, now) -> None:
         """Preemption-by-eviction: free the slot + its blocks, re-enqueue at
@@ -343,9 +441,12 @@ class ServeEngine:
         if self.pcfg is None:
             return
         self._flush_scrub()
-        src, remap = self.allocator.compact()
+        extra = self.prefix.blocks() if self.prefix is not None else ()
+        src, remap = self.allocator.compact(extra_live=extra)
         self.state = kvcache.apply_compaction(self.state, self.cfg, src)
         self.tables.remap(remap)
+        if self.prefix is not None:
+            self.prefix.remap(remap)
 
     def _flush_scrub(self) -> None:
         if self._pending_scrub:
@@ -493,6 +594,18 @@ class ServeEngine:
     def _emit(self, idx: int, sl: _Slot, tok: int, now, finished) -> None:
         req = sl.sub.req
         m = sl.sub.metrics
+        if self._prefix_active and not sl.indexed:
+            # Prompt complete (first emit): publish its full blocks to the
+            # prefix index.  The owned run is in logical order (adopted
+            # prefix blocks first, then fresh), so block i holds tokens
+            # [i·bs, (i+1)·bs).  Must happen before any release — the index
+            # reference is what lets these blocks outlive the request.
+            sl.indexed = True
+            bs = self.pcfg.block_size
+            n_full = sl.n_base // bs
+            if n_full:
+                self.prefix.insert(sl.tokens[:n_full * bs],
+                                   self.allocator.owned(req.rid)[:n_full])
         sl.tokens.append(tok)
         req.out_tokens.append(tok)
         if m.first_token_t is None:

@@ -56,12 +56,24 @@ class PagedKVConfig:
 
 
 class BlockAllocator:
-    """Free-list block allocator; ownership tracked per request id."""
+    """Refcounted free-list block allocator; ownership tracked per request id.
+
+    A physical block carries one reference per owning request PLUS one if
+    the prefix index caches it (DESIGN.md §7): shared prefix blocks appear
+    in several ownership lists at refcount > 1 and only return to the free
+    list when the last reference drops.  A block with refcount > 1 is never
+    scrubbed or reused — eviction and compaction preserve it.  When the
+    free list runs dry, :meth:`alloc` asks the installed ``reclaimer``
+    (the prefix index's LRU leaf eviction) to release cached-only blocks
+    before giving up.
+    """
 
     def __init__(self, pcfg: PagedKVConfig):
         self.pcfg = pcfg
         self._free: collections.deque[int] = collections.deque(range(pcfg.num_blocks))
         self._owned: dict[int, list[int]] = {}
+        self._refs = np.zeros(pcfg.num_blocks, np.int64)
+        self._reclaimer = None    # callable(n) -> freed count (prefix index)
 
     @property
     def free_count(self) -> int:
@@ -73,48 +85,105 @@ class BlockAllocator:
     def can_alloc(self, n: int) -> bool:
         return len(self._free) >= n
 
+    def set_reclaimer(self, fn) -> None:
+        self._reclaimer = fn
+
+    # -- reference counting --------------------------------------------------
+
+    def refcount(self, block: int) -> int:
+        return int(self._refs[block])
+
+    def shared_count(self) -> int:
+        """Blocks referenced more than once (request+request or request+index)."""
+        return int((self._refs > 1).sum())
+
+    def ref_inc(self, block: int) -> None:
+        self._refs[block] += 1
+
+    def ref_dec(self, block: int) -> bool:
+        """Drop one reference; True if the block returned to the free list."""
+        self._refs[block] -= 1
+        if self._refs[block] <= 0:
+            self._refs[block] = 0
+            self._free.append(block)
+            return True
+        return False
+
+    def adopt(self, rid: int, blocks: list[int]) -> None:
+        """Append already-live SHARED blocks to ``rid``'s run (prefix hits):
+        one new reference each, no free-list traffic, never scrubbed."""
+        for b in blocks:
+            self._refs[b] += 1
+        self._owned.setdefault(rid, []).extend(blocks)
+
     def alloc(self, rid: int, n: int) -> list[int] | None:
-        """Append ``n`` blocks to ``rid``'s run; None (no change) if the pool
-        cannot satisfy the whole request — partial grants would leave the
-        caller with an unusable mid-sequence hole."""
+        """Append ``n`` fresh blocks to ``rid``'s run; None (no change) if the
+        pool cannot satisfy the whole request — partial grants would leave the
+        caller with an unusable mid-sequence hole.  A dry free list first
+        asks the reclaimer to evict cached prefix blocks (LRU leaves)."""
         if n <= 0:
             return []
+        if len(self._free) < n and self._reclaimer is not None:
+            self._reclaimer(n - len(self._free))
         if len(self._free) < n:
             return None
         got = [self._free.popleft() for _ in range(n)]
+        for b in got:
+            self._refs[b] = 1
         self._owned.setdefault(rid, []).extend(got)
         return got
 
     def release(self, rid: int) -> list[int]:
-        """Free every block owned by ``rid`` (eviction / completion)."""
-        blocks = self._owned.pop(rid, [])
-        self._free.extend(blocks)
-        return blocks
+        """Drop ``rid``'s references (eviction / completion); returns the
+        blocks that actually became free — shared blocks survive under
+        their remaining owners / the prefix index."""
+        freed = []
+        for b in self._owned.pop(rid, []):
+            if self.ref_dec(b):
+                freed.append(b)
+        return freed
 
-    def compact(self) -> tuple[np.ndarray, np.ndarray]:
-        """Defragment: renumber in-use blocks to the lowest physical ids.
+    def compact(self, extra_live=()) -> tuple[np.ndarray, np.ndarray]:
+        """Defragment: renumber live blocks to the lowest physical ids.
 
-        Returns ``(src, remap)`` over the FULL pool incl. trash: the engine
-        gathers each pool as ``pool[src]`` (``src[new] = old``) and rewrites
-        tables as ``remap[table]`` (``remap[old] = new``).  Ownership lists
-        and the free list are updated in place.
+        Live = owned by any request ∪ ``extra_live`` (the prefix index's
+        cached blocks — the engine passes ``prefix.blocks()`` and calls
+        ``prefix.remap`` afterwards).  A shared block is assigned ONE new id
+        no matter how many ownership lists carry it, so shared mappings
+        survive compaction intact.  Returns ``(src, remap)`` over the FULL
+        pool incl. trash: the engine gathers each pool as ``pool[src]``
+        (``src[new] = old``) and rewrites tables as ``remap[table]``
+        (``remap[old] = new``).  Ownership lists, refcounts and the free
+        list are updated in place.
         """
         nb = self.pcfg.num_blocks
         src = np.arange(nb + 1, dtype=np.int32)
         remap = np.arange(nb + 1, dtype=np.int32)
+        assigned: dict[int, int] = {}
         nxt = 0
-        for rid in sorted(self._owned):
-            blocks = self._owned[rid]
-            for j, old in enumerate(blocks):
+
+        def assign(old: int) -> int:
+            nonlocal nxt
+            new = assigned.get(old)
+            if new is None:
+                new = assigned[old] = nxt
                 src[nxt] = old
-                remap[old] = nxt
-                blocks[j] = nxt
+                remap[old] = new
                 nxt += 1
-        used = set(src[:nxt].tolist())
-        leftovers = [b for b in range(nb) if b not in used]
+            return new
+
+        for rid in sorted(self._owned):
+            self._owned[rid] = [assign(b) for b in self._owned[rid]]
+        for b in extra_live:
+            assign(b)
+        leftovers = [b for b in range(nb) if b not in assigned]
         for i, old in enumerate(leftovers):
             src[nxt + i] = old
             remap[old] = nxt + i
+        refs = np.zeros_like(self._refs)
+        for old, new in assigned.items():
+            refs[new] = self._refs[old]
+        self._refs = refs
         self._free = collections.deque(range(nxt, nb))
         return src, remap
 
@@ -191,6 +260,30 @@ def scrub_blocks(state, cfg, block_ids):
             out["pos"] = st["pos"].at[:, ids].set(-1)
         else:
             out["pos"] = st["pos"].at[ids].set(-1)
+        return out
+
+    return map_layer_states(state, cfg, one)
+
+
+def cow_copy_block(state, cfg, src: int, dst: int, valid: int):
+    """Copy-on-write: duplicate physical block ``src`` into ``dst`` keeping
+    only the first ``valid`` positions (the shared run up to the divergence
+    point); the tail's pos slots are masked to −1 so the new owner's prefill
+    overwrites them.  ``dst`` must be freshly allocated (refcount 1) and must
+    NOT be on any pending-scrub list — callers flush scrubs first, or a later
+    flush would wipe the copied positions."""
+    import jax.numpy as jnp
+
+    def one(st, kind, stacked):
+        if kind not in ("attn", "local"):
+            return st
+        out = {}
+        for name, a in st.items():
+            blk = a[:, src] if stacked else a[src]
+            if name == "pos":
+                keep = jnp.arange(blk.shape[-1]) < valid
+                blk = jnp.where(keep, blk, -1)
+            out[name] = a.at[:, dst].set(blk) if stacked else a.at[dst].set(blk)
         return out
 
     return map_layer_states(state, cfg, one)

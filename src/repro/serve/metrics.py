@@ -23,6 +23,9 @@ class RequestMetrics:
     n_generated: int = 0
     n_prefill_chunks: int = 0
     n_preemptions: int = 0
+    prefix_hit_tokens: int = 0    # prompt tokens served from the prefix cache
+    prefix_hit_blocks: int = 0    # physical blocks reused (incl. COW copies)
+    qos: str | None = None
 
     @property
     def queue_wait(self) -> float | None:
@@ -55,6 +58,9 @@ class RequestMetrics:
             "n_generated": self.n_generated,
             "n_prefill_chunks": self.n_prefill_chunks,
             "n_preemptions": self.n_preemptions,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "prefix_hit_blocks": self.prefix_hit_blocks,
+            "qos": self.qos,
         }
 
 
@@ -82,6 +88,7 @@ class ServeStats:
         ttfts = [m.ttft for m in ms]
         waits = [m.queue_wait for m in ms]
         total_tokens = sum(m.n_generated for m in ms)
+        total_prompt = sum(m.prompt_len for m in ms)
         t0 = min((m.submit_t for m in ms), default=0.0)
         t1 = max((m.finish_t for m in ms if m.finish_t is not None), default=t0)
         span = t1 - t0
@@ -97,4 +104,9 @@ class ServeStats:
             "queue_wait_p50": percentile(waits, 50),
             "queue_wait_p95": percentile(waits, 95),
             "preemptions": sum(m.n_preemptions for m in ms),
+            "prefix_hit_requests": sum(m.prefix_hit_tokens > 0 for m in ms),
+            "prefix_hit_rate": (sum(m.prefix_hit_tokens for m in ms)
+                                / total_prompt) if total_prompt else 0.0,
+            "prefill_tokens_skipped": sum(m.prefix_hit_tokens for m in ms),
+            "blocks_reused": sum(m.prefix_hit_blocks for m in ms),
         }

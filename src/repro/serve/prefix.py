@@ -1,0 +1,186 @@
+"""Prefix-sharing index over paged KV blocks (DESIGN.md §7).
+
+Millions of users share system prompts and few-shot templates, so the
+KV bytes for a popular prefix are computed over and over.  The paged pool
+already makes KV a logical→physical mapping; this module adds the missing
+piece: a **radix index at block granularity** mapping token *content* to
+the physical block that already holds its keys/values.
+
+  * A trie node per FULL block, keyed by the block's token tuple.  A chain
+    root→node spells out a token prefix in ``block_size`` steps; content
+    addressing makes reuse trivially correct — a block is reusable iff the
+    exact same tokens produced it (KV at position p depends only on tokens
+    0..p for attention layers).
+  * Matching walks full blocks, then checks the children of the deepest
+    node for a **partial** in-block match: the engine copies that block and
+    masks the tail (copy-on-write at the divergence point,
+    :func:`repro.serve.kvcache.cow_copy_block`) so the new request reuses
+    the shared positions and writes its divergent suffix privately.
+  * Reference counting lives in the :class:`~repro.serve.kvcache.
+    BlockAllocator` (one count per physical block: one per owning request
+    plus one for the index).  Indexed blocks OUTLIVE their request — that
+    is the whole point — and are reclaimed lazily, LRU leaves first, when
+    the allocator runs dry (:meth:`reclaim` is wired in as the allocator's
+    reclaimer).  A block with refcount > 1 (a running request holds it) is
+    NEVER evicted or scrubbed.
+
+Only attention KV is content-addressed; recurrent (RG-LRU / SSD) hidden
+state is a per-slot carry with no block identity, so the engine keeps the
+index inert for architectures that include such layers (documented in
+``ServeEngine.prefix_inert_reason``).
+"""
+
+from __future__ import annotations
+
+
+def _common_prefix_len(a, b) -> int:
+    n = 0
+    for x, y in zip(a, b):
+        if x != y:
+            break
+        n += 1
+    return n
+
+
+class _Node:
+    __slots__ = ("key", "block", "parent", "children", "last_use")
+
+    def __init__(self, key: tuple, block: int, parent: "_Node | None"):
+        self.key = key
+        self.block = block
+        self.parent = parent
+        self.children: dict[tuple, _Node] = {}
+        self.last_use = 0
+
+
+class PrefixIndex:
+    """Radix trie over prompt-token blocks → cached physical KV blocks.
+
+    ``allocator`` must expose ``refcount(b)``, ``ref_inc(b)`` and
+    ``ref_dec(b)`` (duck-typed; :class:`repro.serve.kvcache.BlockAllocator`).
+    The index holds exactly one reference per indexed block.
+    """
+
+    def __init__(self, block_size: int, allocator):
+        self.bs = block_size
+        self._alloc = allocator
+        self._children: dict[tuple, _Node] = {}   # root level
+        self._clock = 0
+
+    # -- introspection ------------------------------------------------------
+
+    def _nodes(self):
+        stack = list(self._children.values())
+        while stack:
+            n = stack.pop()
+            yield n
+            stack.extend(n.children.values())
+
+    @property
+    def size(self) -> int:
+        """Number of indexed (cached) physical blocks."""
+        return sum(1 for _ in self._nodes())
+
+    def blocks(self) -> list[int]:
+        return [n.block for n in self._nodes()]
+
+    def evictable_count(self) -> int:
+        """Blocks reclaimable by cascading leaf eviction.  A node whose
+        block has refcount 1 is held by the index alone; every descendant
+        of such a node also has refcount 1 (a request using a deep block
+        necessarily holds the whole chain above it), so the count is simply
+        the number of index-only nodes."""
+        return sum(1 for n in self._nodes()
+                   if self._alloc.refcount(n.block) == 1)
+
+    # -- match / insert -----------------------------------------------------
+
+    def match(self, tokens) -> tuple[list[int], int]:
+        """Longest cached prefix of ``tokens``.
+
+        Returns ``(blocks, length)``: the ordered physical blocks covering
+        the match and the matched token count.  All blocks but possibly the
+        last cover a full ``block_size`` run; a shorter final contribution
+        means the last block is a **partial** (divergence-mid-block) match
+        the caller must copy-on-write, never share.  Touches the matched
+        path for LRU."""
+        self._clock += 1
+        children = self._children
+        blocks: list[int] = []
+        matched = 0
+        i = 0
+        while i + self.bs <= len(tokens):
+            node = children.get(tuple(tokens[i:i + self.bs]))
+            if node is None:
+                break
+            node.last_use = self._clock
+            blocks.append(node.block)
+            matched += self.bs
+            i += self.bs
+            children = node.children
+        rest = tuple(tokens[i:i + self.bs])
+        best, best_m = None, 0
+        for key, node in children.items():
+            m = _common_prefix_len(key, rest)
+            if m > best_m:
+                best, best_m = node, m
+        if best is not None:
+            best.last_use = self._clock
+            blocks.append(best.block)
+            matched += best_m
+        return blocks, matched
+
+    def insert(self, tokens, phys_blocks) -> int:
+        """Index the full blocks of a prefilled history: ``phys_blocks[i]``
+        holds the KV of ``tokens[i·bs:(i+1)·bs]``.  Existing nodes win (two
+        requests racing the same content keep the first block; the loser's
+        copy stays private and is freed with its request).  Returns the
+        number of newly indexed blocks (each takes one index reference)."""
+        self._clock += 1
+        children = self._children
+        parent = None
+        added = 0
+        for i, blk in enumerate(phys_blocks):
+            key = tuple(tokens[i * self.bs:(i + 1) * self.bs])
+            if len(key) < self.bs:
+                break
+            node = children.get(key)
+            if node is None:
+                node = _Node(key, blk, parent)
+                children[key] = node
+                self._alloc.ref_inc(blk)
+                added += 1
+            node.last_use = self._clock
+            parent, children = node, node.children
+        return added
+
+    # -- eviction / maintenance --------------------------------------------
+
+    def reclaim(self, n: int) -> int:
+        """Free up to ``n`` blocks by dropping LRU evictable LEAVES (a
+        dropped leaf may expose its parent as the next candidate — deepest,
+        coldest template tails go first; hot shared roots go last).  Blocks
+        with refcount > 1 are refused — a running request still reads them.
+        Returns the number of blocks actually freed."""
+        freed = 0
+        while freed < n:
+            leaf = None
+            for node in self._nodes():
+                if node.children:
+                    continue
+                if self._alloc.refcount(node.block) != 1:
+                    continue
+                if leaf is None or node.last_use < leaf.last_use:
+                    leaf = node
+            if leaf is None:
+                break
+            siblings = leaf.parent.children if leaf.parent else self._children
+            del siblings[leaf.key]
+            self._alloc.ref_dec(leaf.block)
+            freed += 1
+        return freed
+
+    def remap(self, remap) -> None:
+        """Renumber physical ids after :meth:`BlockAllocator.compact`."""
+        for node in self._nodes():
+            node.block = int(remap[node.block])

@@ -1,0 +1,86 @@
+"""Per-request QoS classes and registry-driven format selection (DESIGN.md §7).
+
+A QoS class is a scheduling envelope plus a serving *objective* that picks a
+weight format from :mod:`repro.core.formats` — the admission-time contract is
+deliberately thin: the class maps to a queue priority boost (the scheduler's
+existing strict-priority policy does the rest) and to a format the OPERATOR
+applies at the replica level.  Formats are baked into packed weight planes at
+load time, so a single engine cannot re-quantize per request; ``select_format``
+is the policy a multi-replica deployment uses to route classes to replicas
+(and what ``launch/serve.py --qos`` uses to pick the demo engine's format).
+
+Objectives, resolved against the live format registry (never hard-coded names,
+so newly registered formats participate automatically):
+
+  * ``latency``  — fastest GEMV decode: grouped-scale variants (per-group
+    absmean keeps accuracy at low bpw) whose codes drive the true-LUT GEMV
+    kernel, preferring power-of-two alphabets (the packed field IS the table
+    index — no base-b digit decode on the hot path, no wasted LUT slots),
+    then minimal bpw.  Resolves to ``int2_g128`` in the stock registry.
+  * ``memory``   — minimal HBM residency among lossless formats that still
+    have a practical table path (lut_size bounded; rules out the MAD-only
+    tq1 baseline).  Resolves to ``tl2`` in the stock registry.
+  * ``balanced`` — the serving default (``i2s``: simplest lossless kernel).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import formats
+
+
+@dataclasses.dataclass(frozen=True)
+class QoSClass:
+    name: str
+    priority_boost: int     # added to the submission's priority at admission
+    objective: str          # "latency" | "memory" | "balanced"
+
+
+CLASSES = {
+    "latency": QoSClass("latency", priority_boost=2, objective="latency"),
+    "standard": QoSClass("standard", priority_boost=0, objective="balanced"),
+    "memory": QoSClass("memory", priority_boost=0, objective="memory"),
+}
+
+
+def get(name: str) -> QoSClass:
+    try:
+        return CLASSES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown QoS class {name!r}; expected one of {sorted(CLASSES)}"
+        ) from None
+
+
+def _is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+def select_format(qos_name: str, candidates=None) -> str:
+    """Pick the registry format serving ``qos_name``'s objective (see module
+    docstring).  ``candidates`` restricts the choice (default: the full
+    registry); ties break on name for determinism."""
+    cls = get(qos_name)
+    names = list(candidates) if candidates is not None else list(formats.names())
+    specs = [formats.get(n) for n in names]
+
+    if cls.objective == "latency":
+        # grouped-scale LUT-GEMV formats first; if the candidate set has
+        # none (e.g. the model's K dims don't divide the group size), any
+        # true-LUT GEMV format still beats the MAD fallback for decode
+        for pool in ([s for s in specs
+                      if s.group_scale_cols and s.supports_lut_gemv()],
+                     [s for s in specs if s.supports_lut_gemv()]):
+            if pool:
+                return min(pool, key=lambda s: (not _is_pow2(s.base),
+                                                s.bpw, s.name)).name
+    elif cls.objective == "memory":
+        pool = [s for s in specs
+                if s.lossless and s.group >= 2 and 0 < s.lut_size <= 64]
+        if pool:
+            return min(pool, key=lambda s: (s.bpw, s.name)).name
+
+    # balanced / fallback: the simplest lossless single-element code.
+    pool = [s for s in specs if s.lossless and s.base] or specs
+    return min(pool, key=lambda s: (s.group != 1, s.bpw, s.name)).name

@@ -44,6 +44,7 @@ class Submission:
     arrival: int = 0              # monotone submit sequence (FIFO tiebreak)
     resume_tokens: list | None = None  # set on preemption re-enqueue
     metrics: RequestMetrics | None = None
+    qos: str | None = None        # QoS class name (repro.serve.qos)
 
     def tokens(self) -> list:
         """What must be in the KV cache before decode continues."""
@@ -138,12 +139,15 @@ class AdmissionScheduler:
         self._q.remove(sub)
 
     @staticmethod
-    def admissible(sub: Submission, free_blocks: int | None, pcfg) -> bool:
-        """KV-gated admission: room for :meth:`Submission.blocks_needed`.
-        ``pcfg=None`` (dense cache) always admits."""
+    def admissible(sub: Submission, free_blocks: int | None, pcfg,
+                   reuse_blocks: int = 0) -> bool:
+        """KV-gated admission: room for :meth:`Submission.blocks_needed`
+        minus ``reuse_blocks`` already resident via a prefix-cache hit
+        (shared blocks are adopted, not allocated — they cost no free-list
+        capacity).  ``pcfg=None`` (dense cache) always admits."""
         if pcfg is None or free_blocks is None:
             return True
-        return free_blocks >= sub.blocks_needed(pcfg)
+        return free_blocks >= sub.blocks_needed(pcfg) - reuse_blocks
 
     @staticmethod
     def pick_victim(running: list, *, min_priority: int | None = None,

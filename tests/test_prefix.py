@@ -1,0 +1,360 @@
+"""Prefix-sharing paged KV: radix index, refcounts, copy-on-write, QoS.
+
+The load-bearing claims, as executable assertions:
+
+  * warm (prefix-cache) serving emits tokens BIT-IDENTICAL to cold prefill
+    at act=token — on attention archs where sharing is real, AND on dense /
+    recurrent / SSD configurations where the cache must go inert instead of
+    corrupting state;
+  * copy-on-write handles divergence mid-block: the partial block is copied,
+    its tail masked, and the source stays valid for other owners;
+  * eviction refuses blocks with refcount > 1 (a running request reads
+    them) and reclaims LRU leaves first;
+  * ``compact()`` preserves shared mappings: a block in several ownership
+    lists (or held only by the index) keeps ONE identity across defrag;
+  * QoS classes resolve to registry formats (latency → grouped LUT-GEMV
+    code, memory → min-bpw lossless table format) and boost admission.
+"""
+
+import collections
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.bitlinear import QuantConfig
+from repro.models import lm
+from repro.serve import (PagedKVConfig, PrefixIndex, Request, ServeConfig,
+                         ServeEngine)
+from repro.serve import qos
+from repro.serve.kvcache import BlockAllocator, cow_copy_block
+from repro.serve.scheduler import AdmissionScheduler, Submission
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(name="qwen1.5-0.5b", **kw):
+    quant = kw.pop("quant", QuantConfig(mode="quant", fmt="i2s", act="token"))
+    return configs.smoke(name).replace(dtype="float32", quant=quant, **kw)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = _cfg()
+    return cfg, lm.init(KEY, cfg)
+
+
+def _shared_prompts(cfg, n=4, prefix_len=20, lo=3, hi=8, seed=1):
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, cfg.vocab, size=prefix_len).tolist()
+    return [shared + rng.integers(0, cfg.vocab,
+                                  size=rng.integers(lo, hi)).tolist()
+            for _ in range(n)]
+
+
+def _run(params, cfg, prompts, *, prefix, max_new=5, **kw):
+    defaults = dict(batch_slots=2, max_seq=64, paged=True, block_size=8,
+                    prefill_chunk=4)
+    defaults.update(kw)
+    eng = ServeEngine(params, cfg, ServeConfig(prefix_cache=prefix, **defaults),
+                      pack=cfg.quant.mode == "quant")
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=max_new))
+    done = eng.run()
+    return {r.rid: r.out_tokens for r in done}, eng
+
+
+# ---------------------------------------------------------------------------
+# PrefixIndex unit behaviour (fake allocator: refcounts only)
+# ---------------------------------------------------------------------------
+
+
+class _FakeAlloc:
+    def __init__(self):
+        self.refs = collections.Counter()
+
+    def refcount(self, b):
+        return self.refs[b]
+
+    def ref_inc(self, b):
+        self.refs[b] += 1
+
+    def ref_dec(self, b):
+        self.refs[b] -= 1
+        return self.refs[b] <= 0
+
+
+def test_index_match_full_and_partial():
+    al = _FakeAlloc()
+    ix = PrefixIndex(4, al)
+    toks = list(range(12))
+    assert ix.insert(toks, [10, 11, 12]) == 3
+    assert al.refs[10] == al.refs[11] == al.refs[12] == 1
+    # full-prefix walk
+    blocks, m = ix.match(toks + [99])
+    assert (blocks, m) == ([10, 11, 12], 12)
+    # divergence mid-block: third block matches only its first 2 tokens —
+    # the partial block is returned LAST, for the caller to copy-on-write
+    blocks, m = ix.match([0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 77, 88])
+    assert (blocks, m) == ([10, 11, 12], 10)
+    # no match under a cold root
+    assert ix.match([5, 5, 5, 5]) == ([], 0)
+    # re-inserting the same content keeps the FIRST block (existing wins)
+    assert ix.insert(toks, [20, 21, 22]) == 0
+    assert ix.match(toks)[0] == [10, 11, 12]
+    assert ix.size == 3
+
+
+def test_index_reclaim_refuses_refcounted_blocks():
+    al = _FakeAlloc()
+    ix = PrefixIndex(4, al)
+    ix.insert(list(range(8)), [5, 6])
+    # a running request holds the chain (owners always adopt root→leaf)
+    al.ref_inc(5), al.ref_inc(6)
+    assert ix.evictable_count() == 0
+    assert ix.reclaim(2) == 0
+    assert ix.size == 2
+    al.ref_dec(5), al.ref_dec(6)
+    assert ix.evictable_count() == 2
+    assert ix.reclaim(2) == 2          # leaf first, then the exposed parent
+    assert ix.size == 0 and al.refs[5] == 0 and al.refs[6] == 0
+
+
+def test_index_reclaim_lru_leaves_first():
+    al = _FakeAlloc()
+    ix = PrefixIndex(2, al)
+    ix.insert([1, 2, 3, 4], [100, 101])    # chain A (older)
+    ix.insert([7, 8], [200])               # chain B
+    ix.match([1, 2, 3, 4])                 # touch A: B becomes LRU
+    assert ix.reclaim(1) == 1
+    assert ix.match([7, 8]) == ([], 0), "cold chain must go first"
+    assert ix.match([1, 2, 3, 4])[1] == 4
+    # next reclaim takes A's leaf, never the (still-linked) root before it
+    assert ix.reclaim(1) == 1
+    assert ix.match([1, 2, 3, 4]) == ([100], 2)
+
+
+# ---------------------------------------------------------------------------
+# Refcounted allocator + compaction
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_shared_release_and_adopt():
+    al = BlockAllocator(PagedKVConfig(block_size=4, num_blocks=8,
+                                      max_blocks_per_seq=4))
+    a = al.alloc(0, 2)
+    al.adopt(1, a)                        # rid 1 shares rid 0's blocks
+    assert al.refcount(a[0]) == 2 and al.shared_count() == 2
+    assert al.release(0) == []            # still referenced: nothing freed
+    assert al.free_count == 6
+    assert sorted(al.release(1)) == sorted(a)
+    assert al.free_count == 8 and al.shared_count() == 0
+
+
+def test_allocator_reclaimer_invoked_on_pressure():
+    al = BlockAllocator(PagedKVConfig(block_size=4, num_blocks=4,
+                                      max_blocks_per_seq=4))
+    held = al.alloc(0, 3)
+    calls = []
+
+    def reclaimer(n):
+        calls.append(n)
+        al.ref_dec(held[0])               # index drops one cached block
+        al._owned[0].remove(held[0])
+        return 1
+
+    al.set_reclaimer(reclaimer)
+    got = al.alloc(1, 2)
+    assert calls == [1] and got is not None and len(got) == 2
+
+
+def test_compact_preserves_shared_mappings():
+    al = BlockAllocator(PagedKVConfig(block_size=4, num_blocks=10,
+                                      max_blocks_per_seq=8))
+    a = al.alloc(0, 3)
+    b = al.alloc(1, 2)
+    al.adopt(1, a[:2])                    # rid 1 shares rid 0's first blocks
+    al.release(0)                         # rid 0 leaves; shared pair survives
+    idx_only = al.alloc(2, 1)             # stand-in for an index-held block
+    al._owned.pop(2)                      # owned by nobody, kept via extra_live
+    src, remap = al.compact(extra_live=idx_only)
+    # shared blocks keep ONE identity: rid 1's adopted tail == old a[:2]
+    assert al.owned(1) == [int(remap[x]) for x in b + a[:2]]
+    assert al.owned(1)[2:] == [int(remap[x]) for x in a[:2]]
+    assert al.refcount(al.owned(1)[2]) == 1      # rid 1 only, post-release
+    assert al.refcount(int(remap[idx_only[0]])) == 1
+    live = len(set(al.owned(1))) + 1             # + the extra_live block
+    assert al.free_count == 10 - live
+    # src/remap are inverse over the live range and fix the trash block
+    assert all(int(remap[src[i]]) == i for i in range(10))
+    assert src[10] == remap[10] == 10
+
+
+def test_cow_copy_block_masks_tail(model):
+    cfg, params = model
+    state = lm.init_paged_state(cfg, 1, num_blocks=4, block_size=8)
+    table = jnp.asarray(np.array([[0, 1, 2, 3]], np.int32))
+    packed = lm.pack(params, cfg)
+    toks = np.array([3, 141, 59, 265, 358], np.int32)
+    for t, tok in enumerate(toks):
+        _, state = lm.decode_step(packed, jnp.asarray([[tok]], jnp.int32),
+                                  jnp.asarray([t], jnp.int32), cfg, state,
+                                  table=table)
+    state = cow_copy_block(state, cfg, 0, 1, valid=3)
+
+    def check(st, kind, stacked):
+        if kind in ("attn", "local"):
+            pos = np.asarray(st["pos"])
+            s, d = (pos[:, 0], pos[:, 1]) if stacked else (pos[0], pos[1])
+            np.testing.assert_array_equal(s[..., :5], d[..., :5] * 0 +
+                                          np.arange(5), err_msg="src intact")
+            np.testing.assert_array_equal(d[..., :3], s[..., :3])
+            assert (d[..., 3:] == -1).all(), "copied tail must be masked"
+            for name, a in st.items():
+                if name == "pos":
+                    continue
+                arr = np.asarray(a)
+                sb, db = (arr[:, 0], arr[:, 1]) if stacked else (arr[0], arr[1])
+                np.testing.assert_array_equal(db[..., :3, :], sb[..., :3, :])
+        return st
+
+    from repro.serve.kvcache import map_layer_states
+    map_layer_states(state, cfg, check)
+
+
+# ---------------------------------------------------------------------------
+# Engine-level: warm == cold, bit for bit (the acceptance claim)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("quant", [
+    QuantConfig(mode="fp"),
+    QuantConfig(mode="quant", fmt="i2s", act="token"),
+], ids=["fp", "i2s-act-token"])
+def test_shared_prefix_tokens_bitexact_attention(quant):
+    cfg = _cfg(quant=quant)
+    params = lm.init(KEY, cfg)
+    prompts = _shared_prompts(cfg)
+    cold, _ = _run(params, cfg, prompts, prefix=False)
+    warm, eng = _run(params, cfg, prompts, prefix=True)
+    assert warm == cold
+    assert eng.prefix_inert_reason is None
+    s = eng.metrics_summary()
+    assert s["prefix_hit_rate"] > 0 and s["prefill_tokens_skipped"] > 0
+    assert s["blocks_reused"] > 0
+
+
+@pytest.mark.parametrize("arch", ["recurrentgemma-2b", "mamba2-1.3b"],
+                         ids=["rg-lru", "ssd"])
+def test_shared_prefix_inert_on_recurrent_archs(arch):
+    """Recurrent / SSD layer state is a per-slot carry with no block
+    identity: the flag must go INERT (zero hits, recorded reason), not
+    corrupt state — tokens stay bit-identical to the cache-off run."""
+    cfg = _cfg(arch)
+    params = lm.init(KEY, cfg)
+    prompts = _shared_prompts(cfg, n=3, prefix_len=12, seed=2)
+    cold, _ = _run(params, cfg, prompts, prefix=False, max_new=4,
+                   batch_slots=2, max_seq=48)
+    warm, eng = _run(params, cfg, prompts, prefix=True, max_new=4,
+                     batch_slots=2, max_seq=48)
+    assert warm == cold
+    assert eng.prefix is None and "per-slot hidden state" in eng.prefix_inert_reason
+    assert eng.metrics_summary()["prefix_hit_rate"] == 0
+
+
+def test_shared_prefix_inert_on_dense_kv(model):
+    cfg, params = model
+    prompts = _shared_prompts(cfg, n=2)
+    cold, _ = _run(params, cfg, prompts, prefix=False, paged=False)
+    warm, eng = _run(params, cfg, prompts, prefix=True, paged=False)
+    assert warm == cold
+    assert eng.prefix is None and "paged" in eng.prefix_inert_reason
+
+
+def test_cow_divergence_mid_block(model):
+    """Two prompts sharing 12 tokens at block_size 8: the second request
+    reuses one full block and COWs the half-full divergence block — and
+    still decodes bit-identically to a cold run."""
+    cfg, params = model
+    rng = np.random.default_rng(3)
+    shared = rng.integers(0, cfg.vocab, size=12).tolist()
+    # first prompt ends ON a block boundary (16 = 2 full blocks) so its
+    # divergence block is actually published to the index
+    prompts = [shared + [11, 12, 13, 14], shared + [91, 92, 93, 94]]
+    cold, _ = _run(params, cfg, prompts, prefix=False, batch_slots=1)
+    warm, eng = _run(params, cfg, prompts, prefix=True, batch_slots=1)
+    assert warm == cold
+    m2 = eng.stats.finished[-1]
+    assert m2.prefix_hit_tokens == 12     # 8 shared + 4 via COW copy
+    assert m2.prefix_hit_blocks == 2      # one adopted, one copied
+
+
+def test_engine_defrag_preserves_prefix_hits(model):
+    """compact() is a pure relabel even with an active index: cached
+    blocks survive defrag (remapped, not scrubbed) and a later request
+    still hits and decodes bit-identically."""
+    cfg, params = model
+    prompts = _shared_prompts(cfg, n=2)
+    cold, _ = _run(params, cfg, prompts, prefix=False, batch_slots=1)
+
+    eng = ServeEngine(params, cfg, ServeConfig(
+        batch_slots=1, max_seq=64, paged=True, block_size=8,
+        prefill_chunk=4, prefix_cache=True))
+    eng.submit(Request(rid=0, prompt=prompts[0], max_new_tokens=5))
+    out = {r.rid: r.out_tokens for r in eng.run()}
+    assert eng.prefix.size > 0
+    eng.defrag()                          # relabel under live cached blocks
+    eng.submit(Request(rid=1, prompt=prompts[1], max_new_tokens=5))
+    out.update({r.rid: r.out_tokens for r in eng.run()})
+    assert out == cold
+    assert eng.stats.finished[-1].prefix_hit_tokens > 0
+
+
+def test_cache_evicted_under_pressure_never_breaks_decode(model):
+    """A pool sized for ~1.5 requests forces the reclaimer to evict cached
+    leaves on admission; outputs must still match the cache-off run."""
+    cfg, params = model
+    prompts = _shared_prompts(cfg, n=4, prefix_len=16, seed=4)
+    kw = dict(batch_slots=1, max_seq=64, kv_blocks=6)
+    cold, _ = _run(params, cfg, prompts, prefix=False, **kw)
+    warm, eng = _run(params, cfg, prompts, prefix=True, **kw)
+    assert warm == cold
+    s = eng.metrics_summary()
+    assert s["kv_blocks_free"] + s["prefix_cached_blocks"] <= 6
+
+
+# ---------------------------------------------------------------------------
+# QoS classes
+# ---------------------------------------------------------------------------
+
+
+def test_qos_format_selection_tracks_registry():
+    assert qos.select_format("latency") == "int2_g128"
+    assert qos.select_format("memory") == "tl2"
+    assert qos.select_format("standard") == "i2s"
+    # restricted candidate sets re-resolve instead of hard-coding names
+    assert qos.select_format("latency", ["i2s", "tl1_g128"]) == "tl1_g128"
+    # no grouped LUT format in range (e.g. K % 128 != 0): an ungrouped
+    # true-LUT GEMV format still beats the balanced fallback for decode
+    assert qos.select_format("latency", ["i2s", "tl1", "int2"]) == "int2"
+    assert qos.select_format("memory", ["i2s", "tl1"]) == "tl1"
+    assert qos.select_format("memory", ["i2s", "fp"]) == "i2s"  # fallback
+    with pytest.raises(KeyError, match="unknown QoS class"):
+        qos.select_format("turbo")
+
+
+def test_qos_boost_orders_admission(model):
+    """A latency-class submission jumps the standard-class queue (boost 2
+    beats default 0) without callers touching raw priorities."""
+    cfg, params = model
+    eng = ServeEngine(params, cfg, ServeConfig(batch_slots=1, max_seq=32,
+                                               paged=True, block_size=8))
+    eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=2),
+               qos="standard")
+    eng.submit(Request(rid=1, prompt=[4, 5, 6], max_new_tokens=2),
+               qos="latency")
+    done = eng.run()
+    assert [r.rid for r in done] == [1, 0]
+    assert [m.qos for m in eng.stats.finished] == ["latency", "standard"]
