@@ -16,7 +16,12 @@ Two sweeps share one artifact (``BENCH_serve.json``):
 
 Per cell: wall throughput (generated tok/s), TTFT mean / p50 / p95
 (submit → first generated token), queue wait p95, preemptions, and the
-prefix telemetry (hit rate, prefill tokens skipped, blocks reused).
+prefix telemetry (hit rate, prefill tokens skipped, blocks reused).  The
+blob additionally carries a ``kernel_attribution`` table from one
+instrumented run (``repro.obs``, DESIGN.md §9): jit-fenced wall per
+(kernel, fmt, M, K, N-bucket) key next to the dispatch cost model's
+prediction, run after the timed sweep so the fences never touch gated
+cells.
 
 CI smoke: ``python -m benchmarks.bench_serve --smoke`` runs the tiny
 dense/paged × sequential/batched sweep PLUS a shared-prefix cell
@@ -40,6 +45,7 @@ import numpy as np
 
 from benchmarks import smoke_gate
 from repro import configs
+from repro import obs as obs_mod
 from repro.core.bitlinear import QuantConfig
 from repro.models import lm
 from repro.serve import Request, ServeConfig, ServeEngine
@@ -172,6 +178,23 @@ def _run_cell(params, cfg, paged, chunk, budget, prompts, max_new, *,
     return _metrics_cell(eng, done, wall), {r.rid: r.out_tokens for r in done}
 
 
+def _attribution_run(params, cfg, prompts, max_new, chunk, budget):
+    """One jit-fenced instrumented run (repro.obs, DESIGN.md §9) at the
+    paged-batched sweep point: every mpGEMM dispatched during serving gets
+    measured wall attributed against the dispatch cost model.  Runs AFTER
+    the timed sweep so its per-call fences never pollute the gated cells;
+    the sweep's earlier compiles were keyset-captured, so this run
+    attributes warm executes (plus any shape it compiles itself)."""
+    obs = obs_mod.make(tracing=False, metrics_on=False)
+    eng = ServeEngine(params, cfg, ServeConfig(
+        batch_slots=SLOTS, max_seq=MAX_SEQ, paged=True, block_size=BLOCK,
+        prefill_chunk=chunk, prefill_budget=budget), obs=obs)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=max_new))
+    eng.run()
+    return eng.measured_vs_predicted()
+
+
 def _run_bursty_cell(params, cfg, prompts, *, prefix):
     """Bursty arrivals: WORK_BURST requests per burst, WORK_DRAIN ticks of
     partial drain between bursts, then run to completion."""
@@ -292,6 +315,13 @@ def run(smoke: bool = False, artifact: str | None = None, seed: int = 0) -> list
             f"serve_prefix_ttft_speedup_{on_c['mode']}", 0.0,
             f"ttft_off={off_c['ttft_mean_s']}s_on={on_c['ttft_mean_s']}s"
             f"_x{speedup}_hit={on_c['prefix_hit_rate']}"))
+    chunk = SMOKE_CHUNK if smoke else CHUNK
+    attribution = _attribution_run(
+        params, cfg, _prompts(cfg, SLOTS, prompt_len, seed=seed), max_new,
+        chunk, SLOTS * chunk)
+    rows.append(("serve_kernel_attribution", 0.0,
+                 f"{len(attribution['rows'])}kernel_keys"
+                 f"_unattr={attribution['unattributed_s']}s"))
     blob = {
         "backend": jax.default_backend(),
         "arch": "qwen1.5-0.5b(smoke)",
@@ -303,6 +333,7 @@ def run(smoke: bool = False, artifact: str | None = None, seed: int = 0) -> list
         "act_quant": "token (composition-invariant; see DESIGN.md §7)",
         "prefix_ttft_speedup": prefix_speedups,
         "cells": cells,
+        "kernel_attribution": attribution,
     }
     with open(artifact, "w") as f:
         json.dump(blob, f, indent=1)

@@ -9,6 +9,13 @@ timings jitter well past any sane factor under CI-runner contention —
 confirm TIMING failures on one independent re-sweep before tripping,
 while schema/identity failures always fail.  This module is the ONE home
 of that protocol; the suites supply only their sweep and their checker.
+
+It is also the home of the OBSERVABILITY schema checks (DESIGN.md §9):
+``python -m benchmarks.smoke_gate --check-obs --trace trace.json
+--metrics metrics.json`` validates the launcher's ``--trace-out`` /
+``--metrics-json`` artifacts — CI runs it after the serving smoke so a
+drifted trace-event or metrics-snapshot shape fails the build instead of
+silently shipping files Perfetto or a scraper cannot read.
 """
 
 from __future__ import annotations
@@ -158,3 +165,133 @@ def gate_main(argv: list | None, *, tag: str, run, check_regression,
     print(f"[{tag}] smoke gate ok ({len(new_blob['cells'])} cells, no "
           f"schema drift, no reproducible >{factor}x cell regression)")
     return 0
+
+
+# ---------------------------------------------------------------------------
+# Observability artifact schema checks (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+# Chrome trace-event format: what Perfetto/chrome://tracing require per event
+TRACE_EVENT_KEYS = {"name", "ph", "ts", "pid", "tid"}
+TRACE_PHASES = {"X", "i", "M"}      # complete | instant | metadata
+TRACE_REQUIRED_SPANS = {"tick", "decode"}  # every serve trace has these
+MVP_ROW_KEYS = {  # measured_vs_predicted rows (repro.obs.kernels.report)
+    "kernel", "fmt", "M", "K", "N_bucket", "calls", "compile_calls",
+    "compile_s", "execute_s", "measured_us_per_call",
+    "predicted_us_per_call", "measured_over_predicted",
+    "predicted_hbm_bytes_per_call", "measured_gb_s",
+    "predicted_mxu_inflation"}
+DECISION_KEYS = {"fmt", "regime", "n", "k", "m", "kernel", "source", "seq"}
+
+
+def check_trace_blob(blob: dict) -> list:
+    """Validate a ``--trace-out`` file; returns message strings."""
+    failures = []
+    events = blob.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return [f"traceEvents missing or empty (got {type(events).__name__})"]
+    names = set()
+    for i, e in enumerate(events):
+        missing = TRACE_EVENT_KEYS - set(e)
+        if missing:
+            failures.append(f"event {i} missing keys {sorted(missing)}")
+            continue
+        if e["ph"] not in TRACE_PHASES:
+            failures.append(f"event {i} has unknown phase {e['ph']!r}")
+        if e["ph"] == "X" and not (isinstance(e.get("dur"), (int, float))
+                                   and e["dur"] >= 0):
+            failures.append(f"span event {i} ({e['name']!r}) needs dur >= 0")
+        names.add(e["name"])
+    for want in TRACE_REQUIRED_SPANS - names:
+        failures.append(f"required span {want!r} absent from the trace "
+                        f"(saw {sorted(names)})")
+    return failures
+
+
+def check_metrics_blob(blob: dict) -> list:
+    """Validate a ``--metrics-json`` file; returns message strings."""
+    failures = []
+    m = blob.get("metrics")
+    if not isinstance(m, dict):
+        failures.append("metrics section missing")
+    else:
+        for kind in ("counters", "gauges", "histograms"):
+            if not isinstance(m.get(kind), dict):
+                failures.append(f"metrics.{kind} missing or not a mapping")
+    d = blob.get("dispatch")
+    if not isinstance(d, dict):
+        failures.append("dispatch section missing")
+    else:
+        dropped = d.get("decisions_dropped")
+        if not (isinstance(dropped, int) and dropped >= 0):
+            failures.append(
+                f"dispatch.decisions_dropped must be an int >= 0, "
+                f"got {dropped!r}")
+        decs = d.get("decisions")
+        if not isinstance(decs, list):
+            failures.append("dispatch.decisions missing or not a list")
+        else:
+            for i, dec in enumerate(decs):
+                missing = DECISION_KEYS - set(dec)
+                if missing:
+                    failures.append(
+                        f"decision {i} missing keys {sorted(missing)}")
+                    break  # one schema message per shape of drift
+    mvp = blob.get("measured_vs_predicted")
+    if not isinstance(mvp, dict) or not isinstance(mvp.get("rows"), list):
+        failures.append("measured_vs_predicted.rows missing")
+    else:
+        for i, row in enumerate(mvp["rows"]):
+            missing = MVP_ROW_KEYS - set(row)
+            if missing:
+                failures.append(
+                    f"measured_vs_predicted row {i} missing keys "
+                    f"{sorted(missing)}")
+                break
+    return failures
+
+
+def obs_check_main(trace_path: str | None, metrics_path: str | None) -> int:
+    failures = []
+    for path, checker in ((trace_path, check_trace_blob),
+                          (metrics_path, check_metrics_blob)):
+        if not path:
+            continue
+        if not os.path.exists(path):
+            failures.append(f"{path}: file not found")
+            continue
+        try:
+            with open(path) as f:
+                blob = json.load(f)
+        except ValueError as e:
+            failures.append(f"{path}: not valid JSON ({e})")
+            continue
+        failures.extend(f"{path}: {msg}" for msg in checker(blob))
+    for msg in failures:
+        print(f"[obs-check] FAIL: {msg}")
+    if failures:
+        return 1
+    print("[obs-check] ok: trace/metrics artifacts match the DESIGN.md §9 "
+          "schemas")
+    return 0
+
+
+def main(argv: list | None = None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="observability artifact schema check (see module doc)")
+    ap.add_argument("--check-obs", action="store_true", required=True,
+                    help="validate --trace/--metrics artifact schemas")
+    ap.add_argument("--trace", default="",
+                    help="a --trace-out Chrome trace-event JSON to validate")
+    ap.add_argument("--metrics", default="",
+                    help="a --metrics-json snapshot to validate")
+    args = ap.parse_args(argv)
+    if not (args.trace or args.metrics):
+        ap.error("nothing to check: pass --trace and/or --metrics")
+    return obs_check_main(args.trace, args.metrics)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

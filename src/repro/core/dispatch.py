@@ -88,8 +88,10 @@ class KernelSpec:
         # own tiling constraint must hold
         return k % max(fmtreg.get(fmt).k_align, 1) == 0 and k % self.k_align == 0
 
-    def cost(self, fmt: str, n: int, k: int, m: int) -> float:
-        """Roofline cost hint in µs: max(HBM time, MXU time)."""
+    def hbm_bytes(self, fmt: str, n: int, k: int, m: int) -> float:
+        """Predicted HBM traffic per call in bytes (weight operand + int8
+        activations + any un-amortized scale plane) — the cost hint's memory
+        term, exposed for the measured-vs-predicted attribution report."""
         fspec = fmtreg.get(fmt)
         bpw = self.hbm_bpw
         scale_bytes = 0.0
@@ -102,10 +104,14 @@ class KernelSpec:
             # kernel-specified operand traffic (unpacked int8 / one-hot)
             # excludes the extra [K//G, M] fp32 scale-plane read
             scale_bytes = 4.0 * m * (k // fspec.group_scale_cols)
+        return m * k * bpw / 8 + n * k + scale_bytes
+
+    def cost(self, fmt: str, n: int, k: int, m: int) -> float:
+        """Roofline cost hint in µs: max(HBM time, MXU time)."""
         infl = self.mxu_inflation
         if infl is None:
-            infl = fspec.mxu_inflation
-        mem = (m * k * bpw / 8 + n * k + scale_bytes) / _HBM_BYTES_PER_US
+            infl = fmtreg.get(fmt).mxu_inflation
+        mem = self.hbm_bytes(fmt, n, k, m) / _HBM_BYTES_PER_US
         comp = 2.0 * n * m * k * infl / _MXU_OPS_PER_US
         return max(mem, comp)
 
@@ -428,6 +434,7 @@ class Decision:
 _DECISIONS: list[Decision] = []
 _MAX_DECISIONS = 4096
 _SEQ = 0  # total decisions ever recorded (monotone, never reset by trimming)
+_DROPPED = 0  # decisions lost to trimming (surfaced via the metrics registry)
 
 
 def decisions() -> tuple:
@@ -444,9 +451,17 @@ def decisions_since(mark: int) -> tuple:
     """Decisions recorded after ``mark`` (a prior ``decision_count()``).
 
     Robust to log trimming: matches by monotone seq, not list index.  If the
-    log overflowed past ``mark`` the trimmed-away decisions are simply gone.
+    log overflowed past ``mark`` the trimmed-away decisions are simply gone
+    FROM THIS VIEW — but not silently: :func:`decisions_dropped` counts
+    every trimmed entry, and the observability metrics snapshot surfaces it
+    (``dispatch_decisions_dropped``) next to the retained log.
     """
     return tuple(d for d in _DECISIONS if d.seq >= mark)
+
+
+def decisions_dropped() -> int:
+    """Total decisions lost to capacity trimming since process start."""
+    return _DROPPED
 
 
 def clear_decisions() -> None:
@@ -454,9 +469,11 @@ def clear_decisions() -> None:
 
 
 def _record(d: Decision) -> None:
-    global _SEQ
+    global _SEQ, _DROPPED
     if len(_DECISIONS) >= _MAX_DECISIONS:
-        del _DECISIONS[: _MAX_DECISIONS // 2]
+        trim = _MAX_DECISIONS // 2
+        del _DECISIONS[:trim]
+        _DROPPED += trim
     _DECISIONS.append(dataclasses.replace(d, seq=_SEQ))
     _SEQ += 1
 

@@ -32,12 +32,12 @@ class Engine(ServeEngine):
 
     def __init__(self, params, cfg: ModelConfig, *, batch_slots: int = 4,
                  max_seq: int = 256, pack: bool = True, seed: int = 0,
-                 plan: KernelPlan | None = None):
+                 plan: KernelPlan | None = None, obs=None):
         super().__init__(
             params, cfg,
             ServeConfig(batch_slots=batch_slots, max_seq=max_seq,
                         paged=False, prefill_chunk=1),
-            pack=pack, seed=seed, plan=plan)
+            pack=pack, seed=seed, plan=plan, obs=obs)
 
 
 def generate(params, cfg: ModelConfig, prompts: list, *, max_new_tokens: int = 16,

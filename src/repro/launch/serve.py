@@ -16,6 +16,14 @@ enables chunked prefill, and --bursty N replays N request bursts against the
 admission scheduler and prints per-request telemetry (TTFT, queue wait,
 throughput, preemptions).
 
+Observability (DESIGN.md §9): ``--trace-out trace.json`` writes a
+Chrome/Perfetto span trace of the run (one span per engine tick with
+admission / prefill / decode / sampling children), ``--metrics-json``
+dumps the metrics registry plus the dispatch decision log and the
+measured-vs-predicted kernel attribution table, and ``--metrics-prom``
+writes a Prometheus text snapshot.  All off by default and zero-overhead
+when off.
+
 A real deployment would restore packed params from the checkpoint store and
 pjit decode_step over the serving mesh (the dry-run proves that lowering).
 """
@@ -29,6 +37,7 @@ import jax
 import numpy as np
 
 from repro import configs
+from repro import obs as obs_mod
 from repro.core import dispatch, formats
 from repro.core.bitlinear import QuantConfig
 from repro.core.dispatch import KernelPlan
@@ -42,17 +51,26 @@ def build_plan(args) -> KernelPlan:
     return KernelPlan(gemv=args.gemv, gemm=args.gemm, backend=args.backend)
 
 
-def make_engine(args, params, cfg):
+def make_obs(args) -> obs_mod.Obs | None:
+    """A live Obs bundle iff any observability flag asked for one —
+    otherwise None, so the engine carries the zero-overhead NULL bundle."""
+    if not (args.trace_out or args.metrics_json or args.metrics_prom):
+        return None
+    return obs_mod.make(tracing=bool(args.trace_out))
+
+
+def make_engine(args, params, cfg, obs=None):
     if not (args.paged or args.prefill_chunk > 1 or args.bursty
             or args.prefix_cache):
-        return Engine(params, cfg, batch_slots=args.slots, max_seq=args.max_seq)
+        return Engine(params, cfg, batch_slots=args.slots,
+                      max_seq=args.max_seq, obs=obs)
     return ServeEngine(params, cfg, ServeConfig(
         batch_slots=args.slots, max_seq=args.max_seq, paged=args.paged,
         block_size=args.block_size,
         kv_blocks=args.kv_blocks or None,
         prefill_chunk=args.prefill_chunk,
         prefill_budget=args.prefill_budget,
-        prefix_cache=args.prefix_cache))
+        prefix_cache=args.prefix_cache), obs=obs)
 
 
 def _request_qos(args, rng) -> str | None:
@@ -135,6 +153,16 @@ def main():
     ap.add_argument("--seed", type=int, default=0,
                     help="workload RNG seed (prompts, priorities, QoS mix)")
     ap.add_argument("--ckpt", default="", help="restore packed params from here")
+    # observability (DESIGN.md §9) — off by default, zero overhead when off
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome/Perfetto trace-event JSON of the "
+                         "serve run here (open at https://ui.perfetto.dev)")
+    ap.add_argument("--metrics-json", default="",
+                    help="write the metrics snapshot here: registry dump, "
+                         "dispatch decision log + drop counter, and the "
+                         "measured_vs_predicted kernel attribution table")
+    ap.add_argument("--metrics-prom", default="",
+                    help="write a Prometheus text-format metrics snapshot")
     args = ap.parse_args()
 
     plan = build_plan(args)
@@ -200,7 +228,8 @@ def main():
         from repro.ckpt import store
         params, _ = store.restore(params, args.ckpt)
 
-    eng = make_engine(args, params, cfg)
+    obs = make_obs(args)
+    eng = make_engine(args, params, cfg, obs)
     rng = np.random.default_rng(args.seed)
     templates = None
     if args.prefix_cache:
@@ -243,19 +272,40 @@ def main():
                  f"/{s['kv_blocks_shared']}/{s['kv_blocks']}"
                  if args.paged else ""))
         if args.prefix_cache:
-            print(f"  prefix hits = {s['prefix_hit_requests']}/{s['requests']} "
-                  f"requests, hit rate = {s['prefix_hit_rate']:.2f}, "
-                  f"prefill tokens skipped = {s['prefill_tokens_skipped']}, "
-                  f"blocks reused = {s['blocks_reused']}"
-                  + (f", cached = {s['prefix_cached_blocks']} "
-                     f"({s['prefix_evictable_blocks']} evictable)"
-                     if "prefix_cached_blocks" in s else ""))
+            # structured prefix-hit telemetry: per-admission events live on
+            # the tracer (--trace-out); the printed line renders the same
+            # structured summary through the one canonical formatter
+            print(obs_mod.format_prefix_summary(s))
     routed = sorted({(dc.regime, dc.n, dc.kernel, dc.source)
                      for dc in eng.kernel_decisions()})
     for regime, n, kernel, source in routed:
         print(f"  routed {regime} (N={n}) -> {kernel} [{source}]")
     for r in sorted(done, key=lambda r: r.rid)[:3]:
         print(f"  req{r.rid}: prompt={r.prompt} -> {r.out_tokens}")
+
+    if obs is not None:
+        import json
+        if args.trace_out:
+            obs.tracer.save(args.trace_out)
+            print(f"[serve] trace -> {args.trace_out} "
+                  f"({len(obs.tracer.chrome_events())} events; open at "
+                  "https://ui.perfetto.dev)")
+        if args.metrics_json or args.metrics_prom:
+            blob = obs_mod.metrics_blob(obs)
+            if isinstance(eng, ServeEngine):
+                blob["serve"] = eng.metrics_summary()
+            if args.metrics_json:
+                with open(args.metrics_json, "w") as f:
+                    json.dump(blob, f, indent=1, default=str)
+                nrows = len(blob["measured_vs_predicted"]["rows"])
+                print(f"[serve] metrics -> {args.metrics_json} "
+                      f"({nrows} kernel-attribution rows, "
+                      f"{blob['dispatch']['decisions_dropped']} decisions "
+                      "dropped)")
+            if args.metrics_prom:
+                with open(args.metrics_prom, "w") as f:
+                    f.write(obs.metrics.to_prometheus())
+                print(f"[serve] prometheus snapshot -> {args.metrics_prom}")
 
 
 if __name__ == "__main__":

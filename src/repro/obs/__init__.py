@@ -1,0 +1,81 @@
+"""Observability (DESIGN.md §9): tracing, metrics, kernel attribution.
+
+Three composable pieces behind one :class:`Obs` bundle:
+
+    trace.Tracer           nested spans + structured events, Chrome/Perfetto
+                           JSON export, injectable clock
+    metrics.MetricsRegistry  counters / gauges / histograms, JSON +
+                           Prometheus text snapshots
+    kernels.KernelProfiler jit-aware mpGEMM timing: per
+                           (kernel, fmt, M, K, N-bucket) wall/compile/call
+                           accounting and the measured_vs_predicted report
+
+Everything is OFF by default and zero-overhead when off: :data:`NULL_OBS`
+hands the engine no-op spans and instruments, so the hot path carries its
+instrumentation unconditionally.  Build a live bundle with :func:`make`
+(``clock`` is injectable — the engine's virtual-clock tests assert exact
+span trees and deterministic attribution).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.core import dispatch
+from repro.obs import events, kernels, metrics, trace  # noqa: F401
+from repro.obs.events import format_prefix_summary, format_stall  # noqa: F401
+from repro.obs.kernels import InstrumentedFn, KernelProfiler, instrument  # noqa: F401
+from repro.obs.metrics import NULL_METRICS, MetricsRegistry  # noqa: F401
+from repro.obs.trace import NULL_TRACER, Tracer  # noqa: F401
+
+
+@dataclasses.dataclass
+class Obs:
+    """The bundle an engine carries.  ``kernels=None`` → no kernel timing
+    (and no per-call fences)."""
+
+    tracer: object = NULL_TRACER
+    metrics: object = NULL_METRICS
+    kernels: KernelProfiler | None = None
+
+    @property
+    def active(self) -> bool:
+        return (self.tracer.enabled or self.metrics.enabled
+                or self.kernels is not None)
+
+
+NULL_OBS = Obs()
+
+
+def make(clock=time.perf_counter, *, tracing: bool = True,
+         metrics_on: bool = True, kernel_timing: bool = True) -> Obs:
+    """A live bundle; all three pieces share ``clock``."""
+    return Obs(
+        tracer=Tracer(clock=clock) if tracing else NULL_TRACER,
+        metrics=MetricsRegistry() if metrics_on else NULL_METRICS,
+        kernels=KernelProfiler(clock=clock) if kernel_timing else None,
+    )
+
+
+def metrics_blob(obs: Obs) -> dict:
+    """The ``--metrics-json`` payload: registry snapshot + the dispatch
+    decision log (retained entries AND the trim-loss counter — the log
+    drops its oldest half at capacity, see ``dispatch.decisions_dropped``)
+    + the measured_vs_predicted kernel attribution table."""
+    reg = obs.metrics
+    if reg.enabled:
+        c = reg.counter("dispatch_decisions_dropped")
+        c.inc(dispatch.decisions_dropped() - c.value)
+        reg.gauge("dispatch_decisions_retained").set(len(dispatch.decisions()))
+    return {
+        "metrics": reg.snapshot() if reg.enabled else
+            {"counters": {}, "gauges": {}, "histograms": {}},
+        "dispatch": {
+            "decisions_dropped": dispatch.decisions_dropped(),
+            "decisions": [dataclasses.asdict(d) for d in dispatch.decisions()],
+        },
+        "measured_vs_predicted": obs.kernels.report() if obs.kernels else
+            {"rows": [], "unattributed_s": 0.0,
+             "note": "kernel profiling disabled"},
+    }

@@ -1,0 +1,56 @@
+"""Structured-event payloads and their canonical text renderings.
+
+The engine emits *structured* diagnostics (dicts on the tracer event
+stream); the strings humans read are rendered from those payloads by the
+formatters here — the ONE home of the wording, so the printed output stays
+identical whether it comes from the launcher, a test, or a log scraper
+replaying a trace file.  No heavy imports: this module must stay loadable
+from docs tooling, like ``repro.serve.metrics``.
+"""
+
+from __future__ import annotations
+
+
+def format_stall(diag: dict) -> str:
+    """Render the engine's stall diagnosis (the RuntimeError text).
+
+    ``diag`` is the structured payload from
+    ``ServeEngine._stall_diagnosis()`` — also emitted as a ``stall`` event
+    on the tracer before the engine raises."""
+    lines = []
+    for s in diag["slots"]:
+        if "blocks_needed" in s:
+            lines.append(
+                f"slot {s['slot']} (rid {s['rid']}, prio {s['priority']}, "
+                f"{s['phase']} at pos {s['cursor']}/{s['n_base']}) needs "
+                f"{s['blocks_needed']} more KV block(s)")
+        else:
+            lines.append(f"slot {s['slot']} (rid {s['rid']}, {s['phase']} at "
+                         f"pos {s['cursor']}/{s['n_base']})")
+    p = diag["pool"]
+    if p["kind"] == "paged":
+        pool = (f"{p['free']} of {p['total']} KV blocks free"
+                f", {p['shared']} refcounted/shared")
+        if "prefix_cached" in p:
+            pool += (f", {p['prefix_cached']} prefix-cached "
+                     f"({p['prefix_evictable']} evictable)")
+    else:
+        pool = "dense KV cache"
+    blocked = "; ".join(lines) if lines else "no occupied slots"
+    return (f"serving stalled for {diag['stall_ticks']} ticks: no slot can "
+            f"make progress and nothing is evictable "
+            f"(preemption={diag['preemption']}). Blocked: {blocked}. "
+            f"Pool: {pool}; queued requests: {diag['queued']}. "
+            "Raise --kv-blocks, lower concurrency, or enable preemption.")
+
+
+def format_prefix_summary(s: dict) -> str:
+    """Render the launcher's prefix-cache telemetry line from a
+    ``metrics_summary()`` dict (leading indent included, as printed)."""
+    return (f"  prefix hits = {s['prefix_hit_requests']}/{s['requests']} "
+            f"requests, hit rate = {s['prefix_hit_rate']:.2f}, "
+            f"prefill tokens skipped = {s['prefill_tokens_skipped']}, "
+            f"blocks reused = {s['blocks_reused']}"
+            + (f", cached = {s['prefix_cached_blocks']} "
+               f"({s['prefix_evictable_blocks']} evictable)"
+               if "prefix_cached_blocks" in s else ""))

@@ -1,0 +1,189 @@
+"""Jit-aware kernel timing + measured-vs-predicted attribution (DESIGN.md §9).
+
+mpGEMM dispatch happens at TRACE time: inside a jitted engine step there is
+no per-call host clock to read, and a fence inside the trace would change
+the program.  So attribution works at the jit boundary instead:
+
+* every jitted engine callable is wrapped in an :class:`InstrumentedFn`.
+  The wrapper detects a jit trace by the dispatch decision-log delta around
+  the call (decisions are recorded at trace time only) and captures the
+  traced call's *keyset* — a multiset of
+  ``(kernel, fmt, M, K, N-bucket)`` dispatch keys — into a module-level
+  registry keyed by (underlying callable, argument shape signature).  This
+  capture runs even with profiling OFF (two integer reads per call) so a
+  later profiled engine can attribute executions of executables compiled
+  before profiling was enabled;
+* with a :class:`KernelProfiler` attached, the wrapper fences the call
+  (``jax.block_until_ready``) and books the wall time: a call that traced
+  is a COMPILE call (compile+first-execute wall, attributed separately);
+  a warm call is an EXECUTE call whose wall time is split across the
+  keyset's keys proportionally to the dispatch cost model's per-call hint
+  — measured time per key is therefore a *cost-share attribution of the
+  fenced step wall*, not an isolated kernel timer (the honest best
+  available under jit; see the DESIGN.md §9 caveats);
+* :meth:`KernelProfiler.report` emits the ``measured_vs_predicted`` table:
+  per key — calls, compile vs execute seconds, measured µs/call and GB/s
+  next to the cost model's predicted µs, HBM bytes and MXU inflation.
+  This is the seed data for the ROADMAP's measured-autotune item.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+
+import jax
+
+from repro.core import dispatch
+
+# (underlying callable, arg shape signature) -> Counter of dispatch keys
+# captured from that call's jit trace.  Module-level on purpose: jitted
+# callables are shared per (cfg, paged) across engines, so their keysets
+# must be too.
+_KEYSETS: dict = {}
+
+
+def _sig(args) -> tuple:
+    """Shape/dtype signature of a call's array leaves — what jit keys on."""
+    out = []
+    for leaf in jax.tree_util.tree_leaves(args):
+        shape = getattr(leaf, "shape", None)
+        if shape is not None:
+            out.append((tuple(shape), str(getattr(leaf, "dtype", ""))))
+        else:
+            out.append(repr(leaf))
+    return tuple(out)
+
+
+def decision_key(d) -> tuple:
+    """A dispatch Decision folded to its attribution key."""
+    return (d.kernel, d.fmt, d.m, d.k, dispatch.n_bucket(d.n))
+
+
+def _keyset(decisions) -> collections.Counter:
+    return collections.Counter(decision_key(d) for d in decisions)
+
+
+def predicted_us(key: tuple) -> float:
+    kernel, fmt, m, k, nb = key
+    return dispatch.REGISTRY[kernel].cost(fmt, nb, k, m)
+
+
+def predicted_hbm_bytes(key: tuple) -> float:
+    kernel, fmt, m, k, nb = key
+    return dispatch.REGISTRY[kernel].hbm_bytes(fmt, nb, k, m)
+
+
+@dataclasses.dataclass
+class KernelStat:
+    """Accumulated attribution for one (kernel, fmt, M, K, N-bucket) key."""
+
+    calls: int = 0            # executed mpGEMM call sites × warm executions
+    compile_calls: int = 0    # call sites seen in compile (tracing) calls
+    compile_s: float = 0.0    # attributed compile+first-execute wall
+    execute_s: float = 0.0    # attributed steady-state wall
+
+
+class KernelProfiler:
+    """Accumulates per-key attribution; injectable clock for determinism."""
+
+    def __init__(self, clock=time.perf_counter):
+        self.clock = clock
+        self.stats: dict[tuple, KernelStat] = {}
+        self.unattributed_s = 0.0  # fenced wall with no known keyset
+
+    def record(self, keys: collections.Counter | None, dt: float,
+               *, compiled: bool) -> None:
+        if not keys:
+            self.unattributed_s += dt
+            return
+        total = sum(predicted_us(k) * c for k, c in keys.items()) or 1.0
+        for key, cnt in keys.items():
+            share = dt * (predicted_us(key) * cnt / total)
+            st = self.stats.setdefault(key, KernelStat())
+            if compiled:
+                st.compile_calls += cnt
+                st.compile_s += share
+            else:
+                st.calls += cnt
+                st.execute_s += share
+
+    def report(self) -> dict:
+        """The ``measured_vs_predicted`` table (sorted by attributed wall)."""
+        rows = []
+        for key, st in self.stats.items():
+            kernel, fmt, m, k, nb = key
+            spec = dispatch.REGISTRY[kernel]
+            pred_us = predicted_us(key)
+            pred_bytes = predicted_hbm_bytes(key)
+            meas_us = (st.execute_s / st.calls * 1e6) if st.calls else None
+            infl = spec.mxu_inflation
+            if infl is None:
+                from repro.core import formats as fmtreg
+                infl = fmtreg.get(fmt).mxu_inflation
+            rows.append({
+                "kernel": kernel, "fmt": fmt, "M": m, "K": k, "N_bucket": nb,
+                "calls": st.calls, "compile_calls": st.compile_calls,
+                "compile_s": round(st.compile_s, 6),
+                "execute_s": round(st.execute_s, 6),
+                "measured_us_per_call":
+                    round(meas_us, 3) if meas_us is not None else None,
+                "predicted_us_per_call": round(pred_us, 3),
+                "measured_over_predicted":
+                    round(meas_us / pred_us, 3) if meas_us else None,
+                "predicted_hbm_bytes_per_call": round(pred_bytes, 1),
+                "measured_gb_s":
+                    round(pred_bytes * st.calls / st.execute_s / 1e9, 3)
+                    if st.execute_s else None,
+                "predicted_mxu_inflation": round(float(infl), 3),
+            })
+        rows.sort(key=lambda r: -(r["execute_s"] + r["compile_s"]))
+        return {
+            "rows": rows,
+            "unattributed_s": round(self.unattributed_s, 6),
+            "note": ("execute time per key is a cost-share attribution of "
+                     "the fenced jitted-step wall (DESIGN.md §9); compile "
+                     "rows book the trace+first-execute wall separately"),
+        }
+
+
+class InstrumentedFn:
+    """The jit-boundary wrapper (see module docstring).  ``profiler=None``
+    is the capture-only mode the engine uses when observability is off."""
+
+    __slots__ = ("fn", "label", "profiler")
+
+    def __init__(self, fn, label: str, profiler: KernelProfiler | None = None):
+        self.fn = fn
+        self.label = label
+        self.profiler = profiler
+
+    def __call__(self, *args):
+        prof = self.profiler
+        mark = dispatch.decision_count()
+        if prof is None:
+            out = self.fn(*args)
+            if dispatch.decision_count() != mark:  # this call jit-traced
+                _KEYSETS[(self.fn, _sig(args))] = _keyset(
+                    dispatch.decisions_since(mark))
+            return out
+        t0 = prof.clock()
+        out = self.fn(*args)
+        jax.block_until_ready(out)
+        dt = prof.clock() - t0
+        sig = _sig(args)
+        if dispatch.decision_count() != mark:
+            keys = _keyset(dispatch.decisions_since(mark))
+            _KEYSETS[(self.fn, sig)] = keys
+            prof.record(keys, dt, compiled=True)
+        else:
+            prof.record(_KEYSETS.get((self.fn, sig)), dt, compiled=False)
+        return out
+
+
+def instrument(fn, label: str,
+               profiler: KernelProfiler | None = None) -> InstrumentedFn:
+    if isinstance(fn, InstrumentedFn):  # re-wrap: keep the shared keyset id
+        fn = fn.fn
+    return InstrumentedFn(fn, label, profiler)

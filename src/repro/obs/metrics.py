@@ -1,0 +1,190 @@
+"""Counters / gauges / histograms registry (DESIGN.md §9).
+
+A tiny in-process metrics registry in the Prometheus data model: named
+series with optional labels, three instrument kinds, a structured
+``snapshot()`` (what ``--metrics-json`` persists) and a Prometheus
+text-exposition ``to_prometheus()`` snapshot.  No numpy / jax imports —
+importable from anywhere, like ``repro.serve.metrics``.
+
+:data:`NULL_METRICS` is the disabled registry: every instrument it hands
+out is a shared no-op, so unconditional instrumentation costs nothing
+(mirrors ``trace.NULL_TRACER``).
+"""
+
+from __future__ import annotations
+
+import threading
+
+# histogram default: log2-spaced second buckets, µs-ish to minutes
+DEFAULT_BUCKETS = (1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 0.1, 1.0, 10.0, 60.0)
+
+
+class Counter:
+    """Monotone counter."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def inc(self, v: float = 1.0) -> None:
+        if v < 0:
+            raise ValueError(f"counter increment must be >= 0, got {v}")
+        self.value += v
+
+
+class Gauge:
+    """Point-in-time value."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+    def inc(self, v: float = 1.0) -> None:
+        self.value += v
+
+
+class Histogram:
+    """Cumulative-bucket histogram (Prometheus semantics: each bucket
+    counts observations ≤ its upper bound; +Inf is implicit via count)."""
+
+    __slots__ = ("bounds", "bucket_counts", "count", "sum")
+
+    def __init__(self, bounds=DEFAULT_BUCKETS):
+        self.bounds = tuple(bounds)
+        self.bucket_counts = [0] * len(self.bounds)
+        self.count = 0
+        self.sum = 0.0
+
+    def observe(self, v: float) -> None:
+        self.count += 1
+        self.sum += v
+        for i, b in enumerate(self.bounds):
+            if v <= b:
+                self.bucket_counts[i] += 1
+
+    def cumulative(self) -> list:
+        """[(upper_bound, cumulative_count)] incl. the +Inf bucket."""
+        return [*zip(self.bounds, self.bucket_counts), ("+Inf", self.count)]
+
+
+class _NullInstrument:
+    __slots__ = ()
+    value = 0.0
+
+    def inc(self, v: float = 1.0) -> None:
+        pass
+
+    def set(self, v: float) -> None:
+        pass
+
+    def observe(self, v: float) -> None:
+        pass
+
+
+_NULL_INSTRUMENT = _NullInstrument()
+
+
+class NullMetrics:
+    enabled = False
+
+    def counter(self, name: str, **labels):
+        return _NULL_INSTRUMENT
+
+    def gauge(self, name: str, **labels):
+        return _NULL_INSTRUMENT
+
+    def histogram(self, name: str, buckets=None, **labels):
+        return _NULL_INSTRUMENT
+
+
+NULL_METRICS = NullMetrics()
+
+
+def series_key(name: str, labels: dict) -> str:
+    """Prometheus-style series identity: ``name{a="1",b="x"}``."""
+    if not labels:
+        return name
+    inner = ",".join(f'{k}="{labels[k]}"' for k in sorted(labels))
+    return f"{name}{{{inner}}}"
+
+
+class MetricsRegistry:
+    """Get-or-create instrument registry; thread-safe."""
+
+    enabled = True
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        # kind -> series key -> instrument; name kinds are exclusive
+        self._series: dict[str, dict] = {"counter": {}, "gauge": {},
+                                         "histogram": {}}
+        self._kinds: dict[str, str] = {}  # metric name -> kind
+
+    def _get(self, kind: str, name: str, labels: dict, make):
+        key = series_key(name, labels)
+        with self._lock:
+            prior = self._kinds.setdefault(name, kind)
+            if prior != kind:
+                raise ValueError(
+                    f"metric {name!r} already registered as a {prior}")
+            table = self._series[kind]
+            inst = table.get(key)
+            if inst is None:
+                inst = table[key] = make()
+            return inst
+
+    def counter(self, name: str, **labels) -> Counter:
+        return self._get("counter", name, labels, Counter)
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        return self._get("gauge", name, labels, Gauge)
+
+    def histogram(self, name: str, buckets=None, **labels) -> Histogram:
+        return self._get("histogram", name, labels,
+                         lambda: Histogram(buckets or DEFAULT_BUCKETS))
+
+    # -- export -------------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        """Structured dump: the ``--metrics-json`` payload."""
+        with self._lock:
+            return {
+                "counters": {k: c.value
+                             for k, c in self._series["counter"].items()},
+                "gauges": {k: g.value
+                           for k, g in self._series["gauge"].items()},
+                "histograms": {
+                    k: {"count": h.count, "sum": h.sum,
+                        "buckets": [[str(b), n] for b, n in h.cumulative()]}
+                    for k, h in self._series["histogram"].items()},
+            }
+
+    def to_prometheus(self) -> str:
+        """Prometheus text exposition format, one TYPE line per metric."""
+        lines: list = []
+        with self._lock:
+            for kind in ("counter", "gauge"):
+                typed: set = set()
+                for key, inst in sorted(self._series[kind].items()):
+                    name = key.split("{", 1)[0]
+                    if name not in typed:
+                        typed.add(name)
+                        lines.append(f"# TYPE {name} {kind}")
+                    lines.append(f"{key} {inst.value:g}")
+            for key, h in sorted(self._series["histogram"].items()):
+                name, _, rest = key.partition("{")
+                labels = rest[:-1] if rest else ""
+                lines.append(f"# TYPE {name} histogram")
+                for b, n in h.cumulative():
+                    le = f'le="{b}"'
+                    inner = f"{labels},{le}" if labels else le
+                    lines.append(f"{name}_bucket{{{inner}}} {n}")
+                sfx = f"{{{labels}}}" if labels else ""
+                lines.append(f"{name}_sum{sfx} {h.sum:g}")
+                lines.append(f"{name}_count{sfx} {h.count}")
+        return "\n".join(lines) + "\n"

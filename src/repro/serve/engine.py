@@ -31,6 +31,8 @@ import numpy as np
 from repro.core import dispatch
 from repro.core.dispatch import KernelPlan
 from repro.models import lm
+from repro.obs import NULL_OBS, Obs, format_stall
+from repro.obs import kernels as obs_kernels
 from repro.models.config import ModelConfig
 from repro.serve import kvcache, prefill
 from repro.serve import qos as qos_mod
@@ -95,10 +97,14 @@ def _jitted_batched_chunk(cfg: ModelConfig, paged: bool):
 class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, serve: ServeConfig | None = None,
                  *, pack: bool = True, seed: int = 0,
-                 plan: KernelPlan | None = None, clock=time.perf_counter):
+                 plan: KernelPlan | None = None, clock=time.perf_counter,
+                 obs: Obs | None = None):
         if plan is not None:
             cfg = cfg.with_plan(plan)
         self.cfg = cfg
+        self.obs = obs or NULL_OBS
+        self._tracer = self.obs.tracer
+        self._tick = 0
         self.scfg = scfg = serve or ServeConfig()
         self.max_seq = scfg.max_seq   # legacy attribute
         self.params = lm.pack(params, cfg) if pack and cfg.quant.mode == "quant" else params
@@ -161,10 +167,19 @@ class ServeEngine:
         self._prefix_active = self.prefix is not None
 
         self._decision_mark = dispatch.decision_count()
-        self._step_fn = _jitted_step(cfg, scfg.paged)
-        self._chunk_fn = _jitted_chunk(cfg, scfg.paged) if self._chunked else None
-        self._bchunk_fn = (_jitted_batched_chunk(cfg, scfg.paged)
-                           if self._batched_prefill else None)
+        # every jitted callable goes through the obs jit-boundary wrapper:
+        # capture-only (two integer reads per call) when kernel profiling is
+        # off, fenced + attributed when a KernelProfiler is attached — see
+        # repro.obs.kernels for why attribution must live at this boundary
+        prof = self.obs.kernels
+        self._step_fn = obs_kernels.instrument(
+            _jitted_step(cfg, scfg.paged), "decode_step", prof)
+        self._chunk_fn = (obs_kernels.instrument(
+            _jitted_chunk(cfg, scfg.paged), "prefill_chunk", prof)
+            if self._chunked else None)
+        self._bchunk_fn = (obs_kernels.instrument(
+            _jitted_batched_chunk(cfg, scfg.paged), "prefill_batched", prof)
+            if self._batched_prefill else None)
         self._sample_fn = _SAMPLE_FN
         if self._batched_prefill:
             # the batched tick always flattens to exactly N = S·C (padding
@@ -190,6 +205,14 @@ class ServeEngine:
         re-dispatched; the cached executable embeds the same routing).
         """
         return dispatch.decisions_since(self._decision_mark)
+
+    def measured_vs_predicted(self) -> dict:
+        """Per-kernel attribution vs the dispatch cost model (DESIGN.md §9);
+        needs an Obs bundle with a KernelProfiler attached."""
+        if self.obs.kernels is None:
+            raise ValueError("no KernelProfiler attached; build the engine "
+                             "with obs=repro.obs.make()")
+        return self.obs.kernels.report()
 
     def metrics_summary(self) -> dict:
         out = self.stats.summary()
@@ -228,66 +251,92 @@ class ServeEngine:
     def step(self) -> list[Request]:
         """One scheduler tick: admit → prefill chunks → batched decode.
         Returns requests that finished this tick."""
+        tr = self._tracer
         now = self._clock()
         finished: list[Request] = []
-        progress = self._admit(now)
-        # decode candidacy snapshots BEFORE chunking: a slot that finishes its
-        # prompt this tick emits its first token from chunk logits and joins
-        # the decode tick on the NEXT step (chunks interleave, not stack).
-        decode_idx = [i for i, sl in enumerate(self.slots)
-                      if sl is not None
-                      and (not self._chunked or sl.cursor >= sl.n_base)]
-        if self._chunked:
-            if self._batched_prefill:
-                progress |= self._prefill_tick_batched(now, finished)
-            else:
-                progress |= self._prefill_tick(now, finished)
-        progress |= self._decode_tick_host(decode_idx, now, finished)
+        with tr.span("tick", tick=self._tick):
+            with tr.span("admit") as sp:
+                progress = self._admit(now)
+                sp.set(queued=len(self.sched))
+            # decode candidacy snapshots BEFORE chunking: a slot that
+            # finishes its prompt this tick emits its first token from chunk
+            # logits and joins the decode tick on the NEXT step (chunks
+            # interleave, not stack).
+            decode_idx = [i for i, sl in enumerate(self.slots)
+                          if sl is not None
+                          and (not self._chunked or sl.cursor >= sl.n_base)]
+            if self._chunked:
+                if self._batched_prefill:
+                    with tr.span("prefill_batched"):
+                        progress |= self._prefill_tick_batched(now, finished)
+                else:
+                    with tr.span("prefill"):
+                        progress |= self._prefill_tick(now, finished)
+            with tr.span("decode", slots=len(decode_idx)):
+                progress |= self._decode_tick_host(decode_idx, now, finished)
+            if self.obs.metrics.enabled:
+                self._sample_metrics(now)
+        self._tick += 1
         if progress or finished:
             self._stall_ticks = 0
         else:
             self._stall_ticks += 1
             if self._stall_ticks > 3:
-                raise RuntimeError(self._stall_message())
+                diag = self._stall_diagnosis()
+                tr.event("stall", **diag)
+                raise RuntimeError(format_stall(diag))
         return finished
 
-    def _stall_message(self) -> str:
-        """Actionable stall diagnosis: which slots are blocked, how many KV
-        blocks each still needs, and what the pool has left."""
-        lines = []
+    def _sample_metrics(self, tick_start: float) -> None:
+        """Per-tick gauge samples + counters (metrics registry attached)."""
+        m = self.obs.metrics
+        m.counter("serve_ticks_total").inc()
+        m.gauge("serve_queue_depth").set(len(self.sched))
+        m.gauge("serve_slots_occupied").set(
+            sum(s is not None for s in self.slots))
+        m.histogram("serve_tick_duration_s").observe(
+            self._clock() - tick_start)
+        if self.pcfg is not None:
+            m.gauge("serve_kv_blocks_free").set(self.allocator.free_count)
+            m.gauge("serve_kv_blocks_shared").set(
+                self.allocator.shared_count())
+        if self.prefix is not None:
+            m.gauge("serve_prefix_cached_blocks").set(self.prefix.size)
+            m.gauge("serve_prefix_evictable_blocks").set(
+                self.prefix.evictable_count())
+
+    def _stall_diagnosis(self) -> dict:
+        """Structured stall diagnosis: which slots are blocked, how many KV
+        blocks each still needs, and what the pool has left.  Emitted as a
+        ``stall`` tracer event; rendered by ``repro.obs.format_stall``."""
+        slots = []
         for i, sl in enumerate(self.slots):
             if sl is None:
                 continue
             prefilling = sl.cursor < sl.n_base
             target = (min(sl.n_base, sl.cursor + self.scfg.prefill_chunk)
                       if prefilling and self._chunked else sl.cursor + 1)
-            phase = "prefill" if prefilling else "decode"
+            entry = {"slot": i, "rid": sl.sub.req.rid,
+                     "priority": sl.sub.priority,
+                     "phase": "prefill" if prefilling else "decode",
+                     "cursor": sl.cursor, "n_base": sl.n_base}
             if self.pcfg is not None:
-                rid = sl.sub.req.rid
                 need = (self.pcfg.blocks_for(target)
-                        - len(self.allocator.owned(rid)))
-                lines.append(
-                    f"slot {i} (rid {rid}, prio {sl.sub.priority}, {phase} "
-                    f"at pos {sl.cursor}/{sl.n_base}) needs {max(need, 0)} "
-                    f"more KV block(s)")
-            else:
-                lines.append(f"slot {i} (rid {sl.sub.req.rid}, {phase} at "
-                             f"pos {sl.cursor}/{sl.n_base})")
+                        - len(self.allocator.owned(sl.sub.req.rid)))
+                entry["blocks_needed"] = max(need, 0)
+            slots.append(entry)
         if self.pcfg is not None:
-            pool = (f"{self.allocator.free_count} of {self.pcfg.num_blocks} "
-                    "KV blocks free"
-                    f", {self.allocator.shared_count()} refcounted/shared")
+            pool = {"kind": "paged", "free": self.allocator.free_count,
+                    "total": self.pcfg.num_blocks,
+                    "shared": self.allocator.shared_count()}
             if self.prefix is not None:
-                pool += (f", {self.prefix.size} prefix-cached "
-                         f"({self.prefix.evictable_count()} evictable)")
+                pool["prefix_cached"] = self.prefix.size
+                pool["prefix_evictable"] = self.prefix.evictable_count()
         else:
-            pool = "dense KV cache"
-        blocked = "; ".join(lines) if lines else "no occupied slots"
-        return (f"serving stalled for {self._stall_ticks} ticks: no slot can "
-                f"make progress and nothing is evictable "
-                f"(preemption={self.scfg.preemption}). Blocked: {blocked}. "
-                f"Pool: {pool}; queued requests: {len(self.sched)}. "
-                "Raise --kv-blocks, lower concurrency, or enable preemption.")
+            pool = {"kind": "dense"}
+        return {"stall_ticks": self._stall_ticks,
+                "preemption": self.scfg.preemption,
+                "queued": len(self.sched), "slots": slots, "pool": pool}
 
     def run(self) -> list[Request]:
         done: list[Request] = []
@@ -391,6 +440,12 @@ class ServeEngine:
             self._pending_scrub.extend(got)
         best.metrics.prefix_hit_tokens = cached
         best.metrics.prefix_hit_blocks = k_full + (1 if m_part else 0)
+        if cached:
+            self._tracer.event("prefix_hit", rid=rid, tokens=cached,
+                               blocks=best.metrics.prefix_hit_blocks,
+                               cow=bool(m_part))
+            self.obs.metrics.counter("serve_prefix_hit_tokens_total").inc(
+                cached)
         return cached
 
     def _evict(self, idx: int, now) -> None:
@@ -405,6 +460,10 @@ class ServeEngine:
         sub.metrics.n_preemptions += 1
         self.sched.requeue(sub)
         self.slots[idx] = None
+        self._tracer.event("preempt", slot=idx, rid=sub.req.rid,
+                           priority=sub.priority,
+                           resumed_len=len(sub.resume_tokens))
+        self.obs.metrics.counter("serve_preemptions_total").inc()
 
     def preempt_slot(self, idx: int) -> None:
         """Explicit eviction hook (tests / operator tooling)."""
@@ -476,11 +535,12 @@ class ServeEngine:
             sl.sub.metrics.n_prefill_chunks += 1
             progress = True
             if sl.cursor >= sl.n_base:  # prompt done: first token from chunk
-                self.key, sk = jax.random.split(self.key)
-                tok = self._sample_fn(
-                    logits[:, -1, :],
-                    jnp.asarray([sl.sub.req.temperature], jnp.float32), sk)
-                self._emit(i, sl, int(tok[0]), now, finished)
+                with self._tracer.span("sample", rows=1):
+                    self.key, sk = jax.random.split(self.key)
+                    tok = self._sample_fn(
+                        logits[:, -1, :],
+                        jnp.asarray([sl.sub.req.temperature], jnp.float32), sk)
+                    self._emit(i, sl, int(tok[0]), now, finished)
         return progress
 
     def _prefill_tick_batched(self, now, finished) -> bool:
@@ -534,14 +594,15 @@ class ServeEngine:
             if sl.cursor >= sl.n_base:  # prompt done: first token from chunk
                 fin.append((r, i, sl))
         if fin:
-            self.key, sk = jax.random.split(self.key)
-            sel = jnp.asarray([r for r, _, _ in fin], jnp.int32)
-            temps = jnp.asarray([sl.sub.req.temperature for _, _, sl in fin],
-                                jnp.float32)
-            toks_out = np.asarray(            # ONE host sync for every row
-                self._sample_fn(logits[sel, -1, :], temps, sk))
-            for j, (r, i, sl) in enumerate(fin):
-                self._emit(i, sl, int(toks_out[j]), now, finished)
+            with self._tracer.span("sample", rows=len(fin)):
+                self.key, sk = jax.random.split(self.key)
+                sel = jnp.asarray([r for r, _, _ in fin], jnp.int32)
+                temps = jnp.asarray(
+                    [sl.sub.req.temperature for _, _, sl in fin], jnp.float32)
+                toks_out = np.asarray(        # ONE host sync for every row
+                    self._sample_fn(logits[sel, -1, :], temps, sk))
+                for j, (r, i, sl) in enumerate(fin):
+                    self._emit(i, sl, int(toks_out[j]), now, finished)
         return True
 
     def _decode_tick_host(self, decode_idx: list, now, finished) -> bool:
@@ -581,14 +642,15 @@ class ServeEngine:
         temps = np.zeros((b,), np.float32)
         for i, sl in staged:
             temps[i] = sl.sub.req.temperature
-        self.key, sk = jax.random.split(self.key)
-        sampled = np.asarray(self._sample_fn(
-            logits[:, 0, :], jnp.asarray(temps), sk))     # ONE host sync/tick
-        for i, sl in staged:
-            sl.cursor += 1
-            if sl.cursor < sl.n_base:
-                continue  # token-mode prefill still consuming the prompt
-            self._emit(i, sl, int(sampled[i]), now, finished)
+        with self._tracer.span("sample", rows=len(staged)):
+            self.key, sk = jax.random.split(self.key)
+            sampled = np.asarray(self._sample_fn(
+                logits[:, 0, :], jnp.asarray(temps), sk))  # ONE host sync/tick
+            for i, sl in staged:
+                sl.cursor += 1
+                if sl.cursor < sl.n_base:
+                    continue  # token-mode prefill still consuming the prompt
+                self._emit(i, sl, int(sampled[i]), now, finished)
         return True
 
     def _emit(self, idx: int, sl: _Slot, tok: int, now, finished) -> None:
@@ -620,6 +682,9 @@ class ServeEngine:
             self.stats.add(m)
             self.slots[idx] = None
             finished.append(req)
+            reg = self.obs.metrics
+            reg.counter("serve_requests_finished_total").inc()
+            reg.counter("serve_tokens_generated_total").inc(m.n_generated)
 
 
 def _sample_batched(logits, temps, key):

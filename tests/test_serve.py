@@ -197,7 +197,10 @@ def test_prefill_budget_zero_keeps_sequential_path(model):
                 block_size=8, prefill_chunk=4)          # budget defaults to 0
     assert se._bchunk_fn is None
     from repro.serve.engine import _jitted_chunk
-    assert se._chunk_fn is _jitted_chunk(se.cfg, True), \
+    # the obs jit-boundary wrapper (repro.obs.kernels) is identity-
+    # transparent: underneath it must still be the SHARED lru-cached
+    # per-(cfg, paged) callable, not a private re-jit
+    assert se._chunk_fn.fn is _jitted_chunk(se.cfg, True), \
         "budget=0 must reuse the shared PR-2 per-slot chunk callable"
     for i, p in enumerate(_prompts(cfg, 3)):
         se.submit(Request(rid=i, prompt=p, max_new_tokens=3))
