@@ -4,15 +4,23 @@ Two sweeps share one artifact (``BENCH_serve.json``):
 
 * the serving MATRIX — dense vs paged KV × token-by-token vs chunked vs
   BATCHED-concurrent prefill (``prefill_budget`` = slots · chunk: one
-  [S, C] call per tick at mpGEMM N = S·C) — at two offered loads;
+  [S, C] call per tick at mpGEMM N = S·C) — at two offered loads, plus a
+  SPECULATIVE cell per KV layout (self-draft, ``speculate_k`` tokens per
+  tick; verify rides the GEMM regime at N = slots·(k+1), DESIGN.md §10);
 * BURSTY WORKLOADS at production shape — hundreds of requests arriving in
   bursts against 8 slots, in a shared-prefix mix (few-shot templates:
   4 templates × ~150 requests) and a long-context mix (half template +
   long tail, half unique long prompts), each run with the prefix cache
   OFF and ON.  The ON cell must decode bit-identical tokens (act=token is
   composition-invariant) while skipping the shared prefill — the headline
-  ≥2× TTFT win with a nonzero prefix-hit rate in telemetry.  The workload
-  generator is deterministic under ``--seed``.
+  ≥2× TTFT win with a nonzero prefix-hit rate in telemetry.  A third
+  DECODE-HEAVY mix (short prompts, long generations) runs speculation OFF
+  and ON with the model-free prompt-lookup draft (``LookupDraft``:
+  proposals off each slot's own history, so the [B, k+1] verify is the
+  whole speculative cost): the ON cell must commit > 1 token per verify
+  step, decode bit-identical tokens (greedy acceptance is exact for ANY
+  draft), and show the decode tok/s win the GEMV→GEMM batching predicts.
+  The workload generator is deterministic under ``--seed``.
 
 Per cell: wall throughput (generated tok/s), TTFT mean / p50 / p95
 (submit → first generated token), queue wait p95, preemptions, and the
@@ -26,10 +34,12 @@ cells.
 CI smoke: ``python -m benchmarks.bench_serve --smoke`` runs the tiny
 dense/paged × sequential/batched sweep PLUS a shared-prefix cell
 (6 shared-template requests over 3 slots — the queued second wave hits
-the index) into the gitignored ``BENCH_serve.smoke.new.json`` and exits
-non-zero if the cell schema drifted, a baseline cell dropped out, tokens
-stopped matching the dense reference, the prefix cell stopped hitting,
-its TTFT win disappeared reproducibly, or any cell's wall time regressed
+the index) PLUS a speculative cell (self-draft, k=2) into the gitignored
+``BENCH_serve.smoke.new.json`` and exits non-zero if the cell schema
+drifted, a baseline cell dropped out, tokens stopped matching the dense
+reference, the prefix cell stopped hitting, its TTFT win disappeared
+reproducibly, the speculative cell stopped committing > 1 token per
+verify step, or any cell's wall time regressed
 reproducibly > 2× against the committed ``BENCH_serve.smoke.json``
 (sweep-share-normalized, confirmed by one re-sweep; refresh the baseline
 with ``--smoke --update-baseline`` on an idle machine).
@@ -48,7 +58,7 @@ from repro import configs
 from repro import obs as obs_mod
 from repro.core.bitlinear import QuantConfig
 from repro.models import lm
-from repro.serve import Request, ServeConfig, ServeEngine
+from repro.serve import LookupDraft, Request, ServeConfig, ServeEngine
 
 ARTIFACT = "BENCH_serve.json"
 SMOKE_BASELINE = "BENCH_serve.smoke.json"
@@ -60,13 +70,16 @@ MAX_SEQ = 128
 CHUNK = 32
 BLOCK = 16
 BUDGET = SLOTS * CHUNK   # batched cells: every prefilling slot packs a row
-MODES = [  # (label, paged, prefill_chunk, prefill_budget, prefix_cache)
-    ("dense_token", False, 1, 0, False),
-    ("dense_chunked", False, CHUNK, 0, False),
-    ("dense_batched", False, CHUNK, BUDGET, False),
-    ("paged_token", True, 1, 0, False),
-    ("paged_chunked", True, CHUNK, 0, False),
-    ("paged_batched", True, CHUNK, BUDGET, False),
+SPEC_K = 3               # spec cells: self-draft, verify at N = SLOTS*(k+1)
+MODES = [  # (label, paged, prefill_chunk, prefill_budget, prefix_cache, spec_k)
+    ("dense_token", False, 1, 0, False, 0),
+    ("dense_chunked", False, CHUNK, 0, False, 0),
+    ("dense_batched", False, CHUNK, BUDGET, False, 0),
+    ("dense_spec", False, CHUNK, 0, False, SPEC_K),
+    ("paged_token", True, 1, 0, False, 0),
+    ("paged_chunked", True, CHUNK, 0, False, 0),
+    ("paged_batched", True, CHUNK, BUDGET, False, 0),
+    ("paged_spec", True, CHUNK, 0, False, SPEC_K),
 ]
 LOADS = [3, 6]           # offered requests (≤ slots: unqueued; > slots: queued)
 
@@ -79,6 +92,9 @@ WORK_BURST = 16          # requests per arrival burst
 WORK_DRAIN = 4           # engine ticks between bursts (partial drain)
 WORK_MAX_NEW = 4
 WORKLOADS = ("shared_prefix", "longctx_mix")
+WORK_SPEC_K = 8          # decode-heavy bursty cells: spec OFF vs ON
+WORK_SPEC_MAX_NEW = 32   # long generations so decode dominates the wall
+WORK_SPEC_NGRAM = 1      # prompt-lookup draft order for the bursty cell
 
 # smoke gate: dense/paged × sequential/batched at one prompt-heavy load,
 # plus the shared-prefix cell.  Load EXCEEDS the slot count on purpose:
@@ -89,12 +105,15 @@ SMOKE_PROMPT_LEN = 24    # BLOCK-sized shared template + 8 private tokens
 SMOKE_SHARED = BLOCK
 SMOKE_MAX_NEW = 4
 SMOKE_CHUNK = 8
+SMOKE_SPEC_K = 2         # max_new 4 → full self-accept commits 4 in 2 steps
 SMOKE_MODES = [
-    ("dense_chunked", False, SMOKE_CHUNK, 0, False),
-    ("dense_batched", False, SMOKE_CHUNK, SLOTS * SMOKE_CHUNK, False),
-    ("paged_chunked", True, SMOKE_CHUNK, 0, False),
-    ("paged_batched", True, SMOKE_CHUNK, SLOTS * SMOKE_CHUNK, False),
-    ("paged_prefix", True, SMOKE_CHUNK, SLOTS * SMOKE_CHUNK, True),
+    ("dense_chunked", False, SMOKE_CHUNK, 0, False, 0),
+    ("dense_batched", False, SMOKE_CHUNK, SLOTS * SMOKE_CHUNK, False, 0),
+    ("paged_chunked", True, SMOKE_CHUNK, 0, False, 0),
+    ("paged_batched", True, SMOKE_CHUNK, SLOTS * SMOKE_CHUNK, False, 0),
+    ("paged_prefix", True, SMOKE_CHUNK, SLOTS * SMOKE_CHUNK, True, 0),
+    ("paged_spec", True, SMOKE_CHUNK, SLOTS * SMOKE_CHUNK, False,
+     SMOKE_SPEC_K),
 ]
 SMOKE_LOADS = [6]
 REGRESSION_FACTOR = 2.0
@@ -103,7 +122,8 @@ CELL_KEYS = {"mode", "workload", "paged", "prefill_chunk", "prefill_budget",
              "tokens_match_dense", "wall_s", "throughput_tok_s",
              "ttft_mean_s", "ttft_p50_s", "ttft_p95_s", "queue_wait_p95_s",
              "preemptions", "prefix_hit_rate", "prefill_tokens_skipped",
-             "blocks_reused"}
+             "blocks_reused", "speculate_k", "spec_accepted_per_step",
+             "spec_acceptance_rate", "spec_draft", "decode_tok_s"}
 
 
 def _prompts(cfg, n, prompt_len, shared=0, seed=0):
@@ -124,6 +144,9 @@ def bursty_workload(cfg, workload, seed):
     — the prefix cache's best case, where prefill dominates cold TTFT.
     ``longctx_mix``: 64 requests, half template + LONG private tail, half
     fully unique long prompts — partial hits under real KV pressure.
+    ``decode_heavy``: 48 requests with SHORT unique prompts — generation
+    dominates the wall, so the decode path's regime (GEMV at N = B vs the
+    speculative verify's GEMM at N = B·(k+1)) is what the cell measures.
     """
     rng = np.random.default_rng(seed)
     if workload == "shared_prefix":
@@ -144,6 +167,10 @@ def bursty_workload(cfg, workload, seed):
                 out.append(rng.integers(
                     0, cfg.vocab, size=int(rng.integers(128, 177))).tolist())
         return out
+    if workload == "decode_heavy":
+        return [rng.integers(0, cfg.vocab,
+                             size=int(rng.integers(16, 33))).tolist()
+                for _ in range(48)]
     raise ValueError(f"unknown workload {workload!r}")
 
 
@@ -161,15 +188,28 @@ def _metrics_cell(eng, done, wall):
         "prefix_hit_rate": round(s["prefix_hit_rate"], 4),
         "prefill_tokens_skipped": s["prefill_tokens_skipped"],
         "blocks_reused": s["blocks_reused"],
+        # decode_tok_s is the number speculation moves (throughput_tok_s
+        # folds queueing + prefill in); spec_* keys are None when the cell
+        # serves without speculation (speculate_k == 0)
+        "decode_tok_s": (round(s["decode_tok_s_mean"], 2)
+                         if s["decode_tok_s_mean"] is not None else None),
+        "speculate_k": s.get("speculate_k", 0),
+        "spec_accepted_per_step": (
+            round(s["spec_accepted_per_step"], 3)
+            if s.get("spec_accepted_per_step") is not None else None),
+        "spec_acceptance_rate": (
+            round(s["spec_acceptance_rate"], 4)
+            if s.get("spec_acceptance_rate") is not None else None),
+        "spec_draft": s.get("spec_draft"),
     }
 
 
 def _run_cell(params, cfg, paged, chunk, budget, prompts, max_new, *,
-              prefix=False, slots=SLOTS, max_seq=MAX_SEQ):
+              prefix=False, slots=SLOTS, max_seq=MAX_SEQ, speculate=0):
     eng = ServeEngine(params, cfg, ServeConfig(
         batch_slots=slots, max_seq=max_seq, paged=paged,
         block_size=BLOCK, prefill_chunk=chunk, prefill_budget=budget,
-        prefix_cache=prefix))
+        prefix_cache=prefix, speculate_k=speculate))
     for i, p in enumerate(prompts):
         eng.submit(Request(rid=i, prompt=p, max_new_tokens=max_new))
     t0 = time.perf_counter()
@@ -195,19 +235,21 @@ def _attribution_run(params, cfg, prompts, max_new, chunk, budget):
     return eng.measured_vs_predicted()
 
 
-def _run_bursty_cell(params, cfg, prompts, *, prefix):
+def _run_bursty_cell(params, cfg, prompts, *, prefix=False,
+                     max_new=WORK_MAX_NEW, speculate=0, draft=None):
     """Bursty arrivals: WORK_BURST requests per burst, WORK_DRAIN ticks of
     partial drain between bursts, then run to completion."""
     eng = ServeEngine(params, cfg, ServeConfig(
         batch_slots=WORK_SLOTS, max_seq=WORK_MAX_SEQ, paged=True,
         block_size=BLOCK, prefill_chunk=WORK_CHUNK,
-        prefill_budget=WORK_BUDGET, prefix_cache=prefix))
+        prefill_budget=WORK_BUDGET, prefix_cache=prefix,
+        speculate_k=speculate), draft=draft)
     done = []
     t0 = time.perf_counter()
     for b0 in range(0, len(prompts), WORK_BURST):
         for i, p in enumerate(prompts[b0:b0 + WORK_BURST]):
             eng.submit(Request(rid=b0 + i, prompt=p,
-                               max_new_tokens=WORK_MAX_NEW))
+                               max_new_tokens=max_new))
         for _ in range(WORK_DRAIN):
             done.extend(eng.step())
     while eng.sched.pending or any(s is not None for s in eng.slots):
@@ -231,15 +273,15 @@ def run(smoke: bool = False, artifact: str | None = None, seed: int = 0) -> list
     for load in loads:
         prompts = _prompts(cfg, load, prompt_len, shared=shared, seed=seed)
         ref_tokens = None
-        for label, paged, chunk, budget, prefix in modes:
+        for label, paged, chunk, budget, prefix, spec in modes:
             # warm the jit caches AT THE MEASURED LOAD so TTFT measures
             # serving, not tracing — a 1-request warmup misses the shapes
             # only multi-slot runs hit (scrub sizes, queueing), and the
             # leftover compiles land on whichever cell runs them first
             _run_cell(params, cfg, paged, chunk, budget, prompts, max_new,
-                      prefix=prefix)
+                      prefix=prefix, speculate=spec)
             m, toks = _run_cell(params, cfg, paged, chunk, budget, prompts,
-                                max_new, prefix=prefix)
+                                max_new, prefix=prefix, speculate=spec)
             if ref_tokens is None:  # first mode of the load = the reference
                 ref_tokens = toks
             cell = {
@@ -255,7 +297,8 @@ def run(smoke: bool = False, artifact: str | None = None, seed: int = 0) -> list
                 f"serve_{label}_load{load}", m["ttft_mean_s"] * 1e6,
                 f"ttft_p95={m['ttft_p95_s']}s_thru={m['throughput_tok_s']}tok/s"
                 f"_match={toks == ref_tokens}"
-                + (f"_hit={m['prefix_hit_rate']}" if prefix else "")))
+                + (f"_hit={m['prefix_hit_rate']}" if prefix else "")
+                + (f"_acc={m['spec_accepted_per_step']}" if spec else "")))
     if not smoke:
         for workload in WORKLOADS:
             prompts = bursty_workload(cfg, workload, seed)
@@ -285,8 +328,44 @@ def run(smoke: bool = False, artifact: str | None = None, seed: int = 0) -> list
                     f"serve_{label}", m["ttft_mean_s"] * 1e6,
                     f"ttft_p50={m['ttft_p50_s']}s_p95={m['ttft_p95_s']}s"
                     f"_hit={m['prefix_hit_rate']}_match={toks == ref_tokens}"))
+        # decode-heavy bursty pair: speculation OFF (the reference) vs ON
+        # with the prompt-lookup draft — zero draft-model cost, so the ON
+        # cell's only overhead is the [B, k+1] verify.  Greedy acceptance
+        # is exact for any draft, so the ON cell must be token-identical
+        # while committing > 1 token per verify step
+        prompts = bursty_workload(cfg, "decode_heavy", seed)
+        draft = LookupDraft(n=WORK_SPEC_NGRAM)
+        for spec in (0, WORK_SPEC_K):  # warm both shape sets
+            _run_bursty_cell(params, cfg, prompts[:2 * WORK_SLOTS],
+                             max_new=WORK_SPEC_MAX_NEW, speculate=spec,
+                             draft=draft if spec else None)
+        ref_tokens = None
+        for spec in (0, WORK_SPEC_K):
+            m, toks = _run_bursty_cell(params, cfg, prompts,
+                                       max_new=WORK_SPEC_MAX_NEW,
+                                       speculate=spec,
+                                       draft=draft if spec else None)
+            if ref_tokens is None:
+                ref_tokens = toks
+            label = "decode_heavy" + ("_spec" if spec else "")
+            cells.append({
+                "mode": label, "workload": "decode_heavy", "paged": True,
+                "prefill_chunk": WORK_CHUNK, "prefill_budget": WORK_BUDGET,
+                "prefix_cache": False, "load_requests": len(prompts),
+                "prompt_len": int(np.mean([len(p) for p in prompts])),
+                "slots": WORK_SLOTS,
+                "tokens_match_dense": toks == ref_tokens,
+                **m,
+            })
+            rows.append((
+                f"serve_{label}", m["ttft_mean_s"] * 1e6,
+                f"decode={m['decode_tok_s']}tok/s"
+                f"_thru={m['throughput_tok_s']}tok/s"
+                f"_match={toks == ref_tokens}"
+                + (f"_acc={m['spec_accepted_per_step']}" if spec else "")))
     by = {(c["mode"], c["load_requests"]): c for c in cells}
     prefix_speedups = {}
+    spec_decode_speedups = {}
     for load in loads:
         # the acceptance comparisons: chunked vs token TTFT at prompt_len
         # >= 64, and batched vs sequential chunked throughput at a
@@ -307,6 +386,19 @@ def run(smoke: bool = False, artifact: str | None = None, seed: int = 0) -> list
                     f"serve_batched_speedup_{kv}_load{load}", 0.0,
                     f"thru_seq={seqc['throughput_tok_s']}"
                     f"_batched={batc['throughput_tok_s']}tok/s_x{win}"))
+            # spec vs plain decode at the same KV layout + chunk: the
+            # speculative acceptance comparison (decode tok/s, not wall
+            # throughput — prefill and queueing are identical twins here)
+            spc = by.get((f"{kv}_spec", load))
+            if seqc and spc and seqc.get("decode_tok_s"):
+                win = round((spc["decode_tok_s"] or 0.0)
+                            / max(seqc["decode_tok_s"], 1e-9), 2)
+                spec_decode_speedups[f"{kv}_load{load}"] = win
+                rows.append((
+                    f"serve_spec_decode_speedup_{kv}_load{load}", 0.0,
+                    f"decode_plain={seqc['decode_tok_s']}"
+                    f"_spec={spc['decode_tok_s']}tok/s_x{win}"
+                    f"_acc={spc['spec_accepted_per_step']}"))
     # the prefix-cache acceptance comparison: OFF vs ON TTFT per pair
     for off_c, on_c in _prefix_pairs({"cells": cells}):
         speedup = round(off_c["ttft_mean_s"] / max(on_c["ttft_mean_s"], 1e-9), 2)
@@ -315,6 +407,18 @@ def run(smoke: bool = False, artifact: str | None = None, seed: int = 0) -> list
             f"serve_prefix_ttft_speedup_{on_c['mode']}", 0.0,
             f"ttft_off={off_c['ttft_mean_s']}s_on={on_c['ttft_mean_s']}s"
             f"_x{speedup}_hit={on_c['prefix_hit_rate']}"))
+    # the speculative acceptance comparison on the bursty decode-heavy mix
+    by_mode = {c["mode"]: c for c in cells}
+    off_c, on_c = by_mode.get("decode_heavy"), by_mode.get("decode_heavy_spec")
+    if off_c and on_c and off_c.get("decode_tok_s"):
+        win = round((on_c["decode_tok_s"] or 0.0)
+                    / max(off_c["decode_tok_s"], 1e-9), 2)
+        spec_decode_speedups["decode_heavy"] = win
+        rows.append((
+            "serve_spec_decode_speedup_bursty", 0.0,
+            f"decode_plain={off_c['decode_tok_s']}"
+            f"_spec={on_c['decode_tok_s']}tok/s_x{win}"
+            f"_acc={on_c['spec_accepted_per_step']}"))
     chunk = SMOKE_CHUNK if smoke else CHUNK
     attribution = _attribution_run(
         params, cfg, _prompts(cfg, SLOTS, prompt_len, seed=seed), max_new,
@@ -332,6 +436,7 @@ def run(smoke: bool = False, artifact: str | None = None, seed: int = 0) -> list
         "prefill_budget": (SLOTS * SMOKE_CHUNK) if smoke else BUDGET,
         "act_quant": "token (composition-invariant; see DESIGN.md §7)",
         "prefix_ttft_speedup": prefix_speedups,
+        "spec_decode_speedup": spec_decode_speedups,
         "cells": cells,
         "kernel_attribution": attribution,
     }
@@ -381,6 +486,24 @@ def _prefix_hit_check(c: dict) -> list:
              "(shared-template second wave must reuse the index)")]
 
 
+def _spec_check(c: dict) -> list:
+    """A speculative cell must actually speculate: greedy self-drafting
+    accepts every proposal by construction, so committing <= 1 token per
+    verify step means the draft/verify/rollback path silently degraded to
+    plain decode (deterministic — not a timing check).  Token identity vs
+    the non-speculative reference is _identity_check's job and covers the
+    spec cells too."""
+    if not c.get("speculate_k"):
+        return []
+    aps = c.get("spec_accepted_per_step") or 0.0
+    if aps > 1.0:
+        return []
+    return [("identity", _cell_key(c),
+             f"speculative cell {_cell_key(c)} commits {aps} tokens per "
+             "verify step (<= 1.0 means speculation degraded to plain "
+             "decode)")]
+
+
 def _prefix_pairs(blob: dict):
     """(off_cell, on_cell) twins: same sweep point, prefix cache toggled."""
     def twin_key(c):
@@ -411,11 +534,12 @@ def check_regression(old_blob: dict, new_blob: dict,
                      factor: float = REGRESSION_FACTOR) -> list:
     """Shared gate checks (schema drift, dropped cells, >factor
     share-normalized wall regressions — see smoke_gate.check_cells) plus
-    the serving-only token-identity, prefix-hit and TTFT-win checks."""
+    the serving-only token-identity, prefix-hit, speculative
+    accepted-per-step and TTFT-win checks."""
     return smoke_gate.check_cells(
         old_blob, new_blob, cell_key=_cell_key, cell_keys=CELL_KEYS,
         normalized=_normalized, factor=factor,
-        extra_cell_checks=(_identity_check, _prefix_hit_check),
+        extra_cell_checks=(_identity_check, _prefix_hit_check, _spec_check),
     ) + _prefix_win_check(new_blob)
 
 
@@ -432,9 +556,9 @@ def main(argv: list | None = None) -> int:
         rest, tag="bench_serve", run=partial(run, seed=args.seed),
         check_regression=check_regression,
         baseline=SMOKE_BASELINE, out=SMOKE_OUT, factor=REGRESSION_FACTOR,
-        smoke_help="tiny dense/paged x sequential/batched sweep plus a "
-                   "shared-prefix cell, with schema + token-identity + "
-                   "prefix-hit checks")
+        smoke_help="tiny dense/paged x sequential/batched sweep plus "
+                   "shared-prefix and speculative cells, with schema + "
+                   "token-identity + prefix-hit + accepted-per-step checks")
 
 
 if __name__ == "__main__":

@@ -258,7 +258,7 @@ _CHUNK_BUCKETS: set[int] = set()
 
 
 def register_chunk_bucket(n: int) -> None:
-    """Pin an exact N-bucket for a serving prefill batch.
+    """Pin an exact N-bucket for a serving prefill or verify batch.
 
     The serving engine's chunked prefill always dispatches at exactly
     N = chunk (sequential per-slot chunks) or N = S·C (batched concurrent
@@ -266,8 +266,11 @@ def register_chunk_bucket(n: int) -> None:
     snapping that N to its own bucket lets the autotune cache store a
     winner for the shape that actually runs, instead of smearing it into
     the next power of two (a 48-token chunk would otherwise share the 64
-    bucket; a 3·32 = 96 batched tick the 128 one).  Power-of-two values
-    are already exact; idempotent.
+    bucket; a 3·32 = 96 batched tick the 128 one).  Speculative decoding
+    pins its verify batch N = B·(k+1) (and the draft-ingest width) the same
+    way — that is what moves verification off the N=1 GEMV path and into
+    the GEMM/MAD regime deterministically, per tick, every tick.
+    Power-of-two values are already exact; idempotent.
     """
     if n > 1:
         _CHUNK_BUCKETS.add(int(n))

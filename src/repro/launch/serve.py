@@ -16,6 +16,14 @@ enables chunked prefill, and --bursty N replays N request bursts against the
 admission scheduler and prints per-request telemetry (TTFT, queue wait,
 throughput, preemptions).
 
+Speculative decoding (DESIGN.md §10): --speculate K drafts K tokens per
+decode tick and verifies all K+1 positions in one batched call that rides
+the GEMM regime; --draft picks the drafter ('self' reuses the target's
+weights — add --draft-fmt int2_g128 to re-pack them cheaper — 'ngram' /
+'ngram:N' proposes from each request's own token history at zero model
+cost, or name a small arch); greedy output is bit-identical to
+non-speculative serving.
+
 Observability (DESIGN.md §9): ``--trace-out trace.json`` writes a
 Chrome/Perfetto span trace of the run (one span per engine tick with
 admission / prefill / decode / sampling children), ``--metrics-json``
@@ -45,6 +53,7 @@ from repro.infer.engine import Engine
 from repro.models import lm
 from repro.serve import Request, ServeConfig, ServeEngine
 from repro.serve import qos as qos_mod
+from repro.serve import spec as spec_mod
 
 
 def build_plan(args) -> KernelPlan:
@@ -59,9 +68,31 @@ def make_obs(args) -> obs_mod.Obs | None:
     return obs_mod.make(tracing=bool(args.trace_out))
 
 
+def make_draft(args, params, cfg):
+    """Resolve --draft / --draft-fmt to a DraftModel (or None for the
+    zero-copy self-speculation default: the engine wraps its own packed
+    params).  ``params`` are the target's RAW weights — a re-packed
+    self-draft quantises them at the cheaper format itself."""
+    if args.speculate <= 0:
+        return None
+    if args.draft == "self":
+        if not args.draft_fmt or args.draft_fmt == args.fmt:
+            return None
+        return spec_mod.self_draft(params, cfg, fmt=args.draft_fmt)
+    if args.draft == "ngram" or args.draft.startswith("ngram:"):
+        _, _, n = args.draft.partition(":")
+        return spec_mod.LookupDraft(n=int(n) if n else 2)
+    dcfg = configs.smoke(args.draft) if args.smoke else configs.get(args.draft)
+    dcfg = dcfg.replace(dtype="float32", quant=QuantConfig(
+        mode="quant", fmt=args.draft_fmt or args.fmt,
+        plan=build_plan(args), act=args.act))
+    dparams = lm.init(jax.random.PRNGKey(1), dcfg)
+    return spec_mod.make_draft(dparams, dcfg, label=args.draft)
+
+
 def make_engine(args, params, cfg, obs=None):
     if not (args.paged or args.prefill_chunk > 1 or args.bursty
-            or args.prefix_cache):
+            or args.prefix_cache or args.speculate > 0):
         return Engine(params, cfg, batch_slots=args.slots,
                       max_seq=args.max_seq, obs=obs)
     return ServeEngine(params, cfg, ServeConfig(
@@ -70,7 +101,9 @@ def make_engine(args, params, cfg, obs=None):
         kv_blocks=args.kv_blocks or None,
         prefill_chunk=args.prefill_chunk,
         prefill_budget=args.prefill_budget,
-        prefix_cache=args.prefix_cache), obs=obs)
+        prefix_cache=args.prefix_cache,
+        speculate_k=args.speculate), obs=obs,
+        draft=make_draft(args, params, cfg))
 
 
 def _request_qos(args, rng) -> str | None:
@@ -145,6 +178,20 @@ def main():
     ap.add_argument("--prefix-cache", action="store_true",
                     help="share prompt-prefix KV blocks across requests "
                          "(paged, attention archs; inert otherwise)")
+    ap.add_argument("--speculate", type=int, default=0,
+                    help="speculative decoding: draft K tokens per decode "
+                         "tick and verify all K+1 positions in ONE batched "
+                         "call (N = slots*(K+1), the GEMM regime); greedy "
+                         "output stays bit-identical (0 → off)")
+    ap.add_argument("--draft", default="self",
+                    help="draft source: 'self' (target weights; zero extra "
+                         "memory unless --draft-fmt re-packs them), "
+                         "'ngram' / 'ngram:N' (model-free prompt-lookup: "
+                         "proposals from each request's own history), or an "
+                         "arch name for a separate small draft")
+    ap.add_argument("--draft-fmt", default=None, choices=list(formats.names()),
+                    help="registry format for the draft's weights (e.g. a "
+                         "cheaper int2_g128); default: the target's --fmt")
     ap.add_argument("--qos", default=None,
                     choices=sorted(qos_mod.CLASSES) + ["mixed"],
                     help="QoS class applied to every request ('mixed': "
@@ -187,6 +234,16 @@ def main():
               f"serving (slots={args.slots}, chunk={args.prefill_chunk}) ties "
               "each request's logits to the step's batch composition; use the "
               "default --act token for composition-invariant serving")
+    if args.speculate > 0 and args.act == "tensor":
+        # for speculation this is a refusal, not a warning: the [B, K+1]
+        # verify would score different logits than the [B, 1] decode it
+        # replaces, so greedy acceptance could not be bit-identical
+        print("[serve] ERROR: --speculate needs composition-invariant "
+              "logits; per-TENSOR activation quant ties them to the step "
+              "batch, so drafted tokens could not be verified exactly. "
+              "Use the default --act token (the supported mode) or drop "
+              "--speculate.")
+        raise SystemExit(2)
     cfg = cfg.replace(dtype="float32",
                       quant=QuantConfig(mode="quant", fmt=args.fmt, plan=plan,
                                         act=args.act))
@@ -211,6 +268,14 @@ def main():
                             * args.prefill_chunk)
         else:
             batch_ns.append(args.prefill_chunk)
+    if args.speculate > 0:
+        # the verify batch (B·(K+1)) and the draft-ingest width — the exact
+        # shapes the engine pins via register_chunk_bucket, so --explain and
+        # --autotune see the regime the verify call will actually ride
+        batch_ns.append(args.slots * (args.speculate + 1))
+        batch_ns.append(args.slots * max(args.speculate + 1,
+                                         args.prefill_chunk))
+    batch_ns = sorted(set(batch_ns))
     layer_shapes = [(n, k, m) for n in batch_ns
                     for (k, m) in ((d, d), (d, f), (f, d))]
     if args.explain:
@@ -259,7 +324,8 @@ def main():
     toks = sum(len(r.out_tokens) for r in done)
     mode = (f"paged(bs={args.block_size})" if args.paged else "dense") + \
            (f"+chunk{args.prefill_chunk}" if args.prefill_chunk > 1 else "+token") + \
-           (f"+budget{args.prefill_budget}" if args.prefill_budget > 0 else "")
+           (f"+budget{args.prefill_budget}" if args.prefill_budget > 0 else "") + \
+           (f"+spec{args.speculate}" if args.speculate > 0 else "")
     print(f"[serve] {args.arch} fmt={args.fmt} {mode}: "
           f"{len(done)} requests, {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s on CPU; see benchmarks for TPU projections)")
@@ -276,6 +342,13 @@ def main():
             # the tracer (--trace-out); the printed line renders the same
             # structured summary through the one canonical formatter
             print(obs_mod.format_prefix_summary(s))
+        if args.speculate > 0 and s.get("spec_steps"):
+            print(f"  spec[{s['spec_draft']}] k={s['speculate_k']}: "
+                  f"accepted/step = {s['spec_accepted_per_step']:.2f} "
+                  f"(1.0 = plain decode), acceptance = "
+                  f"{s['spec_acceptance_rate'] or 0.0:.2f} over "
+                  f"{s['spec_tokens_drafted']} drafted "
+                  f"({s['spec_tokens_rejected']} rejected)")
     routed = sorted({(dc.regime, dc.n, dc.kernel, dc.source)
                      for dc in eng.kernel_decisions()})
     for regime, n, kernel, source in routed:

@@ -413,6 +413,31 @@ def prefill_chunk_batched(params, tok: jax.Array, pos: jax.Array,
     return _head(params, jnp.take_along_axis(x, last, axis=1), cfg), state
 
 
+def verify_chunk_batched(params, tok: jax.Array, pos: jax.Array,
+                         cfg: ModelConfig, state, *, table=None):
+    """Score W positions per sequence in ONE call: tok [B, W], pos [B, W]
+    → (logits [B, W, V], state).  The speculative-verify forward
+    (DESIGN.md §10).
+
+    Identical cache semantics to :func:`prefill_chunk_batched` — chunked
+    attention over the whole cache including this call's own writes, and
+    ``pos`` entries < 0 are masked padding (trash-slot writes, invisible to
+    attention) — but the head runs over EVERY position, not just the last
+    valid one: the engine needs the target's next-token distribution at all
+    k+1 verify positions to longest-prefix-match the k drafted tokens and
+    mint the bonus token from the same call.  W > 1 flattens to mpGEMM
+    batch N = B·W, so verification rides the GEMM/MAD regime while the
+    drafting it replaces would have been W single-token GEMV-regime steps.
+    Logits at padded positions are garbage the caller must ignore.
+    """
+    if cfg.is_encdec():
+        raise ValueError("speculative verify supports decoder-only stacks")
+    x = _embed(params, tok, cfg)
+    x, state, _ = stack_apply(params["stack"], x, cfg, states=state, pos=pos,
+                              table=table, chunked=True)
+    return _head(params, x, cfg), state
+
+
 def pack(params, cfg: ModelConfig):
     """Quantize+pack every BitLinear for inference (the paper's convert step)."""
     return bitlinear.pack_tree(params, cfg.quant)

@@ -20,13 +20,16 @@ def format_stall(diag: dict) -> str:
     lines = []
     for s in diag["slots"]:
         if "blocks_needed" in s:
-            lines.append(
+            line = (
                 f"slot {s['slot']} (rid {s['rid']}, prio {s['priority']}, "
                 f"{s['phase']} at pos {s['cursor']}/{s['n_base']}) needs "
                 f"{s['blocks_needed']} more KV block(s)")
         else:
-            lines.append(f"slot {s['slot']} (rid {s['rid']}, {s['phase']} at "
-                         f"pos {s['cursor']}/{s['n_base']})")
+            line = (f"slot {s['slot']} (rid {s['rid']}, {s['phase']} at "
+                    f"pos {s['cursor']}/{s['n_base']})")
+        if s.get("draft_blocks_needed"):
+            line += f" + {s['draft_blocks_needed']} draft block(s)"
+        lines.append(line)
     p = diag["pool"]
     if p["kind"] == "paged":
         pool = (f"{p['free']} of {p['total']} KV blocks free"
@@ -34,6 +37,9 @@ def format_stall(diag: dict) -> str:
         if "prefix_cached" in p:
             pool += (f", {p['prefix_cached']} prefix-cached "
                      f"({p['prefix_evictable']} evictable)")
+        if "draft_free" in p:
+            pool += (f"; draft pool {p['draft_free']} of "
+                     f"{p['draft_total']} free")
     else:
         pool = "dense KV cache"
     blocked = "; ".join(lines) if lines else "no occupied slots"

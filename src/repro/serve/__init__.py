@@ -11,6 +11,8 @@ Public surface:
     PrefixIndex                 radix index over prompt blocks (prefix.py)
     QoSClass / select_format    per-request QoS classes (qos.py)
     RequestMetrics / ServeStats telemetry (metrics.py)
+    DraftModel / self_draft / make_draft / LookupDraft
+                                speculative-decoding drafts (spec.py)
 
 ``repro.infer.engine.Engine`` is a thin legacy facade over ServeEngine
 (dense KV, token-by-token prefill, FIFO admission).
@@ -22,3 +24,5 @@ from repro.serve.metrics import RequestMetrics, ServeStats  # noqa: F401
 from repro.serve.prefix import PrefixIndex  # noqa: F401
 from repro.serve.qos import QoSClass, select_format  # noqa: F401
 from repro.serve.scheduler import AdmissionScheduler, Request, Submission  # noqa: F401
+from repro.serve.spec import (  # noqa: F401
+    DraftModel, LookupDraft, make_draft, self_draft)

@@ -36,6 +36,7 @@ from repro.obs import kernels as obs_kernels
 from repro.models.config import ModelConfig
 from repro.serve import kvcache, prefill
 from repro.serve import qos as qos_mod
+from repro.serve import spec as spec_mod
 from repro.serve import scheduler as scheduler_mod
 from repro.serve.kvcache import BlockAllocator, BlockTables, PagedKVConfig
 from repro.serve.metrics import RequestMetrics, ServeStats
@@ -60,6 +61,11 @@ class ServeConfig:
     prefix_cache: bool = False    # share prompt-prefix KV blocks across
     #                               requests (paged + attention-only archs;
     #                               otherwise inert, see prefix_inert_reason)
+    speculate_k: int = 0          # draft tokens per decode tick; the verify
+    #                               call scores [B, k+1] positions at once
+    #                               (GEMM regime).  0 → speculation off: the
+    #                               engine takes the plain decode tick,
+    #                               trace-for-trace identical to pre-spec.
 
 
 @dataclasses.dataclass
@@ -94,11 +100,58 @@ def _jitted_batched_chunk(cfg: ModelConfig, paged: bool):
     return prefill.make_batched_chunk_fn(cfg, paged=paged)
 
 
+def _verify_tick(params, toks, pos, state, table, *, cfg: ModelConfig,
+                 paged: bool):
+    return lm.verify_chunk_batched(params, toks, pos, cfg, state,
+                                   table=table if paged else None)
+
+
+# The [B, W] multi-position verify call (DESIGN.md §10).  Rows are ALL the
+# engine's slots (like the decode tick — idle/short rows pad at pos −1), so
+# no gather/scatter surgery is needed; the same callable, at ingest width,
+# feeds committed history into the DRAFT's cache (logits discarded).  Under
+# self-speculation the draft shares the target's cfg, so both roles hit one
+# lru_cache entry and the draft costs zero extra traces beyond its shapes.
+@lru_cache(maxsize=None)
+def _jitted_verify(cfg: ModelConfig, paged: bool):
+    return jax.jit(partial(_verify_tick, cfg=cfg, paged=paged))
+
+
+def _draft_loop_tick(params, forced, fmask, dpos, state, table, *,
+                     cfg: ModelConfig, paged: bool, k: int):
+    """All k forced/feedback draft steps fused under ONE jit.
+
+    Step ``s`` consumes ``forced[:, s]`` where ``fmask[:, s]`` (committed
+    history folded into the loop) and the previous step's greedy token
+    elsewhere, writing draft position ``dpos[:, s]`` (−1 = trash).  Fusing
+    matters because speculation's economics are per-CALL: a tick that paid
+    k + 1 jit dispatches to commit ~k tokens only breaks even against the
+    one-dispatch plain decode tick, so the k draft steps must share one.
+    Drafting is greedy (argmax) regardless of slot temperature — only
+    temperature-0 slots speculate, and the proposals steer acceptance
+    only, never the committed distribution."""
+    prev, outs = forced[:, 0], []
+    for s in range(k):
+        tok_s = jnp.where(fmask[:, s], forced[:, s], prev)
+        logits, state = lm.decode_step(params, tok_s[:, None], dpos[:, s],
+                                       cfg, state,
+                                       table=table if paged else None)
+        prev = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+        outs.append(prev)
+    return jnp.stack(outs, axis=1), state
+
+
+@lru_cache(maxsize=None)
+def _jitted_draft_loop(cfg: ModelConfig, paged: bool, k: int):
+    return jax.jit(partial(_draft_loop_tick, cfg=cfg, paged=paged, k=k))
+
+
 class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, serve: ServeConfig | None = None,
                  *, pack: bool = True, seed: int = 0,
                  plan: KernelPlan | None = None, clock=time.perf_counter,
-                 obs: Obs | None = None):
+                 obs: Obs | None = None,
+                 draft: spec_mod.DraftModel | spec_mod.LookupDraft | None = None):
         if plan is not None:
             cfg = cfg.with_plan(plan)
         self.cfg = cfg
@@ -166,6 +219,48 @@ class ServeEngine:
                 self.allocator.set_reclaimer(self.prefix.reclaim)
         self._prefix_active = self.prefix is not None
 
+        # Speculative decoding (DESIGN.md §10).  Guard rails are ERRORS, not
+        # inert fallbacks: unlike the prefix cache, a spec engine that
+        # silently served non-speculatively would invalidate the latency
+        # contract the caller asked for.
+        self.spec: spec_mod.DraftRunner | spec_mod.LookupRunner | None = None
+        self._spec_totals = {"steps": 0, "drafted": 0, "accepted": 0,
+                             "rejected": 0, "committed": 0}
+        if scfg.speculate_k > 0:
+            if cfg.is_encdec():
+                raise ValueError("speculative decoding supports decoder-only "
+                                 "stacks")
+            if self._has_recurrent:
+                raise ValueError(
+                    "speculative decoding needs per-position KV to roll back "
+                    "rejected drafts; recurrent/SSD layers carry a per-slot "
+                    "hidden state no truncation can restore — use an "
+                    "attention-only arch or speculate_k=0")
+            if cfg.quant.mode == "quant" and cfg.quant.act == "tensor":
+                raise ValueError(
+                    "speculative decoding with per-TENSOR activation quant: "
+                    "one absmax per step ties logits to the batch "
+                    "composition, so the [B, k+1] verify call would score "
+                    "different logits than the [B, 1] decode it replaces and "
+                    "greedy acceptance would NOT be bit-identical; use "
+                    "act='token' (composition-invariant) or speculate_k=0")
+            d = draft if draft is not None else spec_mod.DraftModel(
+                self.params, cfg, label="self")
+            if not isinstance(d, spec_mod.LookupDraft):
+                # model-draft-only guards: a LookupDraft has no weights, no
+                # vocab of its own, and no KV to roll back
+                if d.cfg.padded_vocab != cfg.padded_vocab:
+                    raise ValueError(
+                        f"draft vocab {d.cfg.padded_vocab} != target vocab "
+                        f"{cfg.padded_vocab}: proposals would not be "
+                        "comparable")
+                if any(k in ("rec", "ssd") for k in d.cfg.block_pattern):
+                    raise ValueError("draft model must be attention-only "
+                                     "(its KV rolls back by truncation too)")
+        elif draft is not None:
+            raise ValueError("draft model given but speculate_k == 0; set "
+                             "ServeConfig.speculate_k >= 1")
+
         self._decision_mark = dispatch.decision_count()
         # every jitted callable goes through the obs jit-boundary wrapper:
         # capture-only (two integer reads per call) when kernel profiling is
@@ -181,6 +276,37 @@ class ServeEngine:
             _jitted_batched_chunk(cfg, scfg.paged), "prefill_batched", prof)
             if self._batched_prefill else None)
         self._sample_fn = _SAMPLE_FN
+        if scfg.speculate_k > 0:
+            k = scfg.speculate_k
+            self._verify_fn = obs_kernels.instrument(
+                _jitted_verify(cfg, scfg.paged), "spec_verify", prof)
+            if isinstance(d, spec_mod.LookupDraft):
+                # model-free prompt-lookup drafting: no draft weights, no
+                # draft KV, nothing to ingest — the [B, k+1] verify IS the
+                # whole speculative cost (DESIGN.md §10)
+                self._spec_ingest_w = 0
+                self.spec = spec_mod.LookupRunner(d)
+            else:
+                # the draft catches up on committed history (decode entry,
+                # or after draft-pool pressure) in fixed-width ingest
+                # chunks; k+1 keeps ingest and verify on ONE trace under
+                # self-speculation
+                self._spec_ingest_w = max(k + 1, scfg.prefill_chunk)
+                self.spec = spec_mod.DraftRunner(
+                    d, scfg.batch_slots, scfg.max_seq, self.pcfg,
+                    step_fn=obs_kernels.instrument(
+                        _jitted_draft_loop(d.cfg, scfg.paged, k),
+                        "spec_draft_step", prof),
+                    ingest_fn=obs_kernels.instrument(
+                        _jitted_verify(d.cfg, scfg.paged),
+                        "spec_draft_ingest", prof),
+                    seed=seed + 1)
+                dispatch.register_chunk_bucket(
+                    scfg.batch_slots * self._spec_ingest_w)
+            # pin the verify batch's exact N-bucket (B·(k+1)) so
+            # verification deterministically routes to the GEMM/MAD regime
+            # and autotune measures the real shape
+            dispatch.register_chunk_bucket(scfg.batch_slots * (k + 1))
         if self._batched_prefill:
             # the batched tick always flattens to exactly N = S·C (padding
             # rows compute too) — pin THAT bucket, not the per-slot chunk
@@ -223,6 +349,22 @@ class ServeEngine:
         if self.prefix is not None:
             out["prefix_cached_blocks"] = self.prefix.size
             out["prefix_evictable_blocks"] = self.prefix.evictable_count()
+        if self.spec is not None:
+            t = self._spec_totals
+            out["speculate_k"] = self.scfg.speculate_k
+            out["spec_draft"] = self.spec.model.label
+            out["spec_steps"] = t["steps"]
+            out["spec_tokens_drafted"] = t["drafted"]
+            out["spec_tokens_accepted"] = t["accepted"]
+            out["spec_tokens_rejected"] = t["rejected"]
+            # committed counts the bonus token too: > 1 means speculation
+            # beats one-token-per-tick decode on this workload
+            out["spec_accepted_per_step"] = (
+                t["committed"] / t["steps"] if t["steps"] else None)
+            out["spec_acceptance_rate"] = (
+                t["accepted"] / t["drafted"] if t["drafted"] else None)
+            if self.spec.pcfg is not None:
+                out["draft_kv_blocks_free"] = self.spec.allocator.free_count
         return out
 
     # -- request lifecycle --------------------------------------------------
@@ -272,8 +414,12 @@ class ServeEngine:
                 else:
                     with tr.span("prefill"):
                         progress |= self._prefill_tick(now, finished)
-            with tr.span("decode", slots=len(decode_idx)):
-                progress |= self._decode_tick_host(decode_idx, now, finished)
+            if self.spec is not None:
+                progress |= self._spec_tick(decode_idx, now, finished)
+            else:
+                with tr.span("decode", slots=len(decode_idx)):
+                    progress |= self._decode_tick_host(decode_idx, now,
+                                                       finished)
             if self.obs.metrics.enabled:
                 self._sample_metrics(now)
         self._tick += 1
@@ -304,6 +450,9 @@ class ServeEngine:
             m.gauge("serve_prefix_cached_blocks").set(self.prefix.size)
             m.gauge("serve_prefix_evictable_blocks").set(
                 self.prefix.evictable_count())
+        if self.spec is not None and self.spec.pcfg is not None:
+            m.gauge("serve_draft_kv_blocks_free").set(
+                self.spec.allocator.free_count)
 
     def _stall_diagnosis(self) -> dict:
         """Structured stall diagnosis: which slots are blocked, how many KV
@@ -324,6 +473,14 @@ class ServeEngine:
                 need = (self.pcfg.blocks_for(target)
                         - len(self.allocator.owned(sl.sub.req.rid)))
                 entry["blocks_needed"] = max(need, 0)
+            if self.spec is not None:
+                # draft KV demand: blocks the DRAFT pool still owes this
+                # slot before it can draft k tokens past the cursor (a dry
+                # draft pool degrades to plain decode, it never stalls — but
+                # a stalled engine with draft demand shows where the
+                # speculative capacity went)
+                entry["draft_blocks_needed"] = self.spec.blocks_needed(
+                    i, sl.sub.req.rid, sl.cursor + self.scfg.speculate_k)
             slots.append(entry)
         if self.pcfg is not None:
             pool = {"kind": "paged", "free": self.allocator.free_count,
@@ -332,6 +489,9 @@ class ServeEngine:
             if self.prefix is not None:
                 pool["prefix_cached"] = self.prefix.size
                 pool["prefix_evictable"] = self.prefix.evictable_count()
+            if self.spec is not None and self.spec.pcfg is not None:
+                pool["draft_free"] = self.spec.allocator.free_count
+                pool["draft_total"] = self.spec.pcfg.num_blocks
         else:
             pool = {"kind": "dense"}
         return {"stall_ticks": self._stall_ticks,
@@ -380,6 +540,10 @@ class ServeEngine:
             toks = list(best.tokens())
             self.slots[free_idx] = _Slot(sub=best, tokens=toks,
                                          n_base=len(toks), cursor=cached)
+            if self.spec is not None:
+                # draft KV always restarts cold — a prefix hit on the target
+                # side shares no blocks with the draft's own pool
+                self.spec.attach_slot(free_idx, best.req.rid)
             if self._has_recurrent:  # slot reuse must not inherit h/conv carry
                 self.state = kvcache.reset_slot_states(self.state, self.cfg,
                                                        free_idx)
@@ -418,13 +582,26 @@ class ServeEngine:
         evictable = self.prefix.evictable_count() if self._prefix_active else 0
         ok = AdmissionScheduler.admissible(
             best, self.allocator.free_count + evictable, self.pcfg,
-            reuse_blocks=k_full)
+            reuse_blocks=k_full,
+            draft_free_blocks=(self.spec.allocator.free_count
+                               if self.spec is not None
+                               and self.spec.pcfg is not None else None),
+            draft_pcfg=self.spec.pcfg if self.spec is not None else None)
         got = (self.allocator.alloc(rid, best.blocks_needed(self.pcfg) - k_full)
                if ok else None)
         if got is None:
             if cow_src is not None:
                 self.allocator.ref_dec(cow_src)
             self.allocator.release(rid)  # roll back the adoption
+            return None
+        if (self.spec is not None and self.spec.pcfg is not None
+                and not self.spec.admit(
+                    rid, best.blocks_needed(self.spec.pcfg))):
+            # draft pool refused (admissible raced an eviction): roll back
+            # the target-side reservation too — admission is both-or-neither
+            if cow_src is not None:
+                self.allocator.ref_dec(cow_src)
+            self.allocator.release(rid)
             return None
         if cow_src is not None:
             # flush queued scrubs BEFORE copying: the dst could be a block
@@ -457,6 +634,8 @@ class ServeEngine:
         if self.pcfg is not None:
             self.allocator.release(sub.req.rid)
             self.tables.clear_row(idx)
+        if self.spec is not None:
+            self.spec.release_slot(idx, sub.req.rid)
         sub.metrics.n_preemptions += 1
         self.sched.requeue(sub)
         self.slots[idx] = None
@@ -506,6 +685,8 @@ class ServeEngine:
         self.tables.remap(remap)
         if self.prefix is not None:
             self.prefix.remap(remap)
+        if self.spec is not None:
+            self.spec.defrag()
 
     def _flush_scrub(self) -> None:
         if self._pending_scrub:
@@ -653,6 +834,269 @@ class ServeEngine:
                 self._emit(i, sl, int(sampled[i]), now, finished)
         return True
 
+    def _spec_draft(self, staged, b: int, k: int):
+        """Model-draft half of the speculative tick: catch the draft KV up
+        on committed history, then run the k fused draft steps.  Returns
+        ``(drafts, gaps)`` — the [B, k] device proposals and each slot's
+        cursor gap (which proposal column maps to which verify column).
+        Never called under lookup drafting (no draft model to run)."""
+        sp = self.spec
+        gaps = {}
+        with self._tracer.span("spec_draft", slots=len(staged), k=k):
+            # -- draft catch-up: fixed-width [B, W] ingest of committed
+            # history (logits discarded), batched across every slot that
+            # needs it, until each is one forced step behind its cursor
+            pend = {i: (sl, c) for i, sl, c, n, ing in staged if ing}
+            w = self._spec_ingest_w
+            while pend:
+                itoks = np.zeros((b, w), np.int32)
+                ipos = np.full((b, w), -1, np.int32)
+                caught = []
+                for i, (sl, c) in pend.items():
+                    dc = sp.cursors[i]
+                    g = min(w, c - dc)
+                    itoks[i, :g] = sl.tokens[dc:dc + g]
+                    ipos[i, :g] = np.arange(dc, dc + g, dtype=np.int32)
+                    sp.cursors[i] = dc + g
+                    if sp.cursors[i] >= c:
+                        caught.append(i)
+                sp.flush_scrub()
+                _, sp.state = sp.ingest_fn(sp.params, jnp.asarray(itoks),
+                                           jnp.asarray(ipos), sp.state,
+                                           sp.table_dev())
+                for i in caught:
+                    del pend[i]
+            # -- the k draft steps over ALL slots, fused in ONE jitted call
+            # (_draft_loop_tick).  Step s writes draft position dc+s:
+            # forced to the committed token while dc+s <= cursor (folding
+            # steady-state gaps of <= k into the loop instead of paying a
+            # [B, W] ingest), fed back from the previous step's greedy
+            # token beyond, masked to pos −1 (trash write) past each
+            # slot's horizon.
+            drafts = None
+            if any(n for _, _, _, n, _ in staged):
+                forced = np.zeros((b, k), np.int32)
+                fmask = np.ones((b, k), bool)
+                dpos = np.full((b, k), -1, np.int32)
+                for i, sl, c, n, _ in staged:
+                    if n == 0:
+                        continue
+                    dc = sp.cursors[i]
+                    gaps[i] = c - dc
+                    for s in range(k):
+                        p = dc + s
+                        if p > c + n - 1:
+                            break
+                        dpos[i, s] = p
+                        if p <= c:
+                            forced[i, s] = sl.tokens[p]
+                        else:
+                            fmask[i, s] = False
+                sp.flush_scrub()
+                drafts, sp.state = sp.step_fn(                # [B, k] device
+                    sp.params, jnp.asarray(forced), jnp.asarray(fmask),
+                    jnp.asarray(dpos), sp.state, sp.table_dev())
+                for i, sl, c, n, _ in staged:
+                    if n:
+                        sp.cursors[i] = c + n
+        return drafts, gaps
+
+    def _spec_tick(self, decode_idx: list, now, finished) -> bool:
+        """Speculative decode tick (DESIGN.md §10): draft up to k tokens per
+        slot — with the DRAFT model (fused forced/feedback steps over the
+        draft's own KV) or, under lookup drafting, straight off the slot's
+        committed history at zero model cost — score all k+1 positions on
+        the TARGET in one [B, k+1] verify call (flattened mpGEMM batch
+        N = B·(k+1), the GEMM regime), commit the longest drafted prefix
+        matching the target's greedy argmax plus one bonus token, and roll
+        back every rejected KV write — block-table truncation when paged,
+        position-value masking when dense.
+
+        Identity invariant: column 0 of the verify call feeds exactly what
+        the plain decode tick would (``tokens[cursor]`` at ``pos cursor``),
+        every committed token is the TARGET's own token at its position
+        (accepted drafts equal the target argmax by construction; the bonus
+        IS the target sample), and the engine's key splits once per tick
+        either way — so greedy output is bit-identical to the
+        non-speculative engine whatever the draft proposes.  Slots that
+        cannot speculate this tick (temperature > 0, still consuming a
+        token-mode prompt, out of draft blocks, one token from a cap)
+        degrade to n_extra = 0: a width-1 verify that IS a plain decode
+        step.  The draft pool is an accelerator, never a blocker.
+        """
+        tr = self._tracer
+        sp = self.spec
+        k = self.scfg.speculate_k
+        b = len(self.slots)
+        staged = []   # (slot, _Slot, cursor, n_extra, needs_ingest)
+        props = {}    # slot -> host proposal list (lookup drafting only)
+        for i in decode_idx:
+            sl = self.slots[i]
+            if sl is None:
+                continue  # finished or evicted earlier this tick
+            c = sl.cursor
+            req = sl.sub.req
+            rid = req.rid
+            # how many positions beyond ``c`` speculation may write: stay one
+            # short of every cap so the bonus token still fits, and never
+            # draft for sampled slots (temperature ties tokens to the key
+            # stream; only greedy acceptance is exact) or mid-prompt slots
+            cap = min(self.scfg.max_seq - 2 - c,
+                      req.max_new_tokens - len(req.out_tokens) - 1)
+            n_extra, needs_ingest = 0, False
+            if req.temperature == 0.0 and c >= sl.n_base and cap > 0:
+                if sp.lookup:
+                    # prompt-lookup proposals come straight off the slot's
+                    # committed history — no draft KV, no ingest, and an
+                    # empty match degrades to a width-1 verify (plain decode)
+                    p = sp.propose(sl.tokens, c, min(k, cap))
+                    if p:
+                        props[i] = p
+                        n_extra = len(p)
+                elif (gap := c - sp.cursors[i]) > k:
+                    # decode entry / post-stall: the draft must ingest the
+                    # committed history before the fold-as-forced-steps
+                    # window can cover the gap
+                    want = min(k, cap)
+                    if sp.ensure(i, rid, c + want):
+                        n_extra, needs_ingest = want, True
+                else:
+                    want = min(k - gap, cap)
+                    if want > 0 and sp.ensure(i, rid, c + want):
+                        n_extra = want
+            if not self._ensure_blocks(i, sl, c + 1 + n_extra, now):
+                if n_extra == 0 or not self._ensure_blocks(i, sl, c + 1, now):
+                    continue  # stalled on target blocks this tick
+                n_extra, needs_ingest = 0, False
+            staged.append((i, sl, c, n_extra, needs_ingest))
+        # _ensure_blocks for a later slot may have preempted an earlier
+        # staged one (same hazard as the plain decode tick)
+        staged = [t for t in staged if self.slots[t[0]] is t[1]]
+        if not staged:
+            return False
+        if not any(n for _, _, _, n, _ in staged):
+            # every slot degraded to width 1 this tick (no proposals): the
+            # plain [B, 1] decode step commits the same tokens as a verify
+            # full of padding columns, at GEMV-regime cost.  Identity holds
+            # — same logits position, same once-per-tick key split.
+            with tr.span("decode", slots=len(decode_idx)):
+                return self._decode_tick_host(decode_idx, now, finished)
+
+        drafts, gaps = (None, {}) if sp.lookup else \
+            self._spec_draft(staged, b, k)
+
+        with tr.span("spec_verify", slots=len(staged)):
+            # -- one [B, k+1] verify: column 0 replays the plain decode
+            # step, columns 1..n_extra are the proposals (gathered on-device
+            # so verify dispatch never waits on a draft host sync)
+            vpos = np.full((b, k + 1), -1, np.int32)
+            col0 = np.zeros((b,), np.int32)
+            temps = np.zeros((b,), np.float32)
+            sel = np.zeros((b, k), np.int32) if k else None
+            prop_cols = np.zeros((b, k), np.int32) if k else None
+            for i, sl, c, n, _ in staged:
+                col0[i] = sl.tokens[c]
+                vpos[i, 0] = c
+                vpos[i, 1:n + 1] = np.arange(c + 1, c + n + 1, dtype=np.int32)
+                temps[i] = sl.sub.req.temperature
+                if n and sp.lookup:
+                    prop_cols[i, :n] = props[i]   # host-side n-gram proposals
+                elif n:
+                    # proposal j is the output of draft step gap+j−1
+                    sel[i] = np.clip(gaps[i] + np.arange(k), 0, k - 1)
+            if drafts is not None:
+                vtok = jnp.concatenate(
+                    [jnp.asarray(col0)[:, None],
+                     jnp.take_along_axis(drafts, jnp.asarray(sel), axis=1)],
+                    axis=1)
+            else:
+                # lookup proposals (or an all-degraded tick): columns 1..k
+                # are already on the host, no device gather needed
+                vtok = jnp.concatenate(
+                    [jnp.asarray(col0)[:, None],
+                     jnp.asarray(prop_cols) if k else
+                     jnp.zeros((b, k), jnp.int32)], axis=1)
+            self._flush_scrub()
+            logits, self.state = self._verify_fn(
+                self.params, vtok, jnp.asarray(vpos), self.state,
+                self._table_dev())
+            greedy = jnp.argmax(logits, axis=-1)             # [B, k+1]
+            with tr.span("sample", rows=len(staged)):
+                self.key, sk = jax.random.split(self.key)
+                samp0 = self._sample_fn(logits[:, 0, :], jnp.asarray(temps),
+                                        sk)
+                greedy_h, samp0_h, vtok_h = jax.device_get(
+                    (greedy, samp0, vtok))  # ONE wait: everything above is
+                #                             already queued behind it
+
+            # -- acceptance + rollback + commit
+            m = self.obs.metrics
+            t_items, d_items, commits = [], [], []
+            lo_t = np.ones((b,), np.int32)
+            hi_t = np.zeros((b,), np.int32)   # empty [1, 0] value ranges
+            lo_d = np.ones((b,), np.int32)
+            hi_d = np.zeros((b,), np.int32)
+            for i, sl, c, n, _ in staged:
+                a = (spec_mod.longest_prefix_accept(greedy_h[i], vtok_h[i], n)
+                     if n else 0)
+                bonus = int(samp0_h[i]) if a == 0 else int(greedy_h[i, a])
+                committed = ([int(vtok_h[i, j]) for j in range(1, a + 1)]
+                             + [bonus])
+                commits.append((i, sl, committed))
+                self._spec_totals["steps"] += 1
+                self._spec_totals["drafted"] += n
+                self._spec_totals["accepted"] += a
+                self._spec_totals["rejected"] += n - a
+                self._spec_totals["committed"] += len(committed)
+                if n:
+                    m.counter("serve_spec_tokens_drafted_total").inc(n)
+                    m.counter("serve_spec_tokens_accepted_total").inc(a)
+                    m.counter("serve_spec_tokens_rejected_total").inc(n - a)
+                    m.histogram("serve_spec_acceptance_rate").observe(a / n)
+                if a < n:
+                    tr.event("spec_reject", slot=i, rid=sl.sub.req.rid,
+                             drafted=n, accepted=a)
+                rid = sl.sub.req.rid
+                if a < n:          # target wrote pos c..c+n; c+a+1.. rejected
+                    if self.pcfg is not None:
+                        t_items.append((i, rid, c + a + 1, c + n))
+                    else:
+                        lo_t[i], hi_t[i] = c + a + 1, c + n
+                if n and not sp.lookup:
+                    # draft wrote pos ..c+n−1; keep c+a valid (lookup
+                    # drafting wrote no draft KV — nothing to roll back)
+                    dkeep = min(c + a + 1, c + n)
+                    if dkeep <= c + n - 1:
+                        if self.pcfg is not None:
+                            d_items.append((i, rid, dkeep, c + n - 1))
+                        else:
+                            lo_d[i], hi_d[i] = dkeep, c + n - 1
+                    sp.cursors[i] = dkeep
+            # rollback BEFORE commit: a commit can finish the request and
+            # release its runs — truncation must happen while they exist
+            if self.pcfg is not None:
+                if t_items:
+                    self.state = spec_mod.rollback_paged(
+                        self.state, self.cfg, self.pcfg, self.allocator,
+                        self.tables, self._pending_scrub, t_items)
+                if d_items:
+                    sp.rollback(d_items)
+            else:
+                if np.any(hi_t >= lo_t):
+                    self.state = kvcache.rollback_dense_positions(
+                        self.state, self.cfg, lo_t, hi_t)
+                if np.any(hi_d >= lo_d):
+                    sp.rollback_dense(lo_d, hi_d)
+            for i, sl, committed in commits:
+                for t in committed:
+                    sl.cursor += 1
+                    if sl.cursor < sl.n_base:
+                        continue  # token-mode prefill consuming the prompt
+                    self._emit(i, sl, t, now, finished)
+                    if self.slots[i] is not sl:
+                        break     # finished mid-commit: drop the rest
+        return True
+
     def _emit(self, idx: int, sl: _Slot, tok: int, now, finished) -> None:
         req = sl.sub.req
         m = sl.sub.metrics
@@ -679,6 +1123,8 @@ class ServeEngine:
             if self.pcfg is not None:
                 self.allocator.release(req.rid)
                 self.tables.clear_row(idx)
+            if self.spec is not None:
+                self.spec.release_slot(idx, req.rid)
             self.stats.add(m)
             self.slots[idx] = None
             finished.append(req)

@@ -133,6 +133,29 @@ class BlockAllocator:
         self._owned.setdefault(rid, []).extend(got)
         return got
 
+    def release_tail(self, rid: int, keep_n: int) -> list[int]:
+        """Truncate ``rid``'s run to its first ``keep_n`` blocks (speculative
+        KV rollback, DESIGN.md §10) and return the freed block ids — the
+        caller must scrub them before the pool is read again.  Tail blocks
+        must be PRIVATE (refcount 1): rejected-draft positions live strictly
+        beyond the published prompt prefix, so a shared tail block means the
+        engine's never-index-draft-blocks invariant broke — raise loudly
+        rather than corrupt a neighbour's (or the prefix index's) KV."""
+        run = self._owned.get(rid, [])
+        tail = run[keep_n:]
+        if not tail:
+            return []
+        del run[keep_n:]
+        freed = []
+        for b in tail:
+            if self._refs[b] != 1:
+                raise RuntimeError(
+                    f"release_tail: block {b} of rid {rid} has refcount "
+                    f"{int(self._refs[b])}; speculative tails must be private")
+            if self.ref_dec(b):
+                freed.append(b)
+        return freed
+
     def release(self, rid: int) -> list[int]:
         """Drop ``rid``'s references (eviction / completion); returns the
         blocks that actually became free — shared blocks survive under
@@ -260,6 +283,67 @@ def scrub_blocks(state, cfg, block_ids):
             out["pos"] = st["pos"].at[:, ids].set(-1)
         else:
             out["pos"] = st["pos"].at[ids].set(-1)
+        return out
+
+    return map_layer_states(state, cfg, one)
+
+
+def mask_block_tails(state, cfg, block_ids, keep_offsets):
+    """Partial-block speculative rollback (DESIGN.md §10): in each physical
+    block ``block_ids[i]`` mask the ``pos`` entries at in-block offsets
+    >= ``keep_offsets[i]`` to −1.  The pos plane is the only read barrier
+    (stale k/v bytes are harmless once masked), so this plus
+    :meth:`BlockAllocator.release_tail` on the whole-block tail IS the
+    rollback: rejected positions become invisible and the next verify/decode
+    write simply reclaims their slots."""
+    import jax.numpy as jnp
+
+    if not len(block_ids):
+        return state
+    ids = jnp.asarray(np.asarray(block_ids, np.int32))
+    keeps = jnp.asarray(np.asarray(keep_offsets, np.int32))
+
+    def one(st, kind, stacked):
+        if kind not in ("attn", "local"):
+            return st
+        out = dict(st)
+        p = st["pos"]
+        bs = p.shape[-1]
+        drop = jnp.arange(bs)[None, :] >= keeps[:, None]      # [n, bs]
+        if stacked:
+            rows = p[:, ids]                                  # [reps, n, bs]
+            out["pos"] = p.at[:, ids].set(jnp.where(drop[None], -1, rows))
+        else:
+            rows = p[ids]                                     # [n, bs]
+            out["pos"] = p.at[ids].set(jnp.where(drop, -1, rows))
+        return out
+
+    return map_layer_states(state, cfg, one)
+
+
+def rollback_dense_positions(state, cfg, lo, hi):
+    """Dense-cache speculative rollback: per slot ``i`` mask every attention
+    ``pos`` entry whose VALUE lies in [lo[i], hi[i]] to −1.  Value-based
+    masking is layout-agnostic — dense caches index slots as ``pos % width``
+    (with per-layer ring widths for windowed attention), but the rejected
+    positions are exactly the entries holding those absolute values, and
+    per-slot rows mean no cross-sequence collisions (unlike the shared paged
+    pools, which take the block-targeted path above).  An empty range
+    (lo > hi) leaves the slot untouched."""
+    import jax.numpy as jnp
+
+    lo = jnp.asarray(np.asarray(lo, np.int32))
+    hi = jnp.asarray(np.asarray(hi, np.int32))
+
+    def one(st, kind, stacked):
+        if kind not in ("attn", "local"):
+            return st
+        out = dict(st)
+        p = st["pos"]                       # [B, w] or [reps, B, w]
+        l, h = lo[:, None], hi[:, None]
+        if stacked:
+            l, h = l[None], h[None]
+        out["pos"] = jnp.where((p >= l) & (p <= h), -1, p)
         return out
 
     return map_layer_states(state, cfg, one)

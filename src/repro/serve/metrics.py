@@ -87,6 +87,7 @@ class ServeStats:
         ms = self.finished
         ttfts = [m.ttft for m in ms]
         waits = [m.queue_wait for m in ms]
+        toks = [m.decode_tok_s for m in ms if m.decode_tok_s is not None]
         total_tokens = sum(m.n_generated for m in ms)
         total_prompt = sum(m.prompt_len for m in ms)
         t0 = min((m.submit_t for m in ms), default=0.0)
@@ -103,6 +104,10 @@ class ServeStats:
                          if any(t is not None for t in ttfts) else None,
             "queue_wait_p50": percentile(waits, 50),
             "queue_wait_p95": percentile(waits, 95),
+            # per-request decode rate (first token → finish), the number
+            # speculative decoding moves; throughput_tok_s includes queue +
+            # prefill time and undersells a decode-phase win
+            "decode_tok_s_mean": (sum(toks) / len(toks)) if toks else None,
             "preemptions": sum(m.n_preemptions for m in ms),
             "prefix_hit_requests": sum(m.prefix_hit_tokens > 0 for m in ms),
             "prefix_hit_rate": (sum(m.prefix_hit_tokens for m in ms)

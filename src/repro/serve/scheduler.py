@@ -140,11 +140,21 @@ class AdmissionScheduler:
 
     @staticmethod
     def admissible(sub: Submission, free_blocks: int | None, pcfg,
-                   reuse_blocks: int = 0) -> bool:
+                   reuse_blocks: int = 0, draft_free_blocks: int | None = None,
+                   draft_pcfg=None) -> bool:
         """KV-gated admission: room for :meth:`Submission.blocks_needed`
         minus ``reuse_blocks`` already resident via a prefix-cache hit
         (shared blocks are adopted, not allocated — they cost no free-list
-        capacity).  ``pcfg=None`` (dense cache) always admits."""
+        capacity).  ``pcfg=None`` (dense cache) always admits.
+
+        Speculative engines pass the DRAFT pool too (``draft_free_blocks`` /
+        ``draft_pcfg``): the draft mirrors the request's KV footprint in its
+        own pool, with no prefix reuse (the draft always re-ingests the full
+        history), so admission must clear BOTH pools — admitting a request
+        the draft pool cannot hold would pin a slot that can never draft."""
+        if draft_pcfg is not None and draft_free_blocks is not None:
+            if draft_free_blocks < sub.blocks_needed(draft_pcfg):
+                return False
         if pcfg is None or free_blocks is None:
             return True
         return free_blocks >= sub.blocks_needed(pcfg) - reuse_blocks

@@ -1,0 +1,330 @@
+"""Speculative decoding: draft models, per-slot draft state, KV rollback
+(DESIGN.md §10).
+
+The engine drafts ``k`` tokens per decode tick with a cheap DRAFT model
+(single-token steps over the draft's OWN KV run), then scores all k+1
+positions on the target in ONE ``[B, k+1]`` verify call
+(:func:`repro.models.lm.verify_chunk_batched`) — flattened mpGEMM batch
+N = B·(k+1), the GEMM/MAD regime — and commits the longest prefix of
+drafted tokens that match the target's greedy argmax, plus one bonus token
+from the first mismatching position.  Greedy acceptance makes the output
+token-for-token identical to non-speculative decoding: every committed
+token IS the target's argmax at its position, whatever the draft proposed.
+
+This module owns the pieces that are not the engine tick itself:
+
+  * :class:`DraftModel` — packed params + config of a draft
+    (:func:`self_draft` builds the self-speculation variant: the target's
+    own weights, optionally re-packed at a cheaper registry format);
+  * :class:`DraftRunner` — the per-engine draft serving state: its own
+    block allocator / tables / pools (or dense caches) mirroring the
+    target's geometry, per-slot draft cursors, and the draft's own sampler
+    key (the engine's key stream must not see draft traffic, or spec on/off
+    would perturb temperature>0 sampling);
+  * :class:`LookupDraft` / :class:`LookupRunner` — the model-free
+    prompt-lookup (n-gram) draft source: proposals come from the slot's
+    own token history, so the entire speculative cost is the verify;
+  * :func:`longest_prefix_accept` — the acceptance rule, one home;
+  * :func:`rollback_paged` — block-table truncation: whole rejected blocks
+    are freed (``BlockAllocator.release_tail``) and queued for scrub, the
+    partial boundary block has its tail pos-masked.  Rejected-draft blocks
+    can never reach the prefix trie: the index only ever publishes FULL
+    PROMPT blocks (strictly before any decode-region write), and
+    ``release_tail`` asserts the tail is private.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.serve import kvcache
+from repro.serve.kvcache import BlockAllocator, BlockTables, PagedKVConfig
+
+
+@dataclasses.dataclass
+class DraftModel:
+    """A draft: params ready for ``lm`` calls + the config they obey.
+
+    ``params`` must already be packed when ``cfg.quant.mode == 'quant'``
+    (use :func:`self_draft` / :func:`make_draft`, or hand the engine's own
+    packed params straight in for zero-copy self-speculation)."""
+
+    params: Any
+    cfg: ModelConfig
+    label: str = "draft"
+
+
+def self_draft(raw_params, cfg: ModelConfig, fmt: str | None = None) -> DraftModel:
+    """Self-speculation from RAW (unpacked) target params: the same weights
+    re-packed at registry format ``fmt`` (e.g. ``int2_g128`` — cheaper
+    bytes/weight, lossier proposals), or at the target's own format when
+    ``fmt`` is None.  For the zero-extra-memory variant that shares the
+    target's already-packed params object, pass ``draft=None`` to the
+    engine instead — it wraps ``self.params`` directly."""
+    dcfg = cfg
+    if fmt is not None:
+        dcfg = cfg.with_quant(dataclasses.replace(cfg.quant, fmt=fmt))
+    return make_draft(raw_params, dcfg, label=f"self:{fmt or cfg.quant.fmt}")
+
+
+def make_draft(raw_params, dcfg: ModelConfig, label: str = "draft") -> DraftModel:
+    """Pack arbitrary raw params at ``dcfg`` into a :class:`DraftModel`
+    (the separate-small-model drafting path)."""
+    params = (lm.pack(raw_params, dcfg)
+              if dcfg.quant.mode == "quant" else raw_params)
+    return DraftModel(params, dcfg, label=label)
+
+
+@dataclasses.dataclass(frozen=True)
+class LookupDraft:
+    """Model-free draft source: prompt-lookup (n-gram) speculation.
+
+    Proposals come from the slot's OWN token history — the continuation
+    that followed the most recent earlier occurrence of the last ``n``
+    committed tokens — so drafting costs zero model calls and zero draft
+    KV.  The entire speculative overhead is the ``[B, k+1]`` verify,
+    making this the purest expression of the GEMV→GEMM amortization:
+    every accepted token is a decode-step's worth of GEMV traffic folded
+    into the batched verify for free.  Acceptance tracks how
+    self-similar the output stream is (templated/structured generation:
+    high; free prose: lower) — and, as with any draft, a miss costs only
+    the rejected columns, never correctness."""
+
+    n: int = 2
+
+    @property
+    def label(self) -> str:
+        return f"ngram:{self.n}"
+
+
+def ngram_propose(tokens, c: int, k: int, n: int) -> list:
+    """``k`` proposals for positions ``c+1..`` given committed
+    ``tokens[0..c]``: find the most recent earlier occurrence of the
+    trailing ``n``-gram ``tokens[c+1-n..c]`` and continue from it,
+    cycling the ``d`` tokens between the match and the sequence end when
+    ``d < k`` (the match distance is a period hypothesis; greedy decode
+    loves short loops and this predicts them exactly).  Filling all ``k``
+    columns is free — the verify call is a fixed ``[B, k+1]`` width, so a
+    mispredicted tail costs only its rejected columns — while a truncated
+    proposal wastes verify columns that could have carried tokens.  Empty
+    when the history is too short or the n-gram never recurred (→ the
+    slot degrades to a plain decode step)."""
+    hi = c + 1                      # committed history is tokens[:c+1]
+    if k <= 0 or hi < n + 1:
+        return []
+    key = tuple(tokens[hi - n:hi])
+    for j in range(hi - n - 1, -1, -1):
+        if tuple(tokens[j:j + n]) == key:
+            d = hi - n - j          # continuation length == match distance
+            return [tokens[j + n + (t % d)] for t in range(k)]
+    return []
+
+
+class LookupRunner:
+    """Degenerate draft runner for :class:`LookupDraft`: no weights, no
+    draft KV, nothing to ingest, admit, or roll back.  It exposes the
+    same surface :class:`DraftRunner` does so the engine's admission /
+    eviction / stall / defrag paths treat both kinds uniformly — every
+    method is a cheap no-op and ``pcfg is None`` marks the absence of a
+    draft pool wherever block accounting branches."""
+
+    lookup = True
+    pcfg = None
+    allocator = None
+
+    def __init__(self, model: LookupDraft):
+        self.model = model
+
+    def propose(self, tokens, c: int, k: int) -> list:
+        return ngram_propose(tokens, c, k, self.model.n)
+
+    def admit(self, rid: int, n_blocks: int) -> bool:
+        return True
+
+    def attach_slot(self, slot: int, rid: int) -> None:
+        pass
+
+    def release_slot(self, slot: int, rid: int) -> None:
+        pass
+
+    def blocks_needed(self, slot: int, rid: int, target: int) -> int:
+        return 0
+
+    def flush_scrub(self) -> None:
+        pass
+
+    def defrag(self) -> None:
+        pass
+
+
+def longest_prefix_accept(target_greedy, drafted, n: int) -> int:
+    """How many of ``n`` drafted tokens to accept: the longest prefix where
+    the target's greedy token at position j equals the draft's proposal for
+    position j+1.  ``target_greedy[j]`` is argmax of the verify logits at
+    offset j; ``drafted[j]`` is the token the verify call FED at offset j
+    (col 0 is the committed token, cols 1.. the proposals)."""
+    a = 0
+    while a < n and int(target_greedy[a]) == int(drafted[a + 1]):
+        a += 1
+    return a
+
+
+def rollback_paged(state, cfg, pcfg: PagedKVConfig, allocator: BlockAllocator,
+                   tables: BlockTables, pending_scrub: list, items) -> Any:
+    """Truncate paged KV runs after rejection.  ``items`` is
+    ``[(slot, rid, keep_tokens, written_end)]``: positions 0..keep_tokens−1
+    stay valid; positions up to ``written_end`` (inclusive) may hold
+    rejected writes.  Whole tail blocks are freed (+ queued for scrub, so
+    reuse under a new owner starts masked); the boundary block keeps only
+    its valid prefix via :func:`kvcache.mask_block_tails`."""
+    bs = pcfg.block_size
+    mask_blocks, mask_keeps = [], []
+    for slot, rid, keep, end in items:
+        if end < keep:
+            continue                       # nothing rejected
+        keep_n = max(1, -(-keep // bs))    # blocks covering 0..keep-1
+        freed = allocator.release_tail(rid, keep_n)
+        if freed:
+            pending_scrub.extend(freed)
+            tables.set_row(slot, allocator.owned(rid))
+        off = keep - (keep_n - 1) * bs     # valid offsets in boundary block
+        if off < bs:
+            blk = allocator.owned(rid)[keep_n - 1]
+            if allocator.refcount(blk) != 1:
+                raise RuntimeError(
+                    f"speculative rollback would mask shared block {blk} "
+                    f"(refcount {allocator.refcount(blk)}) of rid {rid}")
+            mask_blocks.append(blk)
+            mask_keeps.append(off)
+    if mask_blocks:
+        state = kvcache.mask_block_tails(state, cfg, mask_blocks, mask_keeps)
+    return state
+
+
+class DraftRunner:
+    """Per-engine draft serving state (DESIGN.md §10).
+
+    Mirrors the target's KV geometry — a paged pool of the SAME block
+    config (its own allocator/tables; admission accounts for both pools) or
+    dense ``[slots, max_seq]`` caches — plus per-slot ``cursors`` (draft
+    positions written; the draft's read horizon) and the draft's own PRNG
+    key.  The jitted step/ingest callables are built BY the engine (they
+    live in ``serve.engine``'s shared lru caches and get the engine's obs
+    instrumentation) and handed in here.
+    """
+
+    lookup = False
+
+    def __init__(self, model: DraftModel, batch_slots: int, max_seq: int,
+                 pcfg: PagedKVConfig | None, *, step_fn, ingest_fn, seed: int):
+        self.model = model
+        self.params = model.params
+        self.cfg = model.cfg
+        self.step_fn = step_fn
+        self.ingest_fn = ingest_fn
+        self.key = jax.random.PRNGKey(seed)
+        self.cursors = [0] * batch_slots
+        self._pending_scrub: list[int] = []
+        self.pcfg = pcfg
+        if pcfg is not None:
+            self.allocator = BlockAllocator(pcfg)
+            self.tables = BlockTables(batch_slots, pcfg)
+            self.state = lm.init_paged_state(
+                model.cfg, batch_slots, pcfg.num_blocks, pcfg.block_size)
+            self._dummy_table = None
+        else:
+            self.allocator = None
+            self.tables = None
+            self.state = lm.init_state(model.cfg, batch_slots, max_seq)
+            import jax.numpy as jnp
+            self._dummy_table = jnp.zeros((batch_slots, 1), jnp.int32)
+
+    # -- slot lifecycle ------------------------------------------------------
+
+    def admit(self, rid: int, n_blocks: int) -> bool:
+        """Reserve the draft-side KV footprint at admission (the engine's
+        draft-aware accounting already checked ``free_count``)."""
+        if self.pcfg is None:
+            return True
+        got = self.allocator.alloc(rid, n_blocks)
+        if got is None:
+            return False
+        self._pending_scrub.extend(got)
+        return True
+
+    def attach_slot(self, slot: int, rid: int) -> None:
+        """Bind an admitted request to a slot: draft KV restarts at 0 (the
+        draft re-ingests the full committed history — it never shares prefix
+        blocks, so a cache hit on the target side is still a cold draft)."""
+        self.cursors[slot] = 0
+        if self.pcfg is not None:
+            self.tables.set_row(slot, self.allocator.owned(rid))
+
+    def release_slot(self, slot: int, rid: int) -> None:
+        """Finish / eviction: free the draft run (freed blocks are queued
+        for scrub like the engine's) and reset the cursor."""
+        self.cursors[slot] = 0
+        if self.pcfg is not None:
+            self._pending_scrub.extend(self.allocator.release(rid))
+            self.tables.clear_row(slot)
+
+    def ensure(self, slot: int, rid: int, n_tokens: int) -> bool:
+        """Grow the draft run to cover ``n_tokens`` positions; False → the
+        engine degrades this slot to a width-1 verify (plain decode rate,
+        no stall — the draft pool is a pure accelerator, never a blocker)."""
+        if self.pcfg is None:
+            return True
+        need = self.pcfg.blocks_for(n_tokens) - len(self.allocator.owned(rid))
+        if need <= 0:
+            return True
+        got = self.allocator.alloc(rid, need)
+        if got is None:
+            return False
+        self._pending_scrub.extend(got)
+        self.tables.set_row(slot, self.allocator.owned(rid))
+        return True
+
+    def blocks_needed(self, slot: int, rid: int, n_tokens: int) -> int:
+        """Stall diagnosis: draft blocks still missing for ``n_tokens``."""
+        if self.pcfg is None:
+            return 0
+        return max(0, self.pcfg.blocks_for(n_tokens)
+                   - len(self.allocator.owned(rid)))
+
+    # -- device state --------------------------------------------------------
+
+    def flush_scrub(self) -> None:
+        if self._pending_scrub:
+            self.state = kvcache.scrub_blocks(self.state, self.cfg,
+                                              self._pending_scrub)
+            self._pending_scrub = []
+
+    def table_dev(self):
+        return (self.tables.device() if self.pcfg is not None
+                else self._dummy_table)
+
+    def rollback(self, items) -> None:
+        """Paged draft rollback (items as :func:`rollback_paged`)."""
+        self.state = rollback_paged(self.state, self.cfg, self.pcfg,
+                                    self.allocator, self.tables,
+                                    self._pending_scrub, items)
+
+    def rollback_dense(self, lo, hi) -> None:
+        self.state = kvcache.rollback_dense_positions(self.state, self.cfg,
+                                                      lo, hi)
+
+    def defrag(self) -> None:
+        """Compact the draft pool alongside the engine's defrag (a pure
+        relabeling, like the target's — decode output is unchanged)."""
+        if self.pcfg is None:
+            return
+        self.flush_scrub()
+        src, remap = self.allocator.compact()
+        self.state = kvcache.apply_compaction(self.state, self.cfg, src)
+        self.tables.remap(remap)

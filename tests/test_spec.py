@@ -1,0 +1,391 @@
+"""Speculative decoding (DESIGN.md §10): draft/verify/accept/rollback.
+
+The load-bearing claims, as executable assertions:
+
+  * the [B, k+1] verify forward scores the SAME greedy token per position
+    as sequential decode steps over those positions (the acceptance rule's
+    foundation);
+  * greedy speculative serving is bit-identical to the non-speculative
+    engine — dense and paged, self-drafted and independently drafted (a
+    disagreeing draft exercises rejection + KV rollback and the output
+    STILL cannot change);
+  * rollback-as-truncation leaves block tables, refcounts and the prefix
+    trie consistent: pools drain back to full after a run, rejected-draft
+    blocks never reach the trie, and a mid-run defrag survives;
+  * k=0 IS the plain engine: trace-for-trace — zero new dispatch decisions
+    against an already-traced config — not merely token-identical;
+  * the guard rails refuse per-tensor activation quant, recurrent stacks,
+    and a dangling draft model;
+  * the verify batch rides the GEMM regime at exactly N = B·(k+1);
+  * admission accounts for the draft pool.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import dispatch
+from repro.core.bitlinear import QuantConfig
+from repro.models import lm
+from repro.serve import Request, ServeConfig, ServeEngine, Submission
+from repro.serve import spec as spec_mod
+from repro.serve.scheduler import AdmissionScheduler
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(**kw):
+    quant = kw.pop("quant", QuantConfig(mode="quant", fmt="i2s", act="token"))
+    return configs.smoke("qwen1.5-0.5b").replace(
+        dtype="float32", quant=quant, **kw)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = _cfg()
+    return cfg, lm.init(KEY, cfg)
+
+
+@pytest.fixture(scope="module")
+def indep_draft(model):
+    cfg, _ = model
+    raw = lm.init(jax.random.PRNGKey(7), cfg)  # disagrees with the target
+    return spec_mod.make_draft(raw, cfg, label="indep")
+
+
+def _prompts(cfg, n, lo=5, hi=9):
+    rng = np.random.default_rng(0)
+    return [rng.integers(0, cfg.vocab, size=rng.integers(lo, hi)).tolist()
+            for _ in range(n)]
+
+
+def _run(params, cfg, scfg, prompts, max_new=8, **kw):
+    eng = ServeEngine(params, cfg, scfg, seed=0, **kw)
+    for rid, p in enumerate(prompts):
+        eng.submit(Request(rid=rid, prompt=p, max_new_tokens=max_new))
+    done = eng.run()
+    return {r.rid: list(r.out_tokens) for r in done}, eng
+
+
+PAGED = dict(batch_slots=2, max_seq=64, paged=True, block_size=8,
+             prefill_chunk=4)
+DENSE = dict(batch_slots=2, max_seq=64, paged=False)
+
+
+# ---------------------------------------------------------------------------
+# Verify forward == sequential decode (model level)
+# ---------------------------------------------------------------------------
+
+
+def test_verify_matches_sequential_decode(model):
+    cfg, raw = model
+    params = lm.pack(raw, cfg)
+    state = lm.init_state(cfg, 1, 32)
+    toks = [3, 7, 11, 2, 9, 4]
+    seq_logits = []
+    for p, t in enumerate(toks):
+        lg, state = lm.decode_step(
+            params, np.asarray([[t]], np.int32), np.asarray([p], np.int32),
+            cfg, state)
+        seq_logits.append(np.asarray(lg[0, 0]))
+    vstate = lm.init_state(cfg, 1, 32)
+    vlog, _ = lm.verify_chunk_batched(
+        params, np.asarray([toks], np.int32),
+        np.asarray([list(range(len(toks)))], np.int32), cfg, vstate)
+    vlog = np.asarray(vlog[0])
+    for p in range(len(toks)):
+        assert int(np.argmax(vlog[p])) == int(np.argmax(seq_logits[p])), p
+    np.testing.assert_allclose(vlog, np.stack(seq_logits),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_verify_padding_rows_inert(model):
+    """A pos = −1 row neither contributes logits that matter nor corrupts
+    the cache of a live row (the idle-slot contract of the verify tick)."""
+    cfg, raw = model
+    params = lm.pack(raw, cfg)
+    state = lm.init_state(cfg, 2, 32)
+    toks = np.asarray([[3, 7, 11], [0, 0, 0]], np.int32)
+    pos = np.asarray([[0, 1, 2], [-1, -1, -1]], np.int32)
+    vlog, state = lm.verify_chunk_batched(params, toks, pos, cfg, state)
+    lg, _ = lm.decode_step(params, np.asarray([[2], [0]], np.int32),
+                           np.asarray([3, -1], np.int32), cfg, state)
+    solo = lm.init_state(cfg, 2, 32)
+    for p, t in enumerate([3, 7, 11]):
+        ref, solo = lm.decode_step(
+            params, np.asarray([[t], [0]], np.int32),
+            np.asarray([p, -1], np.int32), cfg, solo)
+    ref, _ = lm.decode_step(params, np.asarray([[2], [0]], np.int32),
+                            np.asarray([3, -1], np.int32), cfg, solo)
+    assert int(np.argmax(np.asarray(lg[0, 0]))) == \
+        int(np.argmax(np.asarray(ref[0, 0])))
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity: spec on == spec off (the tentpole contract)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("base_kw", [PAGED, DENSE],
+                         ids=["paged", "dense"])
+def test_spec_identity_self_draft(model, base_kw):
+    cfg, params = model
+    prompts = _prompts(cfg, 4)
+    plain, _ = _run(params, cfg, ServeConfig(**base_kw), prompts)
+    for k in (1, 2, 3):
+        spec, eng = _run(params, cfg,
+                         ServeConfig(**base_kw, speculate_k=k), prompts)
+        assert spec == plain, f"k={k}"
+        s = eng.metrics_summary()
+        assert s["spec_acceptance_rate"] == 1.0   # self-draft agrees always
+        assert s["spec_accepted_per_step"] > 1.0
+
+
+@pytest.mark.parametrize("base_kw", [PAGED, DENSE],
+                         ids=["paged", "dense"])
+def test_spec_identity_independent_draft(model, indep_draft, base_kw):
+    """A draft that DISAGREES with the target exercises rejection and KV
+    rollback on nearly every tick — and the greedy output still cannot
+    change, because every committed token is the target's own argmax."""
+    cfg, params = model
+    prompts = _prompts(cfg, 4)
+    plain, _ = _run(params, cfg, ServeConfig(**base_kw), prompts, max_new=10)
+    spec, eng = _run(params, cfg, ServeConfig(**base_kw, speculate_k=3),
+                     prompts, max_new=10, draft=indep_draft)
+    assert spec == plain
+    assert eng.metrics_summary()["spec_tokens_rejected"] > 0
+
+
+def test_spec_identity_repacked_self_draft(model):
+    """Self-speculation at a different registry format (the --draft-fmt
+    path): the draft re-packs the target's raw weights."""
+    cfg, params = model
+    d = spec_mod.self_draft(params, cfg, fmt="tl1")
+    assert d.label == "self:tl1"
+    prompts = _prompts(cfg, 3)
+    plain, _ = _run(params, cfg, ServeConfig(**PAGED), prompts)
+    spec, _ = _run(params, cfg, ServeConfig(**PAGED, speculate_k=2),
+                   prompts, draft=d)
+    assert spec == plain
+
+
+def test_ngram_propose():
+    """Prompt-lookup proposal rule: most recent match wins, the
+    continuation cycles periodically to fill all k columns, and thin
+    history / no recurrence / k=0 return empty."""
+    toks = [5, 1, 2, 9, 1, 2]
+    # key (1,2) recurs at j=1; continuation [9,1,2] cycles to length 4
+    assert spec_mod.ngram_propose(toks, 5, 4, 2) == [9, 1, 2, 9]
+    # unigram: key (7,) recurs at j=0; continuation [3,7] cycles
+    assert spec_mod.ngram_propose([7, 3, 7], 2, 3, 1) == [3, 7, 3]
+    # most RECENT occurrence is preferred over an earlier one
+    assert spec_mod.ngram_propose([4, 8, 4, 9, 4], 4, 2, 1) == [9, 4]
+    assert spec_mod.ngram_propose([1, 2], 1, 3, 2) == []    # too short
+    assert spec_mod.ngram_propose([1, 2, 3, 4], 3, 3, 2) == []  # no match
+    assert spec_mod.ngram_propose(toks, 5, 0, 2) == []      # k = 0
+
+
+@pytest.mark.parametrize("base_kw", [PAGED, DENSE],
+                         ids=["paged", "dense"])
+def test_spec_identity_lookup_draft(model, base_kw):
+    """The model-free prompt-lookup draft: proposals from each slot's own
+    history, no draft KV at all — greedy output still bit-identical, with
+    real acceptances once the output self-repeats (greedy decode of the
+    smoke model loops quickly)."""
+    cfg, params = model
+    prompts = _prompts(cfg, 4)
+    plain, _ = _run(params, cfg, ServeConfig(**base_kw), prompts,
+                    max_new=14)
+    spec, eng = _run(params, cfg, ServeConfig(**base_kw, speculate_k=3),
+                     prompts, max_new=14, draft=spec_mod.LookupDraft())
+    assert spec == plain
+    s = eng.metrics_summary()
+    assert s["spec_draft"] == "ngram:2"
+    assert s["spec_tokens_accepted"] > 0
+    assert s["spec_accepted_per_step"] > 1.0
+    # no draft pool exists: the runner is the degenerate no-op kind
+    assert eng.spec.lookup and eng.spec.pcfg is None
+    assert "draft_kv_blocks_free" not in s
+
+
+def test_spec_identity_near_max_seq(model):
+    """Horizon clamping: generation runs into max_seq, so n_extra shrinks to
+    0 at the boundary and the finish condition fires exactly as non-spec."""
+    cfg, params = model
+    kw = dict(batch_slots=2, max_seq=16, paged=True, block_size=8,
+              prefill_chunk=4)
+    prompts = _prompts(cfg, 3)
+    plain, _ = _run(params, cfg, ServeConfig(**kw), prompts, max_new=32)
+    spec, _ = _run(params, cfg, ServeConfig(**kw, speculate_k=3), prompts,
+                   max_new=32)
+    assert spec == plain
+
+
+def test_spec_sampled_slots_degrade(model):
+    """temperature > 0 slots take the width-1 verify path (no speculation,
+    no crash); greedy slots in the same batch still speculate."""
+    cfg, params = model
+    eng = ServeEngine(params, cfg, ServeConfig(**PAGED, speculate_k=2),
+                      seed=0)
+    eng.submit(Request(rid=0, prompt=[3, 5, 9, 4], max_new_tokens=6,
+                       temperature=0.8))
+    eng.submit(Request(rid=1, prompt=[2, 7, 1, 8], max_new_tokens=6))
+    done = eng.run()
+    assert sorted(r.rid for r in done) == [0, 1]
+    assert all(len(r.out_tokens) == 6 for r in done)
+    assert eng.metrics_summary()["spec_tokens_drafted"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Rollback consistency: tables, refcounts, trie, defrag
+# ---------------------------------------------------------------------------
+
+
+def test_rollback_leaves_pools_consistent(model, indep_draft):
+    cfg, params = model
+    scfg = ServeConfig(batch_slots=2, max_seq=64, paged=True, block_size=8,
+                       prefill_chunk=8, prefix_cache=True, speculate_k=3)
+    # block-sized shared prefix so the trie actually holds blocks
+    shared = list(range(2, 18))
+    prompts = [shared + [30 + i] for i in range(4)]
+    out, eng = _run(params, cfg, scfg, prompts, max_new=10,
+                    draft=indep_draft)
+    assert eng.metrics_summary()["spec_tokens_rejected"] > 0
+    # every non-trie block drained back to the free list; trie blocks carry
+    # exactly the index's reference (rejected-draft blocks were scrubbed
+    # and freed, never published)
+    assert (eng.allocator.free_count + eng.prefix.size
+            == eng.pcfg.num_blocks)
+    for blk in eng.prefix.blocks():
+        assert eng.allocator.refcount(blk) == 1
+    # the draft pool never shares: it must drain completely
+    assert eng.spec.allocator.free_count == eng.spec.pcfg.num_blocks
+    assert all(c == 0 for c in eng.spec.cursors)
+
+
+def test_rollback_survives_defrag(model, indep_draft):
+    cfg, params = model
+    scfg = ServeConfig(batch_slots=2, max_seq=64, paged=True, block_size=8,
+                       prefill_chunk=4)
+    prompts = _prompts(cfg, 4)
+    plain, _ = _run(params, cfg, ServeConfig(batch_slots=2, max_seq=64,
+                                             paged=True, block_size=8,
+                                             prefill_chunk=4), prompts,
+                    max_new=10)
+    eng = ServeEngine(params, cfg, dataclasses.replace(scfg, speculate_k=3),
+                      seed=0, draft=indep_draft)
+    for rid, p in enumerate(prompts):
+        eng.submit(Request(rid=rid, prompt=p, max_new_tokens=10))
+    done, i = [], 0
+    while eng.sched.pending or any(s is not None for s in eng.slots):
+        done.extend(eng.step())
+        i += 1
+        if i % 3 == 0:
+            eng.defrag()  # compacts BOTH pools mid-flight
+    assert {r.rid: list(r.out_tokens) for r in done} == plain
+
+
+def test_release_tail_guards_shared_blocks():
+    from repro.serve.kvcache import BlockAllocator, PagedKVConfig
+    pcfg = PagedKVConfig(num_blocks=8, block_size=4, max_blocks_per_seq=8)
+    alloc = BlockAllocator(pcfg)
+    got = alloc.alloc(1, 3)
+    alloc.ref_inc(got[2])  # simulate an (illegal) share of the tail
+    with pytest.raises(RuntimeError, match="refcount"):
+        alloc.release_tail(1, 1)
+    assert alloc.release_tail(1, 2) == []  # nothing freed: tail was shared
+    alloc.ref_dec(got[2])
+
+
+# ---------------------------------------------------------------------------
+# k=0 is the plain engine, trace-for-trace
+# ---------------------------------------------------------------------------
+
+
+def test_k0_disables_trace_for_trace(model):
+    cfg, params = model
+    prompts = _prompts(cfg, 3)
+    plain, _ = _run(params, cfg, ServeConfig(**PAGED), prompts)
+    mark = dispatch.decision_count()
+    k0, eng = _run(params, cfg, ServeConfig(**PAGED, speculate_k=0), prompts)
+    assert k0 == plain
+    assert eng.spec is None
+    # zero NEW dispatch decisions: the k=0 engine reuses the plain engine's
+    # cached executables — the very same traces, not equivalent ones
+    assert dispatch.decisions_since(mark) == ()
+    assert "spec_steps" not in eng.metrics_summary()
+
+
+# ---------------------------------------------------------------------------
+# Guard rails
+# ---------------------------------------------------------------------------
+
+
+def test_guard_act_tensor_refused(model):
+    cfg, params = model
+    tcfg = _cfg(quant=QuantConfig(mode="quant", fmt="i2s", act="tensor"))
+    with pytest.raises(ValueError, match="TENSOR"):
+        ServeEngine(params, tcfg, ServeConfig(**PAGED, speculate_k=2))
+
+
+def test_guard_recurrent_refused():
+    cfg = configs.smoke("recurrentgemma-2b").replace(
+        dtype="float32", quant=QuantConfig(mode="quant", fmt="i2s",
+                                           act="token"))
+    params = lm.init(KEY, cfg)
+    with pytest.raises(ValueError, match="recurrent"):
+        ServeEngine(params, cfg, ServeConfig(batch_slots=2, max_seq=32,
+                                             speculate_k=2))
+
+
+def test_guard_draft_without_k(model, indep_draft):
+    cfg, params = model
+    with pytest.raises(ValueError, match="speculate_k"):
+        ServeEngine(params, cfg, ServeConfig(**PAGED), draft=indep_draft)
+
+
+# ---------------------------------------------------------------------------
+# Regime: the verify batch rides GEMM at exactly N = B·(k+1)
+# ---------------------------------------------------------------------------
+
+
+def test_verify_batch_dispatches_gemm(model):
+    cfg, params = model
+    k, slots = 3, 3
+    # a (fmt, shape) pair no other test traces, so the verify trace of THIS
+    # engine actually re-dispatches (jitted executables are lru-shared per
+    # config across engines — an already-traced shape records nothing)
+    vcfg = _cfg(quant=QuantConfig(mode="quant", fmt="tq1", act="token"))
+    prompts = _prompts(vcfg, 3)
+    _, eng = _run(params, vcfg, ServeConfig(batch_slots=slots, max_seq=64,
+                                            paged=True, block_size=8,
+                                            prefill_chunk=4, speculate_k=k),
+                  prompts)
+    ns = {(d.regime, d.n) for d in eng.kernel_decisions()}
+    assert ("gemm", slots * (k + 1)) in ns, ns
+
+
+# ---------------------------------------------------------------------------
+# Draft-aware admission
+# ---------------------------------------------------------------------------
+
+
+def test_admissible_checks_draft_pool(model):
+    from repro.serve.kvcache import PagedKVConfig
+    pcfg = PagedKVConfig(num_blocks=16, block_size=4, max_blocks_per_seq=16)
+    sub = Submission(req=Request(rid=0, prompt=list(range(10))))
+    assert AdmissionScheduler.admissible(sub, 16, pcfg)
+    assert AdmissionScheduler.admissible(sub, 16, pcfg,
+                                         draft_free_blocks=16,
+                                         draft_pcfg=pcfg)
+    # a dry DRAFT pool refuses admission even when the target pool has room
+    assert not AdmissionScheduler.admissible(sub, 16, pcfg,
+                                             draft_free_blocks=0,
+                                             draft_pcfg=pcfg)
+    # dense target + paged draft accounting still gates on the draft side
+    assert not AdmissionScheduler.admissible(sub, None, None,
+                                             draft_free_blocks=1,
+                                             draft_pcfg=pcfg)
