@@ -1,0 +1,100 @@
+"""Docs-consistency gate: DESIGN.md §2 + README format tables vs the registry.
+
+DESIGN.md §2 and the README's format table are the de-facto format contract
+readers (and the conformance harness's prose) rely on — so they must not
+drift from the live ``repro.core.formats`` registry.  This check parses the
+markdown tables and demands:
+
+  * every registered format name appears as a table row in BOTH documents
+    (a registered format undocumented is drift, a documented format that
+    was never registered — or got renamed — is worse);
+  * each row's bits-per-weight matches ``FormatSpec.bpw`` to 2 decimals.
+
+Table rows are recognized by a first cell holding backticked format names
+(``` `tl1` ``` — multiple names per row allowed, e.g. ``` `tl2`/`tl2k` ```)
+and a second cell starting with the bpw number.  Keeping the tables literal
+— one row per registered variant, no ``{f}_g128``-style pattern rows — is
+exactly the point: the registry is enumerable, so the docs can be too.
+
+CI runs ``python -m benchmarks.check_docs`` on every matrix leg (both
+hypothesis legs included); run it locally after touching formats.py,
+DESIGN.md §2, or the README table.
+"""
+
+from __future__ import annotations
+
+import re
+
+from repro.core import formats
+
+DESIGN = "DESIGN.md"
+README = "README.md"
+_ROW = re.compile(r"^\|\s*(`[^|]+?)\s*\|\s*([0-9.+]+)\s*\|")
+_NAME = re.compile(r"`([A-Za-z0-9_]+)`")
+
+
+def parse_format_rows(text: str) -> dict:
+    """{format name: documented bpw} from every markdown table row whose
+    first cell is backticked name(s) and second cell a number."""
+    out = {}
+    for line in text.splitlines():
+        mrow = _ROW.match(line)
+        if not mrow:
+            continue
+        try:
+            bpw = float(mrow.group(2))
+        except ValueError:
+            continue
+        for name in _NAME.findall(mrow.group(1)):
+            out[name] = bpw
+    return out
+
+
+def section(text: str, header: str) -> str:
+    """The markdown section starting at ``header`` up to the next ##."""
+    start = text.find(header)
+    if start < 0:
+        return ""
+    end = text.find("\n## ", start + len(header))
+    return text[start:end] if end > 0 else text[start:]
+
+
+def check_doc(path: str, scope: str | None = None) -> list:
+    with open(path) as f:
+        text = f.read()
+    if scope:
+        text = section(text, scope)
+        if not text:
+            return [f"{path}: section {scope!r} not found"]
+    documented = parse_format_rows(text)
+    registered = {f: formats.get(f).bpw for f in formats.names()}
+    failures = []
+    for name in sorted(set(registered) - set(documented)):
+        failures.append(f"{path}: registered format `{name}` "
+                        f"({registered[name]:.2f} bpw) missing from the table")
+    for name in sorted(set(documented) - set(registered)):
+        failures.append(f"{path}: documented format `{name}` is not in the "
+                        "registry (renamed or removed?)")
+    for name in sorted(set(documented) & set(registered)):
+        if abs(documented[name] - registered[name]) > 0.005:
+            failures.append(
+                f"{path}: `{name}` documented at {documented[name]} bpw, "
+                f"registry says {registered[name]:.4g}")
+    return failures
+
+
+def main() -> int:
+    failures = check_doc(DESIGN, scope="## §2") + check_doc(README)
+    for msg in failures:
+        print(f"[check-docs] FAIL: {msg}")
+    if failures:
+        print(f"[check-docs] {len(failures)} drift(s) between the docs "
+              "tables and the live format registry")
+        return 1
+    print(f"[check-docs] ok: DESIGN.md §2 and README tables match the "
+          f"registry ({len(formats.names())} formats)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

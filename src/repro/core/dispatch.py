@@ -88,10 +88,20 @@ class KernelSpec:
         # own tiling constraint must hold
         return k % max(fmtreg.get(fmt).k_align, 1) == 0 and k % self.k_align == 0
 
-    def hbm_bytes(self, fmt: str, n: int, k: int, m: int) -> float:
+    def hbm_bytes(self, fmt: str, n: int, k: int, m: int,
+                  occupancy: float = 1.0) -> float:
         """Predicted HBM traffic per call in bytes (weight operand + int8
         activations + any un-amortized scale plane) — the cost hint's memory
-        term, exposed for the measured-vs-predicted attribution report."""
+        term, exposed for the measured-vs-predicted attribution report.
+
+        ``occupancy`` is the nonzero-block fraction of the weight's
+        occupancy plane (``PackedWeight.occupancy()``; DESIGN.md §8/§11):
+        the zero-skip Pallas kernels never stream a skipped block's code
+        bytes out of VMEM-resident prefetch, so the expected weight-operand
+        traffic scales with it.  It only applies when this kernel actually
+        skips — a Pallas kernel on an occupancy (``_z``) format; every
+        other (kernel, format) pair reads the full operand and ignores it.
+        """
         fspec = fmtreg.get(fmt)
         bpw = self.hbm_bpw
         scale_bytes = 0.0
@@ -104,15 +114,28 @@ class KernelSpec:
             # kernel-specified operand traffic (unpacked int8 / one-hot)
             # excludes the extra [K//G, M] fp32 scale-plane read
             scale_bytes = 4.0 * m * (k // fspec.group_scale_cols)
-        return m * k * bpw / 8 + n * k + scale_bytes
+        w_bytes = m * k * bpw / 8
+        if self.backend == "pallas" and fspec.occ_block:
+            # skip walk: code-plane traffic scales with occupancy; the
+            # occupancy plane itself (8/occ_block bpw, inside fspec.bpw)
+            # is always read in full
+            occ_bytes = m * k / fspec.occ_block
+            w_bytes = (w_bytes - occ_bytes) * occupancy + occ_bytes
+        return w_bytes + n * k + scale_bytes
 
-    def cost(self, fmt: str, n: int, k: int, m: int) -> float:
-        """Roofline cost hint in µs: max(HBM time, MXU time)."""
+    def cost(self, fmt: str, n: int, k: int, m: int,
+             occupancy: float = 1.0) -> float:
+        """Roofline cost hint in µs: max(HBM time, MXU time).  ``occupancy``
+        scales both terms for zero-skip kernels (skipped blocks cost neither
+        bytes nor decode/MAC work); ignored otherwise — see hbm_bytes."""
+        fspec = fmtreg.get(fmt)
         infl = self.mxu_inflation
         if infl is None:
-            infl = fmtreg.get(fmt).mxu_inflation
-        mem = self.hbm_bytes(fmt, n, k, m) / _HBM_BYTES_PER_US
+            infl = fspec.mxu_inflation
+        mem = self.hbm_bytes(fmt, n, k, m, occupancy) / _HBM_BYTES_PER_US
         comp = 2.0 * n * m * k * infl / _MXU_OPS_PER_US
+        if self.backend == "pallas" and fspec.occ_block:
+            comp *= occupancy
         return max(mem, comp)
 
 
@@ -199,15 +222,17 @@ def formats() -> tuple:
 
 
 def candidates(fmt: str, regime: str, n: int, k: int, m: int,
-               *, lossless_only: bool = True, backend: str = "auto") -> list:
-    """Capable specs for a shape, cheapest cost hint first."""
+               *, lossless_only: bool = True, backend: str = "auto",
+               occupancy: float = 1.0) -> list:
+    """Capable specs for a shape, cheapest cost hint first.  ``occupancy``
+    (nonzero-block fraction, DESIGN.md §11) re-ranks zero-skip kernels."""
     out = [
         s for s in REGISTRY.values()
         if s.capable(fmt, regime, n, k, m)
         and (not lossless_only or s.lossless)
         and (backend == "auto" or s.backend == backend)
     ]
-    return sorted(out, key=lambda s: (s.cost(fmt, n, k, m), s.name))
+    return sorted(out, key=lambda s: (s.cost(fmt, n, k, m, occupancy), s.name))
 
 
 # ---------------------------------------------------------------------------
@@ -510,17 +535,25 @@ def mpgemm(x_q: jax.Array, s_x, pw: PackedWeight,
     return spec.fn(x_q, s_x, pw, plan.interpret)
 
 
-def explain(fmt: str, n: int, k: int, m: int, plan: KernelPlan = AUTO) -> dict:
-    """Inspect a dispatch decision without running it (README quickstart)."""
+def explain(fmt: str, n: int, k: int, m: int, plan: KernelPlan = AUTO,
+            *, occupancy: float = 1.0) -> dict:
+    """Inspect a dispatch decision without running it (README quickstart).
+
+    For occupancy (``_z``) formats pass the weight's measured nonzero-block
+    fraction (``PackedWeight.occupancy()``) to see the skip-walk cost hints
+    the attribution report uses; the default 1.0 is the dense upper bound.
+    """
     regime = "gemv" if n == 1 else "gemm"
     spec, source = select(fmt, n, k, m, plan)
     return {
         "fmt": fmt, "regime": regime, "n": n, "k": k, "m": m,
         "kernel": spec.name, "source": source, "backend": spec.backend,
-        "cost_hint_us": spec.cost(fmt, n, k, m),
+        "occupancy": occupancy,
+        "cost_hint_us": spec.cost(fmt, n, k, m, occupancy),
         "candidates": [
-            (s.name, round(s.cost(fmt, n, k, m), 3))
-            for s in candidates(fmt, regime, n, k, m, lossless_only=False)
+            (s.name, round(s.cost(fmt, n, k, m, occupancy), 3))
+            for s in candidates(fmt, regime, n, k, m, lossless_only=False,
+                                occupancy=occupancy)
         ],
     }
 

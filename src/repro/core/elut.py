@@ -101,7 +101,10 @@ def elut_mpgemm(x_q: jax.Array, s_x, pw: PackedWeight,
             f"elut_mpgemm needs an ELUT code-plane format, got {pw.fmt!r} "
             f"(elut formats: {formats.elut_formats()})")
     lut = build_lut(x_q, spec.base, spec.group)        # [..., G, C] int32
-    codes = packing.elut_codes(pw.planes["p"], spec.field_bits)
+    if spec.code_bits:
+        codes = packing.elut_codes_bc(pw.planes["p"], spec.code_bits)
+    else:
+        codes = packing.elut_codes(pw.planes["p"], spec.field_bits)
     codes = codes[:, : pw.k // spec.group]             # drop pad-group columns
     if spec.group_scale_cols:
         y = lut_accumulate_grouped(lut, codes.astype(jnp.int32),

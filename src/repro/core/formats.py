@@ -15,8 +15,19 @@ in an if-chain but a registry entry carrying
 The ternary formats (i2s, tl1, tq1) are instances of the parametric base-b
 packer with (b, g) = (3, 1), (3, 2), (3, 5); the non-ternary int2/int3
 formats are (4, 2) and (8, 2) through the *same* code path.  tl2/tl2k keep
-their mirror-consolidated sign+index planes (base 3 with a folded table);
-fp/int4 are native-dtype formats with no code plane.
+their mirror-consolidated sign+index planes (base 3 with a folded table) —
+the tl2k kernel now lives inside the parametric Pallas family
+(``kernels.elut_matmul``), sharing its digit decoder; fp/int4 are
+native-dtype formats with no code plane.
+
+Derived variants compose through builder functions (DESIGN.md §11):
+
+  * ``grouped_variant`` (``_g128``): per-group weight scales as a separate
+    [K//G, M] fp32 plane;
+  * ``bc_variant`` (``_bc``): bit-contiguous code fields — int3's 6-bit
+    codes at a true 3.0 bpw instead of byte fields' 4.0;
+  * ``occupancy_variant`` (``_z``): a per-block zero-occupancy plane the
+    Pallas kernels consult to skip all-zero K-blocks.
 
 New bit-widths are new ``register(...)`` calls, not new kernel files.
 """
@@ -34,12 +45,61 @@ from repro.core import packing, quant
 
 @dataclasses.dataclass(frozen=True)
 class FormatSpec:
-    """One weight format (DESIGN.md §2).
+    """One weight format (DESIGN.md §2 is the normative format table; §11
+    holds the sparsity / sub-byte layout arguments; the byte-level layout
+    invariants live on the :mod:`repro.core.packing` pack functions).
 
-    ``pack(w_q) -> dict[str, Array]`` and ``unpack(planes, k) -> int8 [M, K]``
-    are exact inverses on matrices whose entries are valid codes (levels in
-    ``[lo, hi]``).  ``quantize(w_fp) -> (w_q, scale)`` is the training-side
-    rule producing those codes (None for the fp passthrough format).
+    Field contract (what the conformance harness enforces per format):
+
+    ``name``
+        Registry key.  Derived variants append a suffix: ``_g{G}`` grouped
+        scales, ``_bc`` bit-contiguous codes, ``_z`` occupancy metadata.
+    ``bpw``
+        Packed bits per weight in HBM, INCLUDING any metadata planes
+        amortized over their columns (grouped scales add 32/G, the
+        occupancy plane 8/occ_block) — this is the number the dispatch
+        cost hints and the roofline accounting consume.
+    ``base`` / ``group`` / ``field_bits`` / ``code_bits``
+        Code geometry: alphabet size b, g weights per code, and the packed
+        width of one code — ``field_bits`` for power-of-two byte-aligned
+        fields (``elut_pack``), ``code_bits`` nonzero for the
+        bit-contiguous stream (``elut_pack_bc``; field_bits then records
+        the logical code width too but the stream is packed back to back).
+        Exactly the data a parametric kernel needs to decode.
+    ``k_align``
+        Required K divisibility: packing must produce whole bytes, whole
+        units, whole scale groups, and whole occupancy blocks.
+    ``planes``
+        Plane-dict layout (names, fixed order).  ``pack(w_q) ->
+        dict[str, Array]`` and ``unpack(planes, k) -> int8 [M, K]`` are
+        exact inverses on matrices of valid codes (levels in [lo, hi]) —
+        the bijection the conformance harness round-trips.  ``unpack``
+        ignores derived metadata planes ("occ").
+    ``quantize``
+        Training-side rule ``w_fp -> (w_q, scale)`` producing valid codes
+        (None for the fp passthrough).
+    ``split_k``
+        ``K -> (main_k, tail_k)`` block-fitting rule (split-K formats).
+    ``elut`` / ``pallas``
+        Capability flags: plain code-plane layout (parametric ELUT kernels
+        apply) / some fused Pallas kernel path exists.
+    ``lut_entries``
+        Table-size override (tl2's mirror-folded 14; 0 → b^g).
+    ``group_scale_cols``
+        Per-group weight scales: one fp32 scale per G K-columns per output
+        row (scale plane [K//G, M], packing module docstring).  None =
+        per-tensor scalar scale (the b1.58 default) — the two paths must
+        stay bit-identical at None (tests/test_regression_golden.py).
+    ``occ_block``
+        Zero-occupancy metadata granularity in K-columns (0 = no
+        occupancy plane).  Nonzero adds an "occ" uint8 plane
+        [M, K/occ_block] (``packing.occupancy_map``) whose 0 entries
+        kernels may skip — bit-identically, since a zero block contributes
+        exactly 0 (DESIGN.md §11 holds the skip-is-exact argument).
+    ``lossless``
+        Integer accumulation reproduces the quantized reference
+        computation EXACTLY (conformance harness gates atol=0).  False
+        only for the fp passthrough baseline (no integer semantics).
     """
 
     name: str
@@ -56,14 +116,9 @@ class FormatSpec:
     elut: bool = False              # parametric ELUT kernels apply
     pallas: bool = False            # a fused Pallas kernel path exists
     lut_entries: int = 0            # table-size override (tl2's folded 14)
-    # Per-group weight scales: one fp32 scale per G K-columns per output row
-    # (scale plane [K//G, M], packing module docstring).  None = per-tensor
-    # scalar scale (the b1.58 default) — the two paths must stay bit-identical
-    # at None (asserted in tests/test_regression_golden.py).
-    group_scale_cols: int | None = None
-    # Lossless contract: integer accumulation reproduces the quantized
-    # reference computation EXACTLY (conformance harness gates atol=0).
-    # False only for the fp passthrough baseline (no integer semantics).
+    group_scale_cols: int | None = None  # G columns per weight-scale group
+    code_bits: int = 0              # nonzero: bit-contiguous code stream width
+    occ_block: int = 0              # nonzero: occupancy-plane block columns
     lossless: bool = True
 
     # -- derived quantities (the napkin math the cost hints are built from) --
@@ -89,6 +144,29 @@ class FormatSpec:
     @property
     def weights_per_byte(self) -> int:
         return self.group * (8 // self.field_bits) if self.field_bits else 0
+
+    @property
+    def unit_bytes(self) -> int:
+        """Bytes per decode unit: 1 for byte-aligned fields,
+        lcm(code_bits, 8)/8 for the bit-contiguous stream (int3_bc: 3)."""
+        if self.code_bits:
+            return packing.bc_unit(self.code_bits)[0]
+        return 1
+
+    @property
+    def codes_per_unit(self) -> int:
+        """Whole codes per decode unit (the kernels' static decode fan-out):
+        8/field_bits for byte-aligned fields, unit_bytes·8/code_bits for the
+        bit-contiguous stream (int3_bc: 4)."""
+        if self.code_bits:
+            return packing.bc_unit(self.code_bits)[1]
+        return 8 // self.field_bits if self.field_bits else 0
+
+    @property
+    def weights_per_unit(self) -> int:
+        """K-columns per decode unit — the packing alignment quantum
+        (== weights_per_byte for byte-aligned formats; int3_bc: 8)."""
+        return self.codes_per_unit * self.group
 
     @property
     def mxu_inflation(self) -> float:
@@ -148,6 +226,11 @@ def lut_gemv_formats() -> tuple:
 def grouped_formats() -> tuple:
     """Formats carrying per-group weight scales (group_scale_cols set)."""
     return tuple(f for f, s in REGISTRY.items() if s.group_scale_cols)
+
+
+def occupancy_formats() -> tuple:
+    """Formats carrying a zero-occupancy metadata plane (occ_block set)."""
+    return tuple(f for f, s in REGISTRY.items() if s.occ_block)
 
 
 class _BpwView:
@@ -248,12 +331,12 @@ def grouped_variant(base_name: str, group_cols: int) -> FormatSpec:
     base = get(base_name)
     if base.quantize is None or not base.planes:
         raise ValueError(f"format {base_name!r} has no quantize/pack path")
-    if base.elut and group_cols % base.weights_per_byte != 0:
-        # Pallas kernels split the K reduction at group boundaries in BYTE
-        # units; a group must cover whole packed bytes.
+    if base.elut and group_cols % base.weights_per_unit != 0:
+        # Pallas kernels split the K reduction at group boundaries in whole
+        # decode units; a group must cover whole packed bytes/units.
         raise ValueError(
             f"group_scale_cols={group_cols} must be a multiple of "
-            f"{base.weights_per_byte} (weights/byte) for {base_name!r}")
+            f"{base.weights_per_unit} (weights/unit) for {base_name!r}")
     lo, hi = base.levels
     return FormatSpec(
         name=f"{base_name}_g{group_cols}",
@@ -265,7 +348,88 @@ def grouped_variant(base_name: str, group_cols: int) -> FormatSpec:
         quantize=partial(quant.absmean_lowbit_grouped,
                          lo=lo, hi=hi, group_cols=group_cols),
         elut=base.elut, pallas=base.pallas,
+        code_bits=base.code_bits,
         group_scale_cols=group_cols,
+    )
+
+
+def bc_variant(base_name: str) -> FormatSpec:
+    """Derive the bit-contiguous code-field variant of a plain ELUT format.
+
+    Code VALUES are identical to the base format (same digits, same
+    big-endian code construction, same quantize rule); only the byte layout
+    changes — codes of minimal width ceil(log2 b^g) laid back to back
+    (``packing.elut_pack_bc``) instead of power-of-two byte fields.  int3's
+    6-bit codes drop from 4.0 to a true 3.0 bpw.  Raises for formats whose
+    codes already fill their fields (nothing to reclaim).
+    """
+    base = get(base_name)
+    if not base.elut or base.pack is None:
+        raise ValueError(f"format {base_name!r} is not a plain ELUT format")
+    if base.group_scale_cols or base.occ_block:
+        raise ValueError("derive _bc from the base format, then compose")
+    cb = (base.base ** base.group - 1).bit_length()
+    if cb == base.field_bits:
+        raise ValueError(
+            f"{base_name!r} codes already fill their {cb}-bit fields")
+    b, g = base.base, base.group
+    ub, cpu = packing.bc_unit(cb)
+    wpu = cpu * g
+    return FormatSpec(
+        name=f"{base_name}_bc",
+        bpw=8.0 * ub / wpu,
+        base=b, group=g, field_bits=base.field_bits, code_bits=cb,
+        k_align=_lcm(base.k_align, wpu),
+        planes=("p",),
+        pack=lambda w: {"p": packing.elut_pack_bc(w, b, g, cb)},
+        unpack=lambda planes, k: packing.elut_unpack_bc(
+            planes["p"], k, b, g, cb),
+        quantize=base.quantize,
+        elut=True, pallas=True,
+    )
+
+
+def occupancy_variant(base_name: str, occ_block: int) -> FormatSpec:
+    """Derive the zero-occupancy (``_z``) variant of a plain ELUT format.
+
+    The code planes are IDENTICAL to the base format; one extra "occ" uint8
+    plane [M, K/occ_block] (``packing.occupancy_map``) marks which K-blocks
+    of each output row hold any nonzero weight.  The Pallas kernels consult
+    it to skip all-zero blocks in the K walk — exactly (DESIGN.md §11); the
+    XLA kernels ignore it.  bpw accounts the plane at 8/occ_block.
+
+    ``occ_block`` must cover whole decode units (kernels skip in unit-sized
+    byte slices) and K must divide into whole blocks (k_align).
+    """
+    base = get(base_name)
+    if not base.elut or base.pack is None:
+        raise ValueError(f"format {base_name!r} is not a plain ELUT format")
+    if base.group_scale_cols:
+        raise ValueError(
+            "occupancy composes with per-tensor scales only (the grouped "
+            "kernels' scale-group walk does not skip yet)")
+    if occ_block % base.weights_per_unit != 0:
+        raise ValueError(
+            f"occ_block={occ_block} must be a multiple of "
+            f"{base.weights_per_unit} (weights/unit) for {base_name!r}")
+    base_pack = base.pack
+
+    def pack(w, _bp=base_pack, _ob=occ_block):
+        planes = dict(_bp(w))
+        planes["occ"] = packing.occupancy_map(w, _ob)
+        return planes
+
+    return FormatSpec(
+        name=f"{base_name}_z",
+        bpw=base.bpw + 8.0 / occ_block,
+        base=base.base, group=base.group, field_bits=base.field_bits,
+        code_bits=base.code_bits,
+        k_align=_lcm(base.k_align, occ_block),
+        planes=base.planes + ("occ",),
+        pack=pack, unpack=base.unpack,
+        quantize=base.quantize,
+        elut=True, pallas=True,
+        occ_block=occ_block,
     )
 
 
@@ -321,3 +485,17 @@ register(FormatSpec(
     pack=_tl2k_pack, unpack=_tl2k_unpack, quantize=quant.ternary_quant,
     split_k=packing.tl2k_split_k, pallas=True, lut_entries=14,
 ))
+
+# Bit-contiguous code fields (DESIGN.md §11): int3's 6-bit codes at a true
+# 3.0 bpw (3-byte/4-code decode units) instead of 4.0 in byte fields.  The
+# other ELUT formats already fill power-of-two fields exactly, so int3 is
+# the only registration that gains.
+register(bc_variant("int3"))
+
+# Zero-occupancy (_z) variants: per-block nonzero metadata the Pallas
+# kernels consult to skip all-zero K-blocks — TENET-style sparsity riding
+# the zero-heavy ternary weight distribution.  64-column blocks cost
+# 8/64 = 0.125 bpw; int3_bc_z lands at 3.125 bpw incl. metadata.
+OCC_BLOCK_COLS = 64
+register(occupancy_variant("tl1", OCC_BLOCK_COLS))
+register(occupancy_variant("int3_bc", OCC_BLOCK_COLS))

@@ -17,6 +17,20 @@ tq1   1.60 bpw  (b=3, g=5)  5 trits / byte (243<256)         (llama.cpp
 int2  2.00 bpw  (b=4, g=2)  levels {-2..1}, 4-bit codes      (ELUT)
 int3  4.00 bpw  (b=8, g=2)  levels {-4..3}, byte codes       (ELUT)
 
+**Bit-contiguous variants** (``elut_pack_bc``): the byte-field layout above
+rounds each code up to a power-of-two field (int3's 6-bit codes burn byte
+fields → 4 bpw); the bit-contiguous layout stores codes back to back in a
+little-endian bit stream, decoded per *unit* of ``lcm(code_bits, 8)/8``
+bytes (DESIGN.md §11):
+
+int3_bc  3.00 bpw  (b=8, g=2)  6-bit codes, 3-byte/4-code unit (8 weights)
+
+**Zero-occupancy metadata** (``occupancy_map``): ``_z`` format variants
+carry one extra uint8 plane marking which ``occ_block``-column K-blocks of
+each output row contain any nonzero weight, letting kernels skip all-zero
+blocks in the K walk (DESIGN.md §11; the skip is exact — a zero block's
+contribution is exactly 0).
+
 tl2   1.67 bpw  3 trits → 1-bit sign + 4-bit index (3^3/2=13.5<16)
                 index plane: 2 idx / byte; sign plane: 8 signs / byte
                                                         (paper TL2, element-wise
@@ -68,7 +82,24 @@ def _check_ternary(w: jax.Array) -> jax.Array:
 
 def elut_pack(w: jax.Array, b: int, g: int, field_bits: int,
               *, pad: bool = False) -> jax.Array:
-    """[M, K] int8 codes -> [M, ceil(K/wpb)] uint8, wpb = g · 8/field_bits."""
+    """[M, K] int8 codes -> [M, ceil(K/wpb)] uint8, wpb = g · 8/field_bits.
+
+    Layout invariants (normative; the conformance harness round-trips them):
+
+      * digits are ``weight + b//2`` (all non-negative);
+      * a group of g consecutive K-columns forms one code
+        ``Σ_i digit_i · b^(g-1-i)`` — big-endian in the digit order, so
+        ``elut_build_lut`` can enumerate codes the same way;
+      * 8/field_bits codes pack little-endian into each byte (field f at
+        bit offset ``f · field_bits``), K ascending with the byte index —
+        packed bytes stream in K-consumption order;
+      * ``pad=True`` zero-weight-pads K up to a whole byte (tq1); pad
+        columns decode to weight 0 and are sliced off by ``elut_unpack``.
+
+    ``field_bits`` must hold a full code (``b^g ≤ 2^field_bits``); codes
+    whose minimal width is narrower than any power-of-two field waste bits
+    here — see :func:`elut_pack_bc` for the bit-contiguous alternative.
+    """
     w = w.astype(jnp.int8)
     M, K = w.shape
     fpb = 8 // field_bits
@@ -109,6 +140,138 @@ def elut_unpack(p: jax.Array, k: int, b: int, g: int,
         digits.append((code // (b ** (g - 1 - i))) % b - offset)
     w = jnp.stack(digits, axis=-1).reshape(p.shape[0], -1)
     return w[:, :k].astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# Bit-contiguous code fields — true sub-byte bpw for non-power-of-two codes
+# (DESIGN.md §11).  Codes of width ``code_bits`` are laid back to back in a
+# little-endian bit stream; the decode granularity is one *unit* of
+# ``unit_bytes = lcm(code_bits, 8) / 8`` bytes holding
+# ``codes_per_unit = unit_bytes · 8 / code_bits`` whole codes, so every unit
+# boundary is also a byte AND code boundary (no code ever spans units).
+# int3's 6-bit codes: unit = 3 bytes = 4 codes = 8 weights → 3.0 bpw, the
+# "3-byte/8-weight decode".
+# ---------------------------------------------------------------------------
+
+
+def bc_unit(code_bits: int) -> tuple[int, int]:
+    """(unit_bytes, codes_per_unit) of the bit-contiguous stream.
+
+    ``unit_bytes = lcm(code_bits, 8) / 8`` is the smallest byte count whose
+    bit width is a whole number of codes; this is the invariant that lets a
+    kernel walk the stream with static per-unit shift/OR decode only.
+    """
+    import math
+
+    lcm = code_bits * 8 // math.gcd(code_bits, 8)
+    return lcm // 8, lcm // code_bits
+
+
+def elut_pack_bc(w: jax.Array, b: int, g: int, code_bits: int) -> jax.Array:
+    """[M, K] int8 codes -> [M, (K/wpu)·unit_bytes] uint8, bit-contiguous.
+
+    Layout invariants (normative; DESIGN.md §11 holds the design argument):
+
+      * digit and code construction are IDENTICAL to :func:`elut_pack`
+        (digit = weight + b//2, big-endian base-b code per g columns);
+      * code c of a unit occupies bits [c·code_bits, (c+1)·code_bits) of
+        the unit's little-endian bit stream (bit j of byte by is stream
+        bit 8·by + j) — codes may span byte boundaries but never unit
+        boundaries;
+      * ``code_bits`` must hold a full code (b^g ≤ 2^code_bits) and K must
+        be a multiple of wpu = codes_per_unit · g (no pad option: the unit
+        IS the alignment quantum).
+    """
+    w = w.astype(jnp.int8)
+    M, K = w.shape
+    if b ** g > (1 << code_bits):
+        raise ValueError(
+            f"code_bits={code_bits} cannot hold base-{b} group-{g} codes")
+    ub, cpu = bc_unit(code_bits)
+    wpu = cpu * g
+    if K % wpu != 0:
+        raise ValueError(
+            f"elut_pack_bc(b={b}, g={g}, code_bits={code_bits}) needs "
+            f"K % {wpu} == 0, got K={K}")
+    offset = b // 2
+    d = (w.astype(jnp.int32) + offset).reshape(M, -1, g)
+    code = d[..., 0]
+    for i in range(1, g):
+        code = code * b + d[..., i]                    # big-endian digits
+    code = code.reshape(M, -1, cpu)                    # [M, units, cpu]
+    out = [jnp.zeros(code.shape[:2], jnp.int32) for _ in range(ub)]
+    for c in range(cpu):
+        off = c * code_bits
+        first, last = off // 8, (off + code_bits - 1) // 8
+        for by in range(first, last + 1):
+            sh = off - 8 * by   # code bit-0 position within byte ``by``
+            part = code[..., c] << sh if sh >= 0 else code[..., c] >> -sh
+            out[by] = out[by] | (part & 0xFF)
+    return jnp.stack(out, axis=-1).astype(jnp.uint8).reshape(M, -1)
+
+
+def elut_codes_bc(p: jax.Array, code_bits: int) -> jax.Array:
+    """[M, n_bytes] bit-contiguous bytes -> [M, G] group codes (0..2^cb-1).
+
+    Static shift/OR reassembly, one unit at a time — the same arithmetic
+    the Pallas kernels inline, so the two decoders agree by construction.
+    """
+    ub, cpu = bc_unit(code_bits)
+    pu = p.astype(jnp.int32).reshape(p.shape[0], -1, ub)
+    mask = (1 << code_bits) - 1
+    codes = []
+    for c in range(cpu):
+        off = c * code_bits
+        first, last = off // 8, (off + code_bits - 1) // 8
+        code = jnp.zeros(pu.shape[:2], jnp.int32)
+        for by in range(first, last + 1):
+            sh = 8 * by - off   # byte ``by``'s bit-0 position within the code
+            pb = pu[..., by]
+            code = code | (pb << sh if sh >= 0 else pb >> -sh)
+        codes.append((code & mask).astype(jnp.uint8))
+    return jnp.stack(codes, axis=-1).reshape(p.shape[0], -1)
+
+
+def elut_unpack_bc(p: jax.Array, k: int, b: int, g: int,
+                   code_bits: int) -> jax.Array:
+    """Inverse of elut_pack_bc -> [M, K] int8 codes."""
+    code = elut_codes_bc(p, code_bits).astype(jnp.int32)
+    offset = b // 2
+    digits = []
+    for i in range(g):
+        digits.append((code // (b ** (g - 1 - i))) % b - offset)
+    w = jnp.stack(digits, axis=-1).reshape(p.shape[0], -1)
+    return w[:, :k].astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# Zero-occupancy metadata — per-block nonzero bitmap (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+def occupancy_map(w: jax.Array, occ_block: int) -> jax.Array:
+    """[M, K] int8 codes -> [M, K/occ_block] uint8 block-occupancy plane.
+
+    Entry [m, j] is 1 iff any of ``w[m, j·occ_block : (j+1)·occ_block]`` is
+    nonzero, 0 otherwise (a byte-map, not a packed bitmap: one uint8 per
+    block keeps the plane directly indexable by the kernel's K walk; at
+    occ_block = 64 it costs 8/64 = 0.125 bpw).  Layout invariants:
+
+      * the block axis is K ascending, aligned with the packed code planes
+        (block j covers the same columns as code bytes
+        [j·occ_block/wpu·unit_bytes, ...) — ``occ_block`` must be a
+        multiple of the format's weights-per-unit);
+      * a 0 entry GUARANTEES the block's codes all decode to weight 0, so
+        a kernel may skip the block: its contribution to any dot product
+        is exactly zero and integer accumulation is order-independent —
+        the skip walk is bit-identical to the dense walk by construction.
+    """
+    M, K = w.shape
+    if K % occ_block != 0:
+        raise ValueError(
+            f"occupancy_map needs K % {occ_block} == 0, got K={K}")
+    blk = w.reshape(M, K // occ_block, occ_block)
+    return jnp.any(blk != 0, axis=-1).astype(jnp.uint8)
 
 
 # ---------------------------------------------------------------------------

@@ -73,6 +73,19 @@ class PackedWeight:
     def bpw(self) -> float:
         return self.bits() / (self.m * self.k)
 
+    def occupancy(self) -> float:
+        """Nonzero-block fraction of the occupancy plane (1.0 when the
+        format carries none — the dense upper bound).
+
+        This is the ``occupancy`` argument the dispatch cost hints and the
+        bench attribution take (DESIGN.md §8/§11): the zero-skip kernels'
+        expected code-plane HBM bytes and decode work scale with it.
+        """
+        occ = self.planes.get("occ")
+        if occ is None:
+            return 1.0
+        return float(jnp.mean((occ != 0).astype(jnp.float32)))
+
 
 def pack_weight(w: jax.Array, fmt: str) -> PackedWeight:
     """Quantize an fp master weight [M, K] via the format's training-side

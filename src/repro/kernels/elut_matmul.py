@@ -1,27 +1,42 @@
 """Parametric ELUT Pallas TPU kernels (paper §3 + Appendix ELUT, TPU-adapted).
 
-One kernel family generated from ``(b, g, field_bits)`` replaces the three
-near-duplicate base-3 kernels this repo used to carry (i2s_matmul,
-tl1_matmul, lut_gemv):
+One kernel family generated from ``(b, g, code width)`` covers every plain
+code-plane format — including the bit-contiguous sub-byte layouts and the
+zero-occupancy skip walk (DESIGN.md §11) — plus tl2's mirror-consolidated
+layout through the same digit decoder:
 
   * :func:`elut_matmul` — fused decode+MAD: packed code bytes stream
     HBM→VMEM at the format's true bpw and are decoded on the VPU with
     shift/mask/div-mod-by-b (div/mod by a constant lowers to
     multiply-shift; power-of-two bases lower to pure shifts), then hit the
     MXU as int8 digit-plane dots.  Ternary (3, 2, 4) is bit-identical to
-    the old tl1_matmul; (3, 1, 2) to i2s_matmul; (4, 2, 4) / (8, 2, 4|8)
+    the old tl1_matmul; (3, 1, 2) to i2s_matmul; (4, 2, 4) / (8, 2, 8)
     are the int2/int3 instances through the same code.
 
-    Decode per byte column (wpb = g · 8/field_bits weights per byte):
+    Decode walks one *unit* at a time (``unit_bytes`` bytes holding
+    ``codes_per_unit`` whole codes — 1 byte / 8/field_bits codes for the
+    byte-aligned formats, lcm(code_bits, 8)/8 bytes for the bit-contiguous
+    ``_bc`` stream, e.g. int3_bc's 3-byte/4-code/8-weight unit):
 
-        for field f in 0..8/field_bits-1:
-            code = (p >> f·field_bits) & mask
+        for code slot c in 0..codes_per_unit-1:
+            code = static shift/OR reassembly of the unit bytes
             for digit position i in 0..g-1:
-                D = (code // b^(g-1-i)) % b - b//2       # [bm, K/wpb]
-                acc += X_{f·g+i} · D^T                    # int8 MXU dot
+                D = (code // b^(g-1-i)) % b - b//2        # [bm, units]
+                acc += X_{c·g+i} · D^T                    # int8 MXU dot
 
-    where X_j[n, kb] = x[n, wpb·kb + j] are the deinterleaved activation
-    planes produced once by the ops.py wrapper.
+    where X_j[n, u] = x[n, wpu·u + j] are the deinterleaved activation
+    planes produced once by the ops.py wrapper (wpu weights per unit).
+
+  * :func:`elut_matmul_skip` / :func:`elut_lut_gemv_skip` — the
+    zero-occupancy walk for ``_z`` formats: an extra uint8 occupancy plane
+    (``packing.occupancy_map``) marks which K-blocks of each output row
+    hold any nonzero weight, and the kernel wraps each block's
+    decode+accumulate in ``pl.when(any occupied)``.  A block is skipped
+    only when EVERY row of the M-tile is zero there (column-structured
+    sparsity); the skip is exact — a zero block's digits are all zero, its
+    dot contributes exactly 0, and integer adds commute — so the skip walk
+    is bit-identical to the dense walk by construction (gated at atol=0 by
+    the conformance harness and tests/test_sparsity.py).
 
   * :func:`elut_lut_gemv` — the true *table-lookup* computation model for
     the extreme memory-bound batch-1 decode regime: the wrapper precomputes
@@ -39,7 +54,15 @@ tl1_matmul, lut_gemv):
     (``acc_hi·256 + acc_lo`` — the **pack-and-unpack** technique); the
     lossy ``_0`` variant takes a single int8-requantized table.
 
-Both paths have ``*_grouped`` variants for per-group weight scales
+  * :func:`tl2_mirror_matmul` — tl2's mirror-consolidated sign+index
+    layout folded into this family: the 4-bit index and 1-bit sign planes
+    decode to the group value v = idx·(1−2s) + 26s, whose base-3 digits
+    come from the SAME parametric digit decoder as every other format
+    (``_code_digits``).  This retired the separate ``tl2_matmul.py``
+    kernel file (bit-identical by the shared oracle contract:
+    tests/test_kernels.py pins kernel ≡ XLA int32 reference exactly).
+
+Both mat paths have ``*_grouped`` variants for per-group weight scales
 (DESIGN.md §2): the K walk splits at scale-group boundaries (``group_bytes``
 packed bytes per group), each group's int32 partial finishes exactly, and
 one fp32 multiply per (group, output) folds it into the fp32 accumulator —
@@ -55,13 +78,68 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.packing import bc_unit
+
+
+# ---------------------------------------------------------------------------
+# Shared parametric decode helpers
+# ---------------------------------------------------------------------------
+
+
+def _unit_params(field_bits: int, code_bits: int) -> tuple[int, int, int]:
+    """(effective code width, unit_bytes, codes_per_unit) for a format.
+
+    ``code_bits == 0`` selects the byte-aligned field layout (one-byte
+    units, 8/field_bits codes each); nonzero selects the bit-contiguous
+    stream (lcm(code_bits, 8)/8-byte units).
+    """
+    if code_bits:
+        ub, cpu = bc_unit(code_bits)
+        return code_bits, ub, cpu
+    return field_bits, 1, 8 // field_bits
+
+
+def _unit_codes(p, cb: int, ub: int, cpu: int):
+    """uint8 bytes [R, nb] -> cpu code arrays [R, nb/ub] (values 0..2^cb-1).
+
+    Static shift/OR reassembly only — the same arithmetic as
+    ``packing.elut_codes`` / ``elut_codes_bc``, inlined so the two decoders
+    agree by construction.  Single-byte units keep the legacy int16
+    shift-and-mask (bit-identical to the pre-refactor kernels).
+    """
+    mask = (1 << cb) - 1
+    if ub == 1:
+        p16 = p.astype(jnp.int16)
+        return [(p16 >> (c * cb)) & mask for c in range(cpu)]
+    pu = p.astype(jnp.int32).reshape(p.shape[0], -1, ub)
+    codes = []
+    for c in range(cpu):
+        off = c * cb
+        code = None
+        for by in range(off // 8, (off + cb - 1) // 8 + 1):
+            sh = 8 * by - off   # byte ``by``'s bit-0 position within the code
+            pb = pu[..., by]
+            part = pb << sh if sh >= 0 else pb >> -sh
+            code = part if code is None else code | part
+        codes.append(code & mask)
+    return codes
+
+
+def _code_digits(code, b: int, g: int):
+    """Code array -> g big-endian base-b digit arrays (values 0..b-1).
+
+    Shared by every kernel in the family, including the tl2 mirror decode
+    (its group value v ∈ 0..26 is a base-3, g=3 code).
+    """
+    return [(code // (b ** (g - 1 - i))) % b for i in range(g)]
+
 
 # ---------------------------------------------------------------------------
 # Arithmetic-decode MAD path (GEMM regime)
 # ---------------------------------------------------------------------------
 
 
-def _elut_mad_kernel(*refs, b: int, g: int, field_bits: int):
+def _elut_mad_kernel(*refs, b: int, g: int, cb: int, ub: int, cpu: int):
     *x_refs, p_ref, out_ref = refs
     k = pl.program_id(2)
 
@@ -69,16 +147,11 @@ def _elut_mad_kernel(*refs, b: int, g: int, field_bits: int):
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    fpb = 8 // field_bits
-    mask = (1 << field_bits) - 1
     offset = b // 2
-    p = p_ref[...].astype(jnp.int16)  # uint8 [bm, bkc] -> int16 for div/mod
     acc = out_ref[...]
     plane = 0
-    for f in range(fpb):
-        code = (p >> (f * field_bits)) & mask
-        for i in range(g):
-            d16 = (code // (b ** (g - 1 - i))) % b
+    for code in _unit_codes(p_ref[...], cb, ub, cpu):
+        for d16 in _code_digits(code, b, g):
             d = d16.astype(jnp.int8) - offset
             acc = acc + jax.lax.dot_general(
                 x_refs[plane][...], d,
@@ -90,7 +163,7 @@ def _elut_mad_kernel(*refs, b: int, g: int, field_bits: int):
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "b", "g", "field_bits", "bn", "bm", "bkc", "interpret"))
+    "b", "g", "field_bits", "code_bits", "bn", "bm", "bkc", "interpret"))
 def elut_matmul(
     x_planes: tuple,
     packed: jax.Array,
@@ -98,36 +171,137 @@ def elut_matmul(
     b: int,
     g: int,
     field_bits: int,
+    code_bits: int = 0,
     bn: int = 128,
     bm: int = 128,
     bkc: int = 128,
     interpret: bool = False,
 ) -> jax.Array:
-    """x_planes: wpb × int8 [N, K/wpb] (deinterleaved, wpb = g·8/field_bits);
-    packed: uint8 [M, K/wpb] ELUT code bytes.  Returns int32 [N, M].
+    """x_planes: wpu × int8 [N, K/wpu] (deinterleaved, wpu weights per
+    decode unit); packed: uint8 [M, Kbytes] ELUT code bytes.  Returns
+    int32 [N, M].
 
-    Requires N % bn == M % bm == (K/wpb) % bkc == 0 (the ops.py wrapper
-    pads N; K alignment is the format's k_align).  Same tiling contract as
-    the retired i2s/tl1 kernels: grid (N/bn, M/bm, Kbytes/bkc) with the
-    contraction axis innermost and the int32 accumulator tile living in the
-    output VMEM block across the k steps.
+    Requires N % bn == M % bm == Kbytes % bkc == 0 and bkc a multiple of
+    unit_bytes (the ops.py wrapper pads N and picks aligned blocks; K
+    alignment is the format's k_align).  Grid (N/bn, M/bm, Kbytes/bkc)
+    with the contraction axis innermost and the int32 accumulator tile
+    living in the output VMEM block across the k steps.
     """
-    n, kb = x_planes[0].shape
-    m = packed.shape[0]
+    cb, ub, cpu = _unit_params(field_bits, code_bits)
+    n, ku = x_planes[0].shape
+    m, kb = packed.shape
+    if bkc % ub or kb % bkc:
+        raise ValueError(f"bkc={bkc} must be a unit-aligned divisor of {kb}")
     grid = (n // bn, m // bm, kb // bkc)
 
-    x_spec = pl.BlockSpec((bn, bkc), lambda i, j, k: (i, k))
+    x_spec = pl.BlockSpec((bn, bkc // ub), lambda i, j, k: (i, k))
     p_spec = pl.BlockSpec((bm, bkc), lambda i, j, k: (j, k))
     o_spec = pl.BlockSpec((bn, bm), lambda i, j, k: (i, j))
 
     return pl.pallas_call(
-        functools.partial(_elut_mad_kernel, b=b, g=g, field_bits=field_bits),
+        functools.partial(_elut_mad_kernel, b=b, g=g, cb=cb, ub=ub, cpu=cpu),
         grid=grid,
         in_specs=[x_spec] * len(x_planes) + [p_spec],
         out_specs=o_spec,
         out_shape=jax.ShapeDtypeStruct((n, m), jnp.int32),
         interpret=interpret,
     )(*x_planes, packed)
+
+
+# ---------------------------------------------------------------------------
+# Zero-occupancy skip walk (DESIGN.md §11)
+#
+# One extra uint8 occupancy plane row per ``block_bytes`` packed bytes; each
+# block's decode+dot runs under ``pl.when(any occupied)``.  Skipping is
+# exact: a zero block's digits are identically 0, its dot contributes
+# exactly 0 to the int32 accumulator, and integer adds commute — so the
+# result equals the dense walk bit for bit whether or not any block skips.
+# ---------------------------------------------------------------------------
+
+
+def _elut_mad_skip_kernel(*refs, b: int, g: int, cb: int, ub: int, cpu: int,
+                          block_bytes: int):
+    *x_refs, p_ref, occ_ref, out_ref = refs
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    offset = b // 2
+    p = p_ref[...]
+    occ = occ_ref[...]                    # [bm, blocks in this k-step]
+    bu = block_bytes // ub                # x-plane units per block
+    for blk in range(p.shape[1] // block_bytes):
+
+        @pl.when(jnp.any(occ[:, blk] != 0))
+        def _live(blk=blk):
+            ps = p[:, blk * block_bytes:(blk + 1) * block_bytes]
+            acc = None
+            plane = 0
+            for code in _unit_codes(ps, cb, ub, cpu):
+                for d16 in _code_digits(code, b, g):
+                    d = d16.astype(jnp.int8) - offset
+                    xs = x_refs[plane][:, blk * bu:(blk + 1) * bu]
+                    part = jax.lax.dot_general(
+                        xs, d, (((1,), (1,)), ((), ())),
+                        preferred_element_type=jnp.int32,
+                    )
+                    acc = part if acc is None else acc + part
+                    plane += 1
+            out_ref[...] += acc
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "b", "g", "field_bits", "code_bits", "block_bytes", "bn", "bm", "bkc",
+    "interpret"))
+def elut_matmul_skip(
+    x_planes: tuple,
+    packed: jax.Array,
+    occ: jax.Array,
+    *,
+    b: int,
+    g: int,
+    field_bits: int,
+    block_bytes: int,
+    code_bits: int = 0,
+    bn: int = 128,
+    bm: int = 128,
+    bkc: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Zero-skip variant of :func:`elut_matmul`.  occ: uint8
+    [M, Kbytes/block_bytes] occupancy plane (``packing.occupancy_map``;
+    block_bytes = occ_block/wpu · unit_bytes packed bytes per block).
+    Returns int32 [N, M], bit-identical to the dense walk.
+
+    Requires bkc % block_bytes == 0 (K blocks cover whole occupancy
+    blocks) on top of the :func:`elut_matmul` tiling contract.
+    """
+    cb, ub, cpu = _unit_params(field_bits, code_bits)
+    if bkc % block_bytes or block_bytes % ub:
+        raise ValueError(
+            f"bkc={bkc} must cover whole {block_bytes}-byte occupancy "
+            f"blocks of whole {ub}-byte units")
+    n, _ = x_planes[0].shape
+    m, kb = packed.shape
+    grid = (n // bn, m // bm, kb // bkc)
+    opb = bkc // block_bytes  # occupancy blocks per K step
+
+    x_spec = pl.BlockSpec((bn, bkc // ub), lambda i, j, k: (i, k))
+    p_spec = pl.BlockSpec((bm, bkc), lambda i, j, k: (j, k))
+    z_spec = pl.BlockSpec((bm, opb), lambda i, j, k: (j, k))
+    o_spec = pl.BlockSpec((bn, bm), lambda i, j, k: (i, j))
+
+    return pl.pallas_call(
+        functools.partial(_elut_mad_skip_kernel, b=b, g=g, cb=cb, ub=ub,
+                          cpu=cpu, block_bytes=block_bytes),
+        grid=grid,
+        in_specs=[x_spec] * len(x_planes) + [p_spec, z_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.int32),
+        interpret=interpret,
+    )(*x_planes, packed, occ)
 
 
 # ---------------------------------------------------------------------------
@@ -143,8 +317,8 @@ def elut_matmul(
 # ---------------------------------------------------------------------------
 
 
-def _elut_mad_grouped_kernel(*refs, b: int, g: int, field_bits: int,
-                             group_bytes: int):
+def _elut_mad_grouped_kernel(*refs, b: int, g: int, cb: int, ub: int,
+                             cpu: int, group_bytes: int):
     *x_refs, p_ref, s_ref, out_ref = refs
     k = pl.program_id(2)
 
@@ -152,24 +326,20 @@ def _elut_mad_grouped_kernel(*refs, b: int, g: int, field_bits: int,
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    fpb = 8 // field_bits
-    mask = (1 << field_bits) - 1
     offset = b // 2
-    p = p_ref[...].astype(jnp.int16)  # uint8 [bm, bkc] -> int16 for div/mod
+    p = p_ref[...]
+    gu = group_bytes // ub               # x-plane units per scale group
     acc = out_ref[...]
     for s in range(p.shape[1] // group_bytes):
-        sl = slice(s * group_bytes, (s + 1) * group_bytes)
-        ps = p[:, sl]
+        ps = p[:, s * group_bytes:(s + 1) * group_bytes]
         acc32 = None
         plane = 0
-        for f in range(fpb):
-            code = (ps >> (f * field_bits)) & mask
-            for i in range(g):
-                d16 = (code // (b ** (g - 1 - i))) % b
+        for code in _unit_codes(ps, cb, ub, cpu):
+            for d16 in _code_digits(code, b, g):
                 d = d16.astype(jnp.int8) - offset
+                xs = x_refs[plane][:, s * gu:(s + 1) * gu]
                 part = jax.lax.dot_general(
-                    x_refs[plane][:, sl], d,
-                    (((1,), (1,)), ((), ())),
+                    xs, d, (((1,), (1,)), ((), ())),
                     preferred_element_type=jnp.int32,
                 )
                 acc32 = part if acc32 is None else acc32 + part
@@ -179,7 +349,8 @@ def _elut_mad_grouped_kernel(*refs, b: int, g: int, field_bits: int,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "b", "g", "field_bits", "group_bytes", "bn", "bm", "bkc", "interpret"))
+    "b", "g", "field_bits", "code_bits", "group_bytes", "bn", "bm", "bkc",
+    "interpret"))
 def elut_matmul_grouped(
     x_planes: tuple,
     packed: jax.Array,
@@ -189,35 +360,38 @@ def elut_matmul_grouped(
     g: int,
     field_bits: int,
     group_bytes: int,
+    code_bits: int = 0,
     bn: int = 128,
     bm: int = 128,
     bkc: int = 128,
     interpret: bool = False,
 ) -> jax.Array:
     """Grouped-scale variant of :func:`elut_matmul`.  scales: fp32
-    [K/G, M] group-major scale plane (G = group_bytes · wpb weight columns
-    per group).  Returns fp32 [N, M] with the weight scales applied (the
-    wrapper multiplies the activation scale).
+    [K/G, M] group-major scale plane (G = group_bytes/unit_bytes · wpu
+    weight columns per group).  Returns fp32 [N, M] with the weight scales
+    applied (the wrapper multiplies the activation scale).
 
     Requires bkc % group_bytes == 0 (K blocks cover whole scale groups) on
     top of the :func:`elut_matmul` tiling contract.
     """
-    if bkc % group_bytes != 0:
+    cb, ub, cpu = _unit_params(field_bits, code_bits)
+    if bkc % group_bytes or group_bytes % ub:
         raise ValueError(
-            f"bkc={bkc} must cover whole scale groups of {group_bytes} bytes")
-    n, kb = x_planes[0].shape
-    m = packed.shape[0]
+            f"bkc={bkc} must cover whole scale groups of {group_bytes} "
+            f"bytes of whole {ub}-byte units")
+    n, _ = x_planes[0].shape
+    m, kb = packed.shape
     grid = (n // bn, m // bm, kb // bkc)
     gpb = bkc // group_bytes  # scale groups per K block
 
-    x_spec = pl.BlockSpec((bn, bkc), lambda i, j, k: (i, k))
+    x_spec = pl.BlockSpec((bn, bkc // ub), lambda i, j, k: (i, k))
     p_spec = pl.BlockSpec((bm, bkc), lambda i, j, k: (j, k))
     s_spec = pl.BlockSpec((gpb, bm), lambda i, j, k: (k, j))
     o_spec = pl.BlockSpec((bn, bm), lambda i, j, k: (i, j))
 
     return pl.pallas_call(
-        functools.partial(_elut_mad_grouped_kernel, b=b, g=g,
-                          field_bits=field_bits, group_bytes=group_bytes),
+        functools.partial(_elut_mad_grouped_kernel, b=b, g=g, cb=cb, ub=ub,
+                          cpu=cpu, group_bytes=group_bytes),
         grid=grid,
         in_specs=[x_spec] * len(x_planes) + [p_spec, s_spec],
         out_specs=o_spec,
@@ -231,7 +405,40 @@ def elut_matmul_grouped(
 # ---------------------------------------------------------------------------
 
 
-def _elut_gemv_kernel(*refs, n_entries: int, field_bits: int, lossless: bool):
+def _gemv_block_acc(codes_list, lut_refs, row_slice, n_entries: int,
+                    lossless: bool):
+    """Compare-and-accumulate lookup over one byte range.
+
+    codes_list: per-code-slot [bm, units] code arrays; lut_refs[c] rows
+    ``row_slice`` hold the tables of those groups.  Returns the finished
+    (acc_lo, acc_hi) int32 pair (acc_hi is None when lossy).
+    """
+    acc_lo = None
+    acc_hi = None
+    for codes, lut_ref in zip(codes_list, lut_refs):
+        lut = lut_ref[...][row_slice, :]          # [units, C] int32
+        for c in range(n_entries):
+            m01 = (codes == c).astype(jnp.int8)   # [bm, units]
+            col = lut[:, c]                        # [units]
+            if lossless:
+                # pack-and-unpack: two int8-range lookups, exact recombine
+                col_lo = (col & 0xFF).astype(jnp.int32)   # unsigned low byte
+                col_hi = (col >> 8).astype(jnp.int32)     # arithmetic high
+                part_lo = jnp.dot(m01.astype(jnp.int32), col_lo,
+                                  preferred_element_type=jnp.int32)
+                part_hi = jnp.dot(m01.astype(jnp.int32), col_hi,
+                                  preferred_element_type=jnp.int32)
+                acc_lo = part_lo if acc_lo is None else acc_lo + part_lo
+                acc_hi = part_hi if acc_hi is None else acc_hi + part_hi
+            else:
+                part = jnp.dot(m01.astype(jnp.int32), col,
+                               preferred_element_type=jnp.int32)
+                acc_lo = part if acc_lo is None else acc_lo + part
+    return acc_lo, acc_hi
+
+
+def _elut_gemv_kernel(*refs, n_entries: int, cb: int, ub: int, cpu: int,
+                      lossless: bool):
     *lut_refs, p_ref, out_ref = refs
     k = pl.program_id(1)
 
@@ -239,70 +446,134 @@ def _elut_gemv_kernel(*refs, n_entries: int, field_bits: int, lossless: bool):
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    fpb = 8 // field_bits
-    mask = (1 << field_bits) - 1
-    p = p_ref[...].astype(jnp.int16)  # [bm, gb/fpb] packed code bytes
-    acc = out_ref[...]
-    for f, lut_ref in enumerate(lut_refs):
-        codes = (p >> (f * field_bits)) & mask   # codes of field-f groups
-        lut = lut_ref[...]                       # [gb/fpb, C] int32 (int16 range)
-        for c in range(n_entries):
-            m01 = (codes == c).astype(jnp.int8)              # [bm, gb/fpb]
-            col = lut[:, c]                                   # [gb/fpb]
-            if lossless:
-                # pack-and-unpack: two int8-range lookups, recombined exactly.
-                col_lo = (col & 0xFF).astype(jnp.int32)       # unsigned low byte
-                col_hi = (col >> 8).astype(jnp.int32)         # arithmetic high
-                acc_lo = jnp.dot(m01.astype(jnp.int32), col_lo,
-                                 preferred_element_type=jnp.int32)
-                acc_hi = jnp.dot(m01.astype(jnp.int32), col_hi,
-                                 preferred_element_type=jnp.int32)
-                acc = acc + (acc_hi * 256 + acc_lo)[:, None]
-            else:
-                acc = acc + jnp.dot(
-                    m01.astype(jnp.int32), col,
-                    preferred_element_type=jnp.int32,
-                )[:, None]
-    out_ref[...] = acc
+    codes_list = _unit_codes(p_ref[...], cb, ub, cpu)
+    acc_lo, acc_hi = _gemv_block_acc(
+        codes_list, lut_refs, slice(None), n_entries, lossless)
+    y32 = (acc_hi * 256 + acc_lo) if lossless else acc_lo
+    out_ref[...] += y32[:, None]
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "n_entries", "field_bits", "bm", "byte_blk", "lossless", "interpret"))
+    "n_entries", "field_bits", "code_bits", "bm", "byte_blk", "lossless",
+    "interpret"))
 def elut_lut_gemv(
     lut_planes: tuple,
     packed: jax.Array,
     *,
     n_entries: int,
     field_bits: int,
+    code_bits: int = 0,
     bm: int = 128,
     byte_blk: int = 128,
     lossless: bool = True,
     interpret: bool = False,
 ) -> jax.Array:
-    """lut_planes: fpb × int32 [G/fpb, C] — the eLUT deinterleaved by packed
-    field position (for tl1's 2-per-byte nibbles these are the even/odd group
-    tables; a byte-wide code has a single table); packed: uint8 [M, G/fpb]
-    code bytes (G = K/g groups).  Returns int32 [M, 1].
+    """lut_planes: codes_per_unit × int32 [G/cpu, C] — the eLUT
+    deinterleaved by code slot within the decode unit (for tl1's
+    2-per-byte nibbles these are the even/odd group tables; int3_bc's
+    3-byte unit has 4); packed: uint8 [M, n_bytes] code bytes
+    (n_bytes = G/cpu · unit_bytes).  Returns int32 [M, 1].
 
-    Requires M % bm == 0 and (G/fpb) % byte_blk == 0.
+    Requires M % bm == 0 and n_bytes % byte_blk == 0 with byte_blk a
+    multiple of unit_bytes.
     """
-    m = packed.shape[0]
-    n_bytes = packed.shape[1]
+    cb, ub, cpu = _unit_params(field_bits, code_bits)
+    m, n_bytes = packed.shape
+    if byte_blk % ub or n_bytes % byte_blk:
+        raise ValueError(
+            f"byte_blk={byte_blk} must be a unit-aligned divisor of {n_bytes}")
     grid = (m // bm, n_bytes // byte_blk)
 
-    lut_spec = pl.BlockSpec((byte_blk, n_entries), lambda i, k: (k, 0))
+    lut_spec = pl.BlockSpec((byte_blk // ub, n_entries), lambda i, k: (k, 0))
     p_spec = pl.BlockSpec((bm, byte_blk), lambda i, k: (i, k))
     o_spec = pl.BlockSpec((bm, 1), lambda i, k: (i, 0))
 
     return pl.pallas_call(
-        functools.partial(_elut_gemv_kernel, n_entries=n_entries,
-                          field_bits=field_bits, lossless=lossless),
+        functools.partial(_elut_gemv_kernel, n_entries=n_entries, cb=cb,
+                          ub=ub, cpu=cpu, lossless=lossless),
         grid=grid,
         in_specs=[lut_spec] * len(lut_planes) + [p_spec],
         out_specs=o_spec,
         out_shape=jax.ShapeDtypeStruct((m, 1), jnp.int32),
         interpret=interpret,
     )(*lut_planes, packed)
+
+
+def _elut_gemv_skip_kernel(*refs, n_entries: int, cb: int, ub: int, cpu: int,
+                           lossless: bool, block_bytes: int):
+    *lut_refs, p_ref, occ_ref, out_ref = refs
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    p = p_ref[...]
+    occ = occ_ref[...]                    # [bm, blocks in this byte step]
+    bu = block_bytes // ub                # LUT rows (units) per block
+    for blk in range(p.shape[1] // block_bytes):
+
+        @pl.when(jnp.any(occ[:, blk] != 0))
+        def _live(blk=blk):
+            ps = p[:, blk * block_bytes:(blk + 1) * block_bytes]
+            codes_list = _unit_codes(ps, cb, ub, cpu)
+            acc_lo, acc_hi = _gemv_block_acc(
+                codes_list, lut_refs, slice(blk * bu, (blk + 1) * bu),
+                n_entries, lossless)
+            y32 = (acc_hi * 256 + acc_lo) if lossless else acc_lo
+            out_ref[...] += y32[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_entries", "field_bits", "code_bits", "block_bytes", "bm", "byte_blk",
+    "lossless", "interpret"))
+def elut_lut_gemv_skip(
+    lut_planes: tuple,
+    packed: jax.Array,
+    occ: jax.Array,
+    *,
+    n_entries: int,
+    field_bits: int,
+    block_bytes: int,
+    code_bits: int = 0,
+    bm: int = 128,
+    byte_blk: int = 128,
+    lossless: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    """Zero-skip variant of :func:`elut_lut_gemv`.  occ: uint8
+    [M, n_bytes/block_bytes] occupancy plane.  Returns int32 [M, 1],
+    bit-identical to the dense walk: in a skipped block every code is the
+    all-zero-digit code, whose eLUT entry is dot(a, 0) = 0, so the dense
+    walk would add exactly 0 there (DESIGN.md §11).
+
+    Requires byte_blk % block_bytes == 0 on top of the
+    :func:`elut_lut_gemv` tiling contract.
+    """
+    cb, ub, cpu = _unit_params(field_bits, code_bits)
+    if byte_blk % block_bytes or block_bytes % ub:
+        raise ValueError(
+            f"byte_blk={byte_blk} must cover whole {block_bytes}-byte "
+            f"occupancy blocks of whole {ub}-byte units")
+    m, n_bytes = packed.shape
+    grid = (m // bm, n_bytes // byte_blk)
+    opb = byte_blk // block_bytes  # occupancy blocks per byte step
+
+    lut_spec = pl.BlockSpec((byte_blk // ub, n_entries), lambda i, k: (k, 0))
+    p_spec = pl.BlockSpec((bm, byte_blk), lambda i, k: (i, k))
+    z_spec = pl.BlockSpec((bm, opb), lambda i, k: (i, k))
+    o_spec = pl.BlockSpec((bm, 1), lambda i, k: (i, 0))
+
+    return pl.pallas_call(
+        functools.partial(_elut_gemv_skip_kernel, n_entries=n_entries, cb=cb,
+                          ub=ub, cpu=cpu, lossless=lossless,
+                          block_bytes=block_bytes),
+        grid=grid,
+        in_specs=[lut_spec] * len(lut_planes) + [p_spec, z_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((m, 1), jnp.int32),
+        interpret=interpret,
+    )(*lut_planes, packed, occ)
 
 
 # ---------------------------------------------------------------------------
@@ -316,8 +587,8 @@ def elut_lut_gemv(
 # ---------------------------------------------------------------------------
 
 
-def _elut_gemv_grouped_kernel(*refs, n_entries: int, field_bits: int,
-                              lossless: bool, group_bytes: int):
+def _elut_gemv_grouped_kernel(*refs, n_entries: int, cb: int, ub: int,
+                              cpu: int, lossless: bool, group_bytes: int):
     *lut_refs, p_ref, s_ref, out_ref = refs
     k = pl.program_id(1)
 
@@ -325,43 +596,23 @@ def _elut_gemv_grouped_kernel(*refs, n_entries: int, field_bits: int,
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    fpb = 8 // field_bits
-    mask = (1 << field_bits) - 1
-    p = p_ref[...].astype(jnp.int16)  # [bm, byte_blk] packed code bytes
+    p = p_ref[...]
+    gu = group_bytes // ub                # LUT rows (units) per scale group
     acc = out_ref[...]
     for s in range(p.shape[1] // group_bytes):
-        sl = slice(s * group_bytes, (s + 1) * group_bytes)
-        ps = p[:, sl]
-        acc_lo = None   # int32 per-group accumulators (exact)
-        acc_hi = None
-        for f, lut_ref in enumerate(lut_refs):
-            codes = (ps >> (f * field_bits)) & mask
-            lut = lut_ref[...][sl, :]           # [group_bytes, C] int32
-            for c in range(n_entries):
-                m01 = (codes == c).astype(jnp.int8)      # [bm, group_bytes]
-                col = lut[:, c]                           # [group_bytes]
-                if lossless:
-                    # pack-and-unpack: two int8-range lookups, exact recombine
-                    col_lo = (col & 0xFF).astype(jnp.int32)
-                    col_hi = (col >> 8).astype(jnp.int32)
-                    part_lo = jnp.dot(m01.astype(jnp.int32), col_lo,
-                                      preferred_element_type=jnp.int32)
-                    part_hi = jnp.dot(m01.astype(jnp.int32), col_hi,
-                                      preferred_element_type=jnp.int32)
-                    acc_lo = part_lo if acc_lo is None else acc_lo + part_lo
-                    acc_hi = part_hi if acc_hi is None else acc_hi + part_hi
-                else:
-                    part = jnp.dot(m01.astype(jnp.int32), col,
-                                   preferred_element_type=jnp.int32)
-                    acc_lo = part if acc_lo is None else acc_lo + part
+        ps = p[:, s * group_bytes:(s + 1) * group_bytes]
+        codes_list = _unit_codes(ps, cb, ub, cpu)
+        acc_lo, acc_hi = _gemv_block_acc(
+            codes_list, lut_refs, slice(s * gu, (s + 1) * gu),
+            n_entries, lossless)
         y32 = (acc_hi * 256 + acc_lo) if lossless else acc_lo  # [bm] int32
         acc = acc + y32.astype(jnp.float32)[:, None] * s_ref[s, :][:, None]
     out_ref[...] = acc
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "n_entries", "field_bits", "group_bytes", "bm", "byte_blk", "lossless",
-    "interpret"))
+    "n_entries", "field_bits", "code_bits", "group_bytes", "bm", "byte_blk",
+    "lossless", "interpret"))
 def elut_lut_gemv_grouped(
     lut_planes: tuple,
     packed: jax.Array,
@@ -370,37 +621,38 @@ def elut_lut_gemv_grouped(
     n_entries: int,
     field_bits: int,
     group_bytes: int,
+    code_bits: int = 0,
     bm: int = 128,
     byte_blk: int = 128,
     lossless: bool = True,
     interpret: bool = False,
 ) -> jax.Array:
     """Grouped-scale variant of :func:`elut_lut_gemv`.  scales: fp32
-    [K/G, M] group-major scale plane (G = group_bytes · wpb weight columns).
-    Returns fp32 [M, 1] with the weight scales applied; the wrapper
-    multiplies the activation scale (and the lossy table scale, which is
-    global and therefore commutes out of the group sum).
+    [K/G, M] group-major scale plane (G = group_bytes/unit_bytes · wpu
+    weight columns).  Returns fp32 [M, 1] with the weight scales applied;
+    the wrapper multiplies the activation scale (and the lossy table scale,
+    which is global and therefore commutes out of the group sum).
 
     Requires byte_blk % group_bytes == 0 on top of the
     :func:`elut_lut_gemv` tiling contract.
     """
-    if byte_blk % group_bytes != 0:
+    cb, ub, cpu = _unit_params(field_bits, code_bits)
+    if byte_blk % group_bytes or group_bytes % ub:
         raise ValueError(
             f"byte_blk={byte_blk} must cover whole scale groups of "
-            f"{group_bytes} bytes")
-    m = packed.shape[0]
-    n_bytes = packed.shape[1]
+            f"{group_bytes} bytes of whole {ub}-byte units")
+    m, n_bytes = packed.shape
     grid = (m // bm, n_bytes // byte_blk)
     gpb = byte_blk // group_bytes  # scale groups per byte block
 
-    lut_spec = pl.BlockSpec((byte_blk, n_entries), lambda i, k: (k, 0))
+    lut_spec = pl.BlockSpec((byte_blk // ub, n_entries), lambda i, k: (k, 0))
     p_spec = pl.BlockSpec((bm, byte_blk), lambda i, k: (i, k))
     s_spec = pl.BlockSpec((gpb, bm), lambda i, k: (k, i))
     o_spec = pl.BlockSpec((bm, 1), lambda i, k: (i, 0))
 
     return pl.pallas_call(
         functools.partial(_elut_gemv_grouped_kernel, n_entries=n_entries,
-                          field_bits=field_bits, lossless=lossless,
+                          cb=cb, ub=ub, cpu=cpu, lossless=lossless,
                           group_bytes=group_bytes),
         grid=grid,
         in_specs=[lut_spec] * len(lut_planes) + [p_spec, s_spec],
@@ -408,3 +660,103 @@ def elut_lut_gemv_grouped(
         out_shape=jax.ShapeDtypeStruct((m, 1), jnp.float32),
         interpret=interpret,
     )(*lut_planes, packed, scales.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# TL2 mirror-consolidated layout, folded into the parametric family
+# (paper §3.1, Algorithm 4, TPU-adapted; formerly kernels/tl2_matmul.py).
+#
+# Contract: y_int32[N, M] = x_q[N, K] (int8) · W_t[M, K]^T, with W stored at
+# **1.67 bpw**: a 4-bit index plane + a 1-bit sign plane per group of 3
+# ternary weights (element-wise mirror consolidation + signed-unsigned
+# weight splitting, paper §3.1.1–3.1.2), in the ``tl2k`` kernel layout
+# (``repro.core.packing.tl2k_pack``).
+#
+# Decode per K-tile of G groups (all static lane slices, no interleaves):
+#
+#     lo = idx & 0xF          # indices of groups [0, G/2)
+#     hi = idx >> 4           # indices of groups [G/2, G)
+#     for bit in 0..7:        # sign plane bit covers groups [bit·G/8, …)
+#         s   = (sign >> bit) & 1                     # [bm, G/8]
+#         i_b = (lo | hi)[:, lane slice for bit]      # [bm, G/8]
+#         v   = i_b·(1 - 2s) + 26·s                   # mirror decode (Eq. 5)
+#         d0, d1, d2 = base-3 digits of v             # _code_digits(v, 3, 3)
+#         acc += x0_b·d0ᵀ + x1_b·d1ᵀ + x2_b·d2ᵀ       # int8 MXU dots
+#
+# The group value v ∈ 0..26 is just a base-3 g=3 code, so the digit decode
+# is the family's shared ``_code_digits`` — tl2 differs from the plain
+# code-plane formats only in how the code array is *assembled* (mirror
+# index + sign instead of packed fields).  The paper's 9/14-entry `vpshufb`
+# tables have no TPU analogue (DESIGN.md §2); arithmetic decode replaces
+# them while preserving the 1.67 bpw HBM format.
+# ---------------------------------------------------------------------------
+
+
+def _tl2_mirror_kernel(x0, x1, x2, idx_ref, sign_ref, out_ref, *, g_tile: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    idx = idx_ref[...].astype(jnp.int16)   # [bm, G/2] packed nibbles
+    sign = sign_ref[...]                   # [bm, G/8] packed sign bits (uint8)
+    lo = idx & 0xF
+    hi = (idx >> 4) & 0xF
+    w8 = g_tile // 8
+    acc = out_ref[...]
+    for b in range(8):
+        s = ((sign >> b) & 1).astype(jnp.int16)                 # [bm, G/8]
+        half = lo if b < 4 else hi
+        off = (b % 4) * w8
+        i_b = jax.lax.slice_in_dim(half, off, off + w8, axis=1)  # [bm, G/8]
+        v = i_b * (1 - 2 * s) + 26 * s                           # 0..26
+        lane0 = b * w8
+        for x_ref, d16 in zip((x0, x1, x2), _code_digits(v, 3, 3)):
+            d = d16.astype(jnp.int8) - 1
+            xb = jax.lax.slice_in_dim(x_ref[...], lane0, lane0 + w8, axis=1)
+            acc = acc + jax.lax.dot_general(
+                xb, d, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.int32,
+            )
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bm", "g_tile", "interpret"))
+def tl2_mirror_matmul(
+    x_planes: tuple[jax.Array, jax.Array, jax.Array],
+    idx_plane: jax.Array,
+    sign_plane: jax.Array,
+    *,
+    bn: int = 128,
+    bm: int = 128,
+    g_tile: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """x_planes: 3 × int8 [N, K/3] (digit-deinterleaved, tile order);
+    idx_plane: uint8 [M, K/6]; sign_plane: uint8 [M, K/24] (tl2k layout).
+
+    Returns int32 [N, M].  One grid k-step covers one g_tile-group K-tile
+    (3·g_tile weights); VMEM per step ≈ bm·g_tile·(1/2 + 1/8) packed bytes +
+    3·bn·g_tile activation bytes + bn·bm·4 accumulator bytes.
+
+    K handling: requires K % (3·g_tile) == 0; general K uses block-fitting
+    weight splitting (paper §3.1.2) — ops.py routes the tail through tl1.
+    """
+    n, g_total = x_planes[0].shape
+    m = idx_plane.shape[0]
+    grid = (n // bn, m // bm, g_total // g_tile)
+
+    x_spec = pl.BlockSpec((bn, g_tile), lambda i, j, k: (i, k))
+    i_spec = pl.BlockSpec((bm, g_tile // 2), lambda i, j, k: (j, k))
+    s_spec = pl.BlockSpec((bm, g_tile // 8), lambda i, j, k: (j, k))
+    o_spec = pl.BlockSpec((bn, bm), lambda i, j, k: (i, j))
+
+    return pl.pallas_call(
+        functools.partial(_tl2_mirror_kernel, g_tile=g_tile),
+        grid=grid,
+        in_specs=[x_spec, x_spec, x_spec, i_spec, s_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.int32),
+        interpret=interpret,
+    )(*x_planes, idx_plane, sign_plane)

@@ -5,12 +5,18 @@ rows are exact no-ops), deinterleave activations into digit planes, dispatch
 on the PackedWeight's :class:`repro.core.formats.FormatSpec`, and apply the
 (s_x · s_w) rescale.  The kernels themselves only ever see aligned tiles.
 
-Every plain code-plane format (``spec.elut``: i2s, tl1, int2, int3, …) runs
-the parametric :mod:`repro.kernels.elut_matmul` family — its kernel bodies
-are generated from the spec's ``(base, group, field_bits)``; there are no
-per-format kernel files.  tl2k keeps its mirror-consolidated sign+index
-kernel (``tl2_matmul``), with the block-fitting TwoK tail routed through the
-ternary ELUT instance.
+Every plain code-plane format (``spec.elut``: i2s, tl1, int2, int3, the
+bit-contiguous ``_bc`` and zero-occupancy ``_z`` variants, …) runs the
+parametric :mod:`repro.kernels.elut_matmul` family — its kernel bodies are
+generated from the spec's ``(base, group, code width)``; there are no
+per-format kernel files.  tl2k's mirror-consolidated sign+index kernel is
+the ``tl2_mirror_matmul`` member of the same family, with the block-fitting
+TwoK tail routed through the ternary ELUT instance.
+
+Formats with an occupancy plane (``spec.occ_block``) route to the
+``*_skip`` kernels, which consult the plane to skip all-zero K-blocks —
+bit-identical to the dense walk (DESIGN.md §11); pass ``zero_skip=False``
+to force the dense walk (the bench uses this for skip-vs-dense A/B).
 
 ``interpret`` defaults to True off-TPU (the kernel body runs in Python on
 CPU for validation); on a real TPU backend it compiles to Mosaic.
@@ -25,9 +31,10 @@ from repro.core import formats
 from repro.core.qtensor import PackedWeight
 from repro.kernels.act_quant import act_quant as _act_quant
 from repro.kernels.elut_matmul import (elut_lut_gemv, elut_lut_gemv_grouped,
-                                       elut_matmul, elut_matmul_grouped)
+                                       elut_lut_gemv_skip, elut_matmul,
+                                       elut_matmul_grouped, elut_matmul_skip,
+                                       tl2_mirror_matmul)
 from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
-from repro.kernels.tl2_matmul import tl2_matmul
 
 
 def _default_interpret() -> bool:
@@ -67,8 +74,14 @@ def mpgemm_pallas(
     pw: PackedWeight,
     *,
     interpret: bool | None = None,
+    zero_skip: bool = True,
 ) -> jax.Array:
-    """int8 [..., K] × PackedWeight [M, K] -> fp32 [..., M] (fused decode kernels)."""
+    """int8 [..., K] × PackedWeight [M, K] -> fp32 [..., M] (fused decode kernels).
+
+    ``zero_skip=False`` forces the dense K walk for occupancy (``_z``)
+    formats — the outputs are bit-identical either way; the flag only
+    exists so the bench can time skip vs dense on the same operands.
+    """
     if interpret is None:
         interpret = _default_interpret()
     lead = x_q.shape[:-1]
@@ -82,7 +95,10 @@ def mpgemm_pallas(
         yf = _elut_mad_grouped(x2, pw.planes["p"], pw.scale, m, spec, interpret)
         y = yf * jnp.asarray(s_x, jnp.float32)
         return y.reshape(*lead, m)
-    if spec.elut:
+    if spec.elut and spec.occ_block and zero_skip:
+        y32 = _elut_mad_skip(x2, pw.planes["p"], pw.planes["occ"], m, spec,
+                             interpret)
+    elif spec.elut:
         y32 = _elut_mad(x2, pw.planes["p"], m, spec, interpret)
     elif pw.fmt == "tl2k":
         y32 = _tl2k(x2, pw, interpret)
@@ -93,16 +109,44 @@ def mpgemm_pallas(
     return y.reshape(*lead, m)
 
 
+def _unit_blk(block: int, ub: int, kb: int) -> int:
+    """Largest K byte-block ≤ ~``block`` covering whole ``ub``-byte units."""
+    return ub * _pick(max(1, block // ub), kb // ub)
+
+
+def _block_bytes(spec) -> int:
+    """Packed bytes per occupancy block (occ_block weight columns)."""
+    return spec.occ_block // spec.weights_per_unit * spec.unit_bytes
+
+
 def _elut_mad(x2, packed, m, spec, interpret):
-    wpb = spec.weights_per_byte
+    wpu = spec.weights_per_unit
     bn = _pick(128, ((x2.shape[0] + 127) // 128) * 128)
     x2p, n = _pad_rows(x2, bn)
-    planes = _deinterleave(x2p, wpb)
-    kb = planes[0].shape[1]
+    planes = _deinterleave(x2p, wpu)
+    kb = packed.shape[1]
     y = elut_matmul(
         planes, packed,
         b=spec.base, g=spec.group, field_bits=spec.field_bits,
-        bn=bn, bm=_pick(128, m), bkc=_pick(128, kb),
+        code_bits=spec.code_bits,
+        bn=bn, bm=_pick(128, m), bkc=_unit_blk(128, spec.unit_bytes, kb),
+        interpret=interpret,
+    )
+    return y[:n]
+
+
+def _elut_mad_skip(x2, packed, occ, m, spec, interpret):
+    wpu = spec.weights_per_unit
+    bb = _block_bytes(spec)
+    bn = _pick(128, ((x2.shape[0] + 127) // 128) * 128)
+    x2p, n = _pad_rows(x2, bn)
+    planes = _deinterleave(x2p, wpu)
+    kb = packed.shape[1]
+    y = elut_matmul_skip(
+        planes, packed, occ,
+        b=spec.base, g=spec.group, field_bits=spec.field_bits,
+        code_bits=spec.code_bits, block_bytes=bb,
+        bn=bn, bm=_pick(128, m), bkc=_unit_blk(128, bb, kb),
         interpret=interpret,
     )
     return y[:n]
@@ -114,16 +158,16 @@ def _group_blk(block: int, group_bytes: int, n_groups: int) -> int:
 
 
 def _elut_mad_grouped(x2, packed, scales, m, spec, interpret):
-    wpb = spec.weights_per_byte
-    group_bytes = spec.group_scale_cols // wpb
+    wpu = spec.weights_per_unit
+    group_bytes = spec.group_scale_cols // wpu * spec.unit_bytes
     bn = _pick(128, ((x2.shape[0] + 127) // 128) * 128)
     x2p, n = _pad_rows(x2, bn)
-    planes = _deinterleave(x2p, wpb)
-    kb = planes[0].shape[1]
+    planes = _deinterleave(x2p, wpu)
+    kb = packed.shape[1]
     y = elut_matmul_grouped(
         planes, packed, scales,
         b=spec.base, g=spec.group, field_bits=spec.field_bits,
-        group_bytes=group_bytes,
+        code_bits=spec.code_bits, group_bytes=group_bytes,
         bn=bn, bm=_pick(128, m),
         bkc=_group_blk(128, group_bytes, kb // group_bytes),
         interpret=interpret,
@@ -144,7 +188,7 @@ def _tl2k(x2, pw, interpret):
         bn = _pick(128, ((x2.shape[0] + 127) // 128) * 128)
         x3, n = _pad_rows(x2[:, : pw.three_k], bn)
         planes = _tri_planes(x3)
-        y = tl2_matmul(
+        y = tl2_mirror_matmul(
             planes, pw.planes["idx"], pw.planes["sign"],
             bn=bn, bm=_pick(128, pw.m), g_tile=gt,
             interpret=interpret,
@@ -175,6 +219,7 @@ def lut_gemv(
     *,
     lossless: bool = True,
     interpret: bool | None = None,
+    zero_skip: bool = True,
 ) -> jax.Array:
     """True-LUT decode GEMV: int8 [..., K] × ELUT-format [M, K] -> fp32 [..., M].
 
@@ -224,16 +269,16 @@ def lut_gemv(
     s_lut = jnp.float32(1.0)
     if not lossless:
         lut, s_lut = elut.quantize_lut(lut)
-    fpb = 8 // spec.field_bits
-    lut_planes = tuple(lut[f::fpb] for f in range(fpb))
+    cpu = spec.codes_per_unit
+    lut_planes = tuple(lut[c::cpu] for c in range(cpu))
     m = pw.m
     n_bytes = pw.planes["p"].shape[1]
     if spec.group_scale_cols:
-        group_bytes = spec.group_scale_cols // spec.weights_per_byte
+        group_bytes = spec.group_scale_cols // spec.weights_per_unit * spec.unit_bytes
         yf = elut_lut_gemv_grouped(
             lut_planes, pw.planes["p"], pw.scale,
             n_entries=spec.lut_size, field_bits=spec.field_bits,
-            group_bytes=group_bytes,
+            code_bits=spec.code_bits, group_bytes=group_bytes,
             bm=_pick(128, m),
             byte_blk=_group_blk(128, group_bytes, n_bytes // group_bytes),
             lossless=lossless, interpret=interpret,
@@ -241,12 +286,23 @@ def lut_gemv(
         # the lossy table scale is global, so it commutes out of the group sum
         y = yf * (s_lut * s_x.reshape(()))
         return y.reshape(*lead, m)
-    y32 = elut_lut_gemv(
-        lut_planes, pw.planes["p"],
-        n_entries=spec.lut_size, field_bits=spec.field_bits,
-        bm=_pick(128, m), byte_blk=_pick(128, n_bytes),
-        lossless=lossless, interpret=interpret,
-    )[:, 0]
+    if spec.occ_block and zero_skip:
+        bb = _block_bytes(spec)
+        y32 = elut_lut_gemv_skip(
+            lut_planes, pw.planes["p"], pw.planes["occ"],
+            n_entries=spec.lut_size, field_bits=spec.field_bits,
+            code_bits=spec.code_bits, block_bytes=bb,
+            bm=_pick(128, m), byte_blk=_unit_blk(128, bb, n_bytes),
+            lossless=lossless, interpret=interpret,
+        )[:, 0]
+    else:
+        y32 = elut_lut_gemv(
+            lut_planes, pw.planes["p"],
+            n_entries=spec.lut_size, field_bits=spec.field_bits,
+            code_bits=spec.code_bits,
+            bm=_pick(128, m), byte_blk=_unit_blk(128, spec.unit_bytes, n_bytes),
+            lossless=lossless, interpret=interpret,
+        )[:, 0]
     y = y32.astype(jnp.float32) * (s_lut * s_x.reshape(()) * pw.scale)
     return y.reshape(*lead, m)
 

@@ -65,14 +65,17 @@ def _keyset(decisions) -> collections.Counter:
     return collections.Counter(decision_key(d) for d in decisions)
 
 
-def predicted_us(key: tuple) -> float:
+def predicted_us(key: tuple, occupancy: float = 1.0) -> float:
     kernel, fmt, m, k, nb = key
-    return dispatch.REGISTRY[kernel].cost(fmt, nb, k, m)
+    return dispatch.REGISTRY[kernel].cost(fmt, nb, k, m, occupancy)
 
 
-def predicted_hbm_bytes(key: tuple) -> float:
+def predicted_hbm_bytes(key: tuple, occupancy: float = 1.0) -> float:
+    """``occupancy`` = the weight's nonzero-block fraction
+    (``PackedWeight.occupancy()``): zero-skip kernels on ``_z`` formats
+    stream proportionally fewer code-plane bytes (DESIGN.md §11)."""
     kernel, fmt, m, k, nb = key
-    return dispatch.REGISTRY[kernel].hbm_bytes(fmt, nb, k, m)
+    return dispatch.REGISTRY[kernel].hbm_bytes(fmt, nb, k, m, occupancy)
 
 
 @dataclasses.dataclass

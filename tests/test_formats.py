@@ -96,7 +96,8 @@ def test_format_spec_derived_quantities():
     assert tl2.lut_size == 14                            # folded mirror table
     assert tl2.mxu_inflation == pytest.approx(14 / 3)
     assert formats.lut_gemv_formats() == (
-        "tl1", "int2", "int3", "tl1_g128", "int2_g128", "int3_g128")
+        "tl1", "int2", "int3", "tl1_g128", "int2_g128", "int3_g128",
+        "int3_bc", "tl1_z", "int3_bc_z")
     assert not formats.get("i2s").supports_lut_gemv()    # g=1: no table win
     assert not formats.get("i2s_g128").supports_lut_gemv()
     # grouped variants: same (b, g) napkin math, +32/G bpw for the scale plane

@@ -1,0 +1,189 @@
+"""Zero-occupancy skip walk + bit-contiguous packing (DESIGN.md §11).
+
+Three contracts on top of the generic conformance harness (which already
+runs every registered kernel on the ``_bc``/``_z`` formats against the fp64
+oracle at atol=0):
+
+  (a) skip ≡ dense, bit for bit, on mixed zero/nonzero and all-zero weight
+      columns — for the MAD GEMM path AND the true-LUT GEMV path;
+  (b) the bit-contiguous stream really is bit-contiguous: int3_bc packs at
+      3.0 bpw (≤ 3.2 with occupancy metadata), codes round-trip, and the
+      unit math matches the documented 3-byte/4-code/8-weight layout;
+  (c) the dispatch cost hints see occupancy: skip-kernel hints scale with
+      the nonzero-block fraction, other kernels ignore it.
+
+Plus the tl2-fold regression: the mirror-consolidated kernel now living in
+``elut_matmul.py`` must stay bit-identical to the XLA int32 reference — the
+exact contract the retired ``kernels/tl2_matmul.py`` was pinned to.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dispatch, formats, packing
+from repro.core.qtensor import pack_quantized, pack_ternary, unpack_weight
+from repro.kernels import ops, ref
+
+INTERPRET = True  # CPU container: kernel bodies execute in Python
+
+OCC = formats.OCC_BLOCK_COLS
+
+
+def _zero_columns(w: np.ndarray, blocks) -> np.ndarray:
+    """Zero whole OCC-column blocks across every output row (the
+    column-structured sparsity the bm-wide skip predicate can exploit)."""
+    w = w.copy()
+    for blk in blocks:
+        w[:, blk * OCC:(blk + 1) * OCC] = 0
+    return w
+
+
+def _sparse_fixture(fmt: str, n: int, k: int, m: int, blocks, seed=0):
+    spec = formats.get(fmt)
+    lo, hi = spec.levels
+    rng = np.random.default_rng(seed)
+    w = _zero_columns(
+        rng.integers(lo, hi + 1, size=(m, k)).astype(np.int8), blocks)
+    x_q = jnp.asarray(rng.integers(-127, 128, size=(n, k)), jnp.int8)
+    pw = pack_quantized(jnp.asarray(w), jnp.float32(0.5), fmt)
+    return w, pw, x_q
+
+
+# ---------------------------------------------------------------------------
+# (a) skip walk ≡ dense walk ≡ oracle, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("blocks", [(), (1, 3, 4, 6), tuple(range(8))],
+                         ids=["dense", "mixed", "all-zero"])
+@pytest.mark.parametrize("fmt", formats.occupancy_formats())
+def test_mad_skip_bit_identical_to_dense(fmt, blocks):
+    w, pw, x_q = _sparse_fixture(fmt, 5, 8 * OCC, 128, blocks)
+    y_skip = ops.mpgemm_pallas(x_q, jnp.float32(2.0), pw,
+                               interpret=INTERPRET, zero_skip=True)
+    y_dense = ops.mpgemm_pallas(x_q, jnp.float32(2.0), pw,
+                                interpret=INTERPRET, zero_skip=False)
+    np.testing.assert_array_equal(np.asarray(y_skip), np.asarray(y_dense))
+    # 0.5 · 2.0 = 1 → fp32 result equals the raw int32 accumulation exactly
+    y_ref = np.asarray(ref.mpgemm_int32(x_q, jnp.asarray(w)))
+    np.testing.assert_array_equal(np.asarray(y_skip, np.int64),
+                                  y_ref.astype(np.int64))
+
+
+@pytest.mark.parametrize("blocks", [(1, 3, 4, 6), tuple(range(8))],
+                         ids=["mixed", "all-zero"])
+@pytest.mark.parametrize("fmt", [f for f in formats.occupancy_formats()
+                                 if formats.get(f).supports_lut_gemv()])
+def test_gemv_skip_bit_identical_to_dense(fmt, blocks):
+    w, pw, x_q = _sparse_fixture(fmt, 1, 8 * OCC, 128, blocks)
+    y_skip = ops.lut_gemv(x_q, jnp.float32(2.0), pw,
+                          interpret=INTERPRET, zero_skip=True)
+    y_dense = ops.lut_gemv(x_q, jnp.float32(2.0), pw,
+                           interpret=INTERPRET, zero_skip=False)
+    np.testing.assert_array_equal(np.asarray(y_skip), np.asarray(y_dense))
+    y_ref = np.asarray(ref.mpgemm_int32(x_q, jnp.asarray(w)))
+    np.testing.assert_array_equal(np.asarray(y_skip, np.int64),
+                                  y_ref.astype(np.int64))
+
+
+def test_occupancy_map_and_measured_fraction():
+    w = np.ones((4, 4 * OCC), np.int8)
+    w[:, OCC:2 * OCC] = 0                    # block 1 dead in every row
+    w[0, 3 * OCC] = 0                        # one zero does NOT kill a block
+    occ = np.asarray(packing.occupancy_map(jnp.asarray(w), OCC))
+    assert occ.shape == (4, 4) and occ.dtype == np.uint8
+    np.testing.assert_array_equal(occ[:, 1], 0)
+    np.testing.assert_array_equal(occ[:, [0, 2, 3]], 1)
+    pw = pack_ternary(jnp.asarray(w), jnp.float32(1.0), "tl1_z")
+    assert pw.occupancy() == pytest.approx(0.75)
+    assert pack_ternary(jnp.asarray(np.ones((4, 4 * OCC), np.int8)),
+                        jnp.float32(1.0), "tl1").occupancy() == 1.0
+    with pytest.raises(ValueError, match="needs K %"):
+        packing.occupancy_map(jnp.asarray(w[:, :OCC + 8]), OCC)
+
+
+# ---------------------------------------------------------------------------
+# (b) bit-contiguous stream: layout math, bpw budget, code roundtrip
+# ---------------------------------------------------------------------------
+
+
+def test_bc_unit_math_and_registry_bpw():
+    assert packing.bc_unit(6) == (3, 4)      # int3_bc: 3-byte / 4-code unit
+    assert packing.bc_unit(4) == (1, 2)      # byte-aligned degenerates to ub=1
+    bc = formats.get("int3_bc")
+    assert (bc.code_bits, bc.unit_bytes, bc.codes_per_unit,
+            bc.weights_per_unit) == (6, 3, 4, 8)
+    assert bc.bpw == 3.0                      # true 3 bpw vs int3's 4.0
+    assert formats.get("int3").bpw == 4.0     # byte-field cost, unchanged
+    assert formats.get("tl1_z").bpw == pytest.approx(2.0 + 8 / OCC)
+    assert formats.get("int3_bc_z").bpw == pytest.approx(3.0 + 8 / OCC)
+    assert formats.occupancy_formats() == ("tl1_z", "int3_bc_z")
+
+
+def test_int3_bc_z_packs_within_bpw_budget():
+    rng = np.random.default_rng(7)
+    w = jnp.asarray(rng.integers(-4, 4, size=(128, 1024)), jnp.int8)
+    pw = pack_quantized(w, jnp.float32(1.0), "int3_bc_z")
+    assert pw.bpw() <= 3.2                    # acceptance: ≤ 3.2 incl metadata
+    assert pw.bpw() == pytest.approx(3.0 + 8 / OCC)
+    np.testing.assert_array_equal(np.asarray(unpack_weight(pw)), np.asarray(w))
+
+
+def test_bc_codes_agree_with_byte_field_codes():
+    """Same (b, g) code sequence through both layouts — the stream changes,
+    the codes must not."""
+    rng = np.random.default_rng(11)
+    w = jnp.asarray(rng.integers(-4, 4, size=(16, 64)), jnp.int8)
+    p_bc = packing.elut_pack_bc(w, 8, 2, 6)
+    p_by = packing.elut_pack(w, 8, 2, 8)
+    codes_bc = np.asarray(packing.elut_codes_bc(p_bc, 6))
+    codes_by = np.asarray(packing.elut_codes(p_by, 8))
+    np.testing.assert_array_equal(codes_bc, codes_by)
+    assert p_bc.shape[1] * 8 == 6 * codes_bc.shape[1]   # no slack bits
+    np.testing.assert_array_equal(
+        np.asarray(packing.elut_unpack_bc(p_bc, 64, 8, 2, 6)), np.asarray(w))
+
+
+# ---------------------------------------------------------------------------
+# (c) occupancy-aware cost hints
+# ---------------------------------------------------------------------------
+
+
+def test_cost_hints_scale_with_occupancy():
+    pal, xla = dispatch.REGISTRY["pallas"], dispatch.REGISTRY["xla"]
+    shape = ("tl1_z", 128, 1024, 1024)
+    assert pal.hbm_bytes(*shape, 0.25) < pal.hbm_bytes(*shape, 0.5) \
+        < pal.hbm_bytes(*shape, 1.0)
+    assert pal.cost(*shape, 0.25) < pal.cost(*shape, 1.0)
+    # occupancy metadata is always streamed: the floor is not zero
+    assert pal.hbm_bytes(*shape, 0.0) > 128 * 1024  # > activations alone
+    # non-skip kernels and non-occupancy formats ignore the hint
+    assert xla.cost(*shape, 0.25) == xla.cost(*shape, 1.0)
+    assert pal.cost("tl1", 128, 1024, 1024, 0.25) == \
+        pal.cost("tl1", 128, 1024, 1024, 1.0)
+    ex = dispatch.explain("tl1_z", 128, 1024, 1024, occupancy=0.25)
+    assert ex["occupancy"] == 0.25
+    cand = dict(ex["candidates"])
+    assert cand["pallas"] == pytest.approx(
+        dispatch.REGISTRY["pallas"].cost("tl1_z", 128, 1024, 1024, 0.25),
+        abs=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# tl2-fold regression: the parametric mirror kernel keeps the retired
+# tl2_matmul.py contract (kernel ≡ XLA int32 reference, bit for bit)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,k,m", [(8, 1536, 128), (5, 1600, 128)],
+                         ids=["pure-2k", "tl1-tail"])
+def test_tl2_fold_keeps_retired_kernel_contract(n, k, m):
+    rng = np.random.default_rng(n + k)
+    w = jnp.asarray(rng.integers(-1, 2, size=(m, k)), jnp.int8)
+    x_q = jnp.asarray(rng.integers(-127, 128, size=(n, k)), jnp.int8)
+    pw = pack_ternary(w, jnp.float32(0.5), "tl2k")
+    y = ops.mpgemm_pallas(x_q, jnp.float32(2.0), pw, interpret=INTERPRET)
+    y_ref = np.asarray(ref.mpgemm_int32(x_q, w))
+    np.testing.assert_array_equal(np.asarray(y, np.int64),
+                                  y_ref.astype(np.int64))
