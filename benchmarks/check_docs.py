@@ -83,16 +83,71 @@ def check_doc(path: str, scope: str | None = None) -> list:
     return failures
 
 
+_SHARD_ROW = re.compile(
+    r"^\|\s*(`[^|]+?)\s*\|\s*(\d+)\s*\|\s*([\d—-]+)\s*\|\s*([\d—-]+)\s*"
+    r"\|\s*(\d+)\s*\|\s*(yes|no[^|]*?)\s*\|")
+
+
+def parse_shard_rows(text: str) -> dict:
+    """{format: (k_align, weights_per_unit, occ_block, quantum, k_shardable)}
+    from the §12 alignment table ('—' cells parse as 0 / not-applicable)."""
+
+    def cell(s: str) -> int:
+        return int(s) if s.isdigit() else 0
+
+    out = {}
+    for line in text.splitlines():
+        m = _SHARD_ROW.match(line)
+        if not m:
+            continue
+        for name in _NAME.findall(m.group(1)):
+            out[name] = (int(m.group(2)), cell(m.group(3)), cell(m.group(4)),
+                         int(m.group(5)), m.group(6).strip().startswith("yes"))
+    return out
+
+
+def check_shard_table(path: str) -> list:
+    """DESIGN.md §12: the shard-geometry table must match the live registry —
+    `k_align`, decode-unit width, occupancy block, `shard_k_quantum`, and
+    K-shardability per format (every packable format present)."""
+    with open(path) as f:
+        text = f.read()
+    sec = section(text, "## §12")
+    if not sec:
+        return [f"{path}: section '## §12' not found"]
+    documented = parse_shard_rows(sec)
+    failures = []
+    packable = [f for f in formats.names() if f != "fp"]
+    for name in sorted(set(packable) - set(documented)):
+        failures.append(f"{path} §12: format `{name}` missing from the "
+                        "shard-geometry table")
+    for name in sorted(set(documented) - set(packable)):
+        failures.append(f"{path} §12: documented format `{name}` is not in "
+                        "the registry")
+    for name in sorted(set(documented) & set(packable)):
+        spec = formats.get(name)
+        live = (max(spec.k_align, 1), spec.weights_per_unit or 0,
+                spec.occ_block or 0, spec.shard_k_quantum, spec.k_shardable)
+        if documented[name] != live:
+            failures.append(
+                f"{path} §12: `{name}` table row {documented[name]} != "
+                f"registry (k_align, weights/unit, occ_block, quantum, "
+                f"k_shardable) = {live}")
+    return failures
+
+
 def main() -> int:
-    failures = check_doc(DESIGN, scope="## §2") + check_doc(README)
+    failures = (check_doc(DESIGN, scope="## §2") + check_doc(README)
+                + check_shard_table(DESIGN))
     for msg in failures:
         print(f"[check-docs] FAIL: {msg}")
     if failures:
         print(f"[check-docs] {len(failures)} drift(s) between the docs "
               "tables and the live format registry")
         return 1
-    print(f"[check-docs] ok: DESIGN.md §2 and README tables match the "
-          f"registry ({len(formats.names())} formats)")
+    print(f"[check-docs] ok: DESIGN.md §2, the README table, and the §12 "
+          f"shard-geometry table match the registry "
+          f"({len(formats.names())} formats)")
     return 0
 
 

@@ -127,12 +127,25 @@ def latest_step(directory: str) -> int | None:
 
 
 def restore(template, directory: str, step: int | None = None, *,
-            shardings=None) -> tuple:
+            shardings=None, mesh=None, mode: str = "infer") -> tuple:
     """Restore into the structure of `template`; returns (tree, extra).
 
     shardings: optional matching tree of NamedSharding — leaves are
     device_put onto it (elastic re-sharding onto the current mesh).
+    mesh: convenience alternative — derive the sharding tree from the
+    standard param rules (``sharding.shard_params(template, mesh, mode)``),
+    so a checkpoint written unsharded restores straight onto a TP mesh with
+    packed planes M-sharded and grouped scale columns travelling with their
+    code rows (DESIGN.md §12).  The checkpoint bytes are mesh-agnostic
+    (leaves are host-gathered at save), so save→restore round-trips exactly
+    across any mesh change.
     """
+    if mesh is not None:
+        if shardings is not None:
+            raise ValueError("pass shardings= or mesh=, not both")
+        from repro.distributed import sharding as sharding_mod
+
+        shardings = sharding_mod.shard_params(template, mesh, mode)
     if step is None:
         step = latest_step(directory)
         if step is None:

@@ -535,20 +535,46 @@ def mpgemm(x_q: jax.Array, s_x, pw: PackedWeight,
     return spec.fn(x_q, s_x, pw, plan.interpret)
 
 
+def shard_shapes(shapes, *, tp: int = 1, tp_dim: str = "m") -> list:
+    """Map GLOBAL (n, k, m) dispatch shapes to their TP shard-local shapes.
+
+    Under tensor parallelism each device dispatches the SHARD-LOCAL
+    contraction — M/tp for column-parallel, K/tp for row-parallel — and
+    decision records and autotune-cache keys are made from those local
+    shapes (``repro.distributed.tp`` runs :func:`mpgemm` inside shard_map,
+    so this happens by construction at trace time).  Use this to autotune or
+    :func:`explain` the shapes a TP=N launch will actually run."""
+    if tp_dim not in ("m", "k"):
+        raise ValueError(f"tp_dim must be 'm' or 'k', got {tp_dim!r}")
+    out = []
+    for n, k, m in shapes:
+        dim = m if tp_dim == "m" else k
+        if dim % tp != 0:
+            raise ValueError(
+                f"{tp_dim.upper()}={dim} does not divide into tp={tp} shards")
+        out.append((n, k // tp, m) if tp_dim == "k" else (n, k, m // tp))
+    return out
+
+
 def explain(fmt: str, n: int, k: int, m: int, plan: KernelPlan = AUTO,
-            *, occupancy: float = 1.0) -> dict:
+            *, occupancy: float = 1.0, tp: int = 1, tp_dim: str = "m") -> dict:
     """Inspect a dispatch decision without running it (README quickstart).
 
     For occupancy (``_z``) formats pass the weight's measured nonzero-block
     fraction (``PackedWeight.occupancy()``) to see the skip-walk cost hints
     the attribution report uses; the default 1.0 is the dense upper bound.
+
+    ``tp``/``tp_dim`` preview the SHARD-LOCAL decision a TP launch makes:
+    the (n, k, m) given here are the GLOBAL shapes, and the hint reflects
+    the per-device contraction (see :func:`shard_shapes`).
     """
+    ((n, k, m),) = shard_shapes([(n, k, m)], tp=tp, tp_dim=tp_dim)
     regime = "gemv" if n == 1 else "gemm"
     spec, source = select(fmt, n, k, m, plan)
     return {
         "fmt": fmt, "regime": regime, "n": n, "k": k, "m": m,
         "kernel": spec.name, "source": source, "backend": spec.backend,
-        "occupancy": occupancy,
+        "occupancy": occupancy, "tp": tp, "tp_dim": tp_dim,
         "cost_hint_us": spec.cost(fmt, n, k, m, occupancy),
         "candidates": [
             (s.name, round(s.cost(fmt, n, k, m, occupancy), 3))

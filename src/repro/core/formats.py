@@ -185,6 +185,34 @@ class FormatSpec:
         the 'table' is the weight itself and LUT build is pure overhead."""
         return self.elut and self.group >= 2
 
+    # -- TP shard geometry (DESIGN.md §12) ----------------------------------
+
+    @property
+    def k_shardable(self) -> bool:
+        """Row-parallel (K) sharding is a pure byte-range slice of the packed
+        planes.  False for split-K formats: the ThreeK-prefix/TwoK-tail
+        structure is a function of the FULL K, so a K slice of the planes is
+        not the packing of the K slice of the weights."""
+        return self.split_k is None
+
+    @property
+    def shard_k_quantum(self) -> int:
+        """Smallest K granule a row-parallel shard boundary may fall on: every
+        shard must hold whole decode units (so the packed-byte stream slices
+        at a byte boundary), whole scale groups (so group scales never
+        straddle the psum — the accumulator-granularity argument), and whole
+        occupancy blocks (so the ``occ`` bitmap slices with its codes).
+        Usually equal to ``k_align``; tq1's zero-padded packing loosens
+        k_align to 1 while its 5-weight bytes still pin the shard quantum."""
+        q = max(self.k_align, 1)
+        if self.weights_per_unit:
+            q = _lcm(q, self.weights_per_unit)
+        if self.group_scale_cols:
+            q = _lcm(q, self.group_scale_cols)
+        if self.occ_block:
+            q = _lcm(q, self.occ_block)
+        return q
+
 
 REGISTRY: dict[str, FormatSpec] = {}
 

@@ -299,6 +299,24 @@ def expand_group_scales(scale: jax.Array, k: int) -> jax.Array:
     return jnp.repeat(scale.T.astype(jnp.float32), g, axis=1).reshape(m, k)
 
 
+def col_slice_bytes(k0: int, k1: int, weights_per_unit: int,
+                    unit_bytes: int) -> tuple[int, int]:
+    """Packed-byte range [b0, b1) of a plane covering K-columns [k0, k1).
+
+    Because every plane packs along K in consumption order and no code ever
+    spans a decode unit, a K range that starts and ends on unit boundaries
+    maps to a CONTIGUOUS byte range — the invariant that makes row-parallel
+    (K) sharding of a PackedWeight a pure slice, never a repack
+    (DESIGN.md §12).  Raises when a bound falls inside a unit.
+    """
+    if k0 % weights_per_unit or k1 % weights_per_unit:
+        raise ValueError(
+            f"K slice [{k0}, {k1}) not aligned to {weights_per_unit}-weight "
+            "decode units; a mid-unit boundary would split a packed code")
+    return (k0 // weights_per_unit * unit_bytes,
+            k1 // weights_per_unit * unit_bytes)
+
+
 # ---------------------------------------------------------------------------
 # I2_S — 2-bit codes, 4 per byte
 # ---------------------------------------------------------------------------

@@ -24,7 +24,8 @@ from repro.core import formats, packing
 from repro.core.formats import FORMAT_BPW  # re-export (legacy import site)
 
 __all__ = ["FORMAT_BPW", "PackedWeight", "pack_weight", "pack_ternary",
-           "pack_quantized", "unpack_weight"]
+           "pack_quantized", "unpack_weight", "shard_m", "shard_k",
+           "check_shard_m", "check_shard_k"]
 
 
 @partial(
@@ -137,3 +138,116 @@ def unpack_weight(pw: PackedWeight) -> jax.Array:
     if pw.fmt == "fp":
         return pw.planes["w"]
     return pw.spec.unpack(pw.planes, pw.k)
+
+
+# ---------------------------------------------------------------------------
+# TP shard slicing (DESIGN.md §12).
+#
+# A PackedWeight shards WITHOUT repacking because every plane packs along K
+# in consumption order and every metadata plane is aligned to the code plane:
+#
+#   * column-parallel (M): every plane is row-major in M ([M, ...]), so an
+#     M shard is a row slice of every plane; the grouped [K//G, M] scale
+#     plane slices its COLUMNS — scale columns travel with their code rows.
+#   * row-parallel (K): a shard boundary on the format's shard_k_quantum
+#     (whole decode units × whole scale groups × whole occupancy blocks)
+#     slices each plane's bytes contiguously (packing.col_slice_bytes), the
+#     occ plane at block granularity, and the scale plane at group rows.
+#
+# Misaligned requests RAISE — silently repacking would change the bytes a
+# checkpoint pins and break the concat-reconstructs-exactly property the
+# sharded test tier asserts.
+# ---------------------------------------------------------------------------
+
+
+def check_shard_m(m: int, n_shards: int) -> int:
+    """Validate a column-parallel split; returns the per-shard M."""
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    if m % n_shards != 0:
+        raise ValueError(
+            f"M={m} does not divide into {n_shards} column-parallel shards")
+    return m // n_shards
+
+
+def check_shard_k(spec: formats.FormatSpec, k: int, n_shards: int) -> int:
+    """Validate a row-parallel split; returns the per-shard K.
+
+    Every shard must be a multiple of ``spec.shard_k_quantum`` so packed
+    bytes slice at unit boundaries, scale groups never straddle the psum,
+    and occupancy blocks stay whole; split-K formats refuse entirely."""
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    if not spec.k_shardable:
+        raise ValueError(
+            f"format {spec.name!r} is split-K (ThreeK prefix + TwoK tail is "
+            "a function of the full K); row-parallel sharding would need a "
+            "repack — shard along M instead")
+    if k % n_shards != 0:
+        raise ValueError(
+            f"K={k} does not divide into {n_shards} row-parallel shards")
+    q = spec.shard_k_quantum
+    if (k // n_shards) % q != 0:
+        raise ValueError(
+            f"K={k} over {n_shards} shards gives {k // n_shards} columns per "
+            f"shard, not a multiple of {spec.name!r}'s shard quantum {q} "
+            "(whole decode units / scale groups / occupancy blocks)")
+    return k // n_shards
+
+
+def _slice_planes_m(planes: dict, m0: int, m1: int) -> dict:
+    return {name: p[m0:m1] for name, p in planes.items()}
+
+
+def _slice_plane_k(name: str, p: jax.Array, spec: formats.FormatSpec,
+                   k0: int, k1: int) -> jax.Array:
+    if name in ("w", "w4"):        # native-dtype planes: one element per column
+        return p[:, k0:k1]
+    if name == "occ":              # [M, K/occ_block] block bitmap
+        return p[:, k0 // spec.occ_block: k1 // spec.occ_block]
+    # packed code plane: contiguous bytes per whole decode units
+    b0, b1 = packing.col_slice_bytes(
+        k0, k1, spec.weights_per_unit, spec.unit_bytes)
+    return p[:, b0:b1]
+
+
+def shard_m(pw: PackedWeight, n_shards: int) -> tuple:
+    """Column-parallel split -> ``n_shards`` self-contained PackedWeights.
+
+    Shard i holds output rows [i·M/n, (i+1)·M/n): a row slice of every code
+    and metadata plane, and the matching COLUMN slice of the grouped scale
+    plane (a scalar scale replicates).  Concatenating the shards' planes
+    along M reconstructs the unsharded planes byte-for-byte."""
+    m_local = check_shard_m(pw.m, n_shards)
+    out = []
+    for i in range(n_shards):
+        m0, m1 = i * m_local, (i + 1) * m_local
+        scale = pw.scale if pw.scale.ndim == 0 else pw.scale[:, m0:m1]
+        out.append(PackedWeight(
+            _slice_planes_m(pw.planes, m0, m1), scale, pw.fmt,
+            (m_local, pw.k), three_k=pw.three_k))
+    return tuple(out)
+
+
+def shard_k(pw: PackedWeight, n_shards: int) -> tuple:
+    """Row-parallel split -> ``n_shards`` self-contained PackedWeights.
+
+    Shard i holds K-columns [i·K/n, (i+1)·K/n): a contiguous byte slice of
+    each code plane, the matching occupancy blocks, and the matching scale
+    GROUP ROWS of the [K//G, M] plane (a per-tensor scalar replicates — the
+    caller owns applying it ONCE, after the cross-shard reduction, at int32
+    accumulator granularity; see repro.distributed.tp.mpgemm_kshard)."""
+    spec = pw.spec
+    k_local = check_shard_k(spec, pw.k, n_shards)
+    out = []
+    for i in range(n_shards):
+        k0, k1 = i * k_local, (i + 1) * k_local
+        planes = {name: _slice_plane_k(name, p, spec, k0, k1)
+                  for name, p in pw.planes.items()}
+        if pw.scale.ndim == 0:
+            scale = pw.scale
+        else:
+            g = spec.group_scale_cols
+            scale = pw.scale[k0 // g: k1 // g]
+        out.append(PackedWeight(planes, scale, pw.fmt, (pw.m, k_local)))
+    return tuple(out)

@@ -62,8 +62,22 @@ def _axis_size(mesh, name) -> int:
     return mesh.shape[name]
 
 
+_AXES_DROPPED = 0
+
+
+def axes_dropped() -> int:
+    """Process-wide count of sharding axes ``_fit`` dropped because a dim
+    was not divisible by the proposed mesh axis.  Each drop replicates that
+    dim — graceful, but a degradation: surfaced through the obs metrics
+    registry (``sharding_axes_dropped``, mirroring
+    ``dispatch.decisions_dropped``) so a model silently serving replicated
+    is observable rather than silent."""
+    return _AXES_DROPPED
+
+
 def _fit(spec: tuple, shape: tuple, mesh) -> P:
-    """Drop spec axes that don't divide the corresponding dim."""
+    """Drop spec axes that don't divide the corresponding dim (counted)."""
+    global _AXES_DROPPED
     out = []
     for dim, ax in zip(shape, spec):
         if ax is None:
@@ -71,6 +85,7 @@ def _fit(spec: tuple, shape: tuple, mesh) -> P:
         elif dim % _axis_size(mesh, ax) == 0:
             out.append(ax)
         else:
+            _AXES_DROPPED += 1
             out.append(None)
     out += [None] * (len(shape) - len(out))
     return P(*out)
@@ -128,6 +143,14 @@ def param_spec(path_keys: list, leaf, mesh, mode: str = "infer") -> P:
         return P(*([None] * nd))
     # BitLinear master weights / packed planes / biases: out-features sharded
     bitlin_keys = {"q", "k", "v", "o", "gate", "up", "down", "in", "out"}
+    if "scale" in path_keys and bitlin_keys & set(path_keys):
+        # PackedWeight scale: the grouped plane is [K//G, M] — shard its
+        # COLUMNS so scale columns travel with their (M-sharded) code rows;
+        # the leading K//G dim must stay whole or K-group scales would be
+        # torn apart from their accumulators.  Scalar scales replicate.
+        if nd - scan == 2:
+            return _fit(pre + (None, wax), leaf.shape, mesh)
+        return P(*([None] * nd))
     if bitlin_keys & set(path_keys) and ("w" in path_keys or "planes" in path_keys
                                          or "b" in path_keys or "w4" in path_keys):
         if nd - scan >= 1:

@@ -1,0 +1,158 @@
+"""Tensor-parallel packed mpGEMM: mesh-sharded PackedWeight execution.
+
+This is the execution half of the TP story (DESIGN.md §12; the slicing half
+is ``repro.core.qtensor.shard_m`` / ``shard_k``).  Two parallelisms:
+
+  * **column-parallel (M-shard)** — every device holds a self-contained
+    PackedWeight over a row slice of the output features (code planes row-
+    sliced, the grouped [K//G, M] scale plane COLUMN-sliced so scale columns
+    travel with their code rows).  Each device runs the full-K contraction
+    for its rows — the same arithmetic, element for element, as the
+    unsharded kernel — and the outputs concatenate.  Bit-identical to
+    unsharded BY CONSTRUCTION, for any scale, lossless or not.
+
+  * **row-parallel (K-shard)** — devices hold disjoint K-column ranges and
+    the partial results reduce with ONE ``psum`` at int32-accumulator
+    granularity:
+
+      - per-tensor-scale formats: each shard's kernel runs with UNIT scales,
+        so its fp32 output is exactly its int32 partial accumulator (every
+        value an integer < 2^24, the same representability bound the whole
+        lossless contract rests on); the psum adds those integers exactly;
+        the per-tensor scale multiplies ONCE, after the reduction.  The
+        result is bit-identical to the unsharded kernel for ANY scale —
+        scaling partials before the reduction (the wrong granularity) is
+        exact only for dyadic scales, and the sharded test tier carries a
+        witness proving it diverges.
+
+      - grouped-scale formats: shard boundaries sit on scale-group
+        boundaries (``FormatSpec.shard_k_quantum``), so every group's scale
+        is applied inside exactly one shard at the accumulator granularity
+        the grouped kernels already use; the psum then adds exactly-scaled
+        group accumulators — the same set of fp32 addends as the unsharded
+        group walk.  Exact (atol=0 vs the fp64 oracle) under the conformance
+        harness's dyadic scales.
+
+Both entry points run the existing kernels unmodified through
+``dispatch.mpgemm`` inside ``shard_map``, so dispatch decisions and
+autotune keys record the SHARD-LOCAL M and K — the shapes that actually
+execute per device.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import dispatch
+from repro.core.qtensor import PackedWeight, check_shard_k, check_shard_m
+
+__all__ = ["packed_sharding", "mpgemm_mshard", "mpgemm_kshard"]
+
+
+def _axis_size(mesh, axis: str) -> int:
+    if axis not in mesh.axis_names:
+        raise ValueError(
+            f"mesh has no axis {axis!r}; axes: {mesh.axis_names}")
+    return mesh.shape[axis]
+
+
+def _specs(pw: PackedWeight, axis: str, dim: str):
+    """(plane specs dict, scale spec) placing shard i's slice on device i.
+
+    Packing is K-contiguous per row, so the NamedSharding slice of each
+    GLOBAL plane is byte-for-byte the shard ``qtensor.shard_m/shard_k``
+    would cut — sharded placement is a layout no-op, never a repack."""
+    if dim == "m":
+        planes = {name: P(axis, None) for name in pw.planes}
+        scale = P() if pw.scale.ndim == 0 else P(None, axis)
+    elif dim == "k":
+        planes = {name: P(None, axis) for name in pw.planes}
+        scale = P() if pw.scale.ndim == 0 else P(axis, None)
+    else:
+        raise ValueError(f"dim must be 'm' or 'k', got {dim!r}")
+    return planes, scale
+
+
+def packed_sharding(pw: PackedWeight, mesh, *, axis: str = "model",
+                    dim: str = "m") -> PackedWeight:
+    """A PackedWeight-shaped tree of NamedSharding for ``jax.device_put``.
+
+    Validates the same alignment rules as the slicing API (misaligned
+    requests raise, they do not silently replicate)."""
+    n = _axis_size(mesh, axis)
+    if dim == "m":
+        check_shard_m(pw.m, n)
+    else:
+        check_shard_k(pw.spec, pw.k, n)
+    plane_specs, scale_spec = _specs(pw, axis, dim)
+    return PackedWeight(
+        {name: NamedSharding(mesh, s) for name, s in plane_specs.items()},
+        NamedSharding(mesh, scale_spec), pw.fmt, pw.shape,
+        three_k=pw.three_k)
+
+
+def mpgemm_mshard(x_q: jax.Array, s_x, pw: PackedWeight, mesh, *,
+                  axis: str = "model",
+                  plan: dispatch.KernelPlan = dispatch.AUTO) -> jax.Array:
+    """Column-parallel mpGEMM: int8 [..., K] × PackedWeight → fp32 [..., M].
+
+    x replicated, weight M-sharded; shard outputs concatenate along M.
+    Bit-identical to the unsharded dispatch for any scale."""
+    n = _axis_size(mesh, axis)
+    m_local = check_shard_m(pw.m, n)
+    plane_specs, scale_spec = _specs(pw, axis, "m")
+    x_spec = P(*([None] * x_q.ndim))
+    out_spec = P(*([None] * (x_q.ndim - 1) + [axis]))
+    s_x = jnp.asarray(s_x, jnp.float32)
+
+    def local_fn(x, planes, scale, sx):
+        lpw = PackedWeight(planes, scale, pw.fmt, (m_local, pw.k),
+                           three_k=pw.three_k)
+        return dispatch.mpgemm(x, sx, lpw, plan)
+
+    fn = shard_map(local_fn, mesh=mesh,
+                   in_specs=(x_spec, plane_specs, scale_spec, P()),
+                   out_specs=out_spec)
+    return fn(x_q, pw.planes, pw.scale, s_x)
+
+
+def mpgemm_kshard(x_q: jax.Array, s_x, pw: PackedWeight, mesh, *,
+                  axis: str = "model",
+                  plan: dispatch.KernelPlan = dispatch.AUTO) -> jax.Array:
+    """Row-parallel mpGEMM with ONE psum at int32-accumulator granularity.
+
+    x and weight K-sharded on group-aligned boundaries; the activation's
+    per-tensor/per-token scale and a per-tensor weight scale are applied
+    ONLY after the cross-shard reduction (module docstring holds the
+    exactness argument).  Requires a lossless kernel plan: the lossy
+    requantized-LUT kernels fold ``s_x`` into their table build, which the
+    deferred-scale contract cannot express."""
+    n = _axis_size(mesh, axis)
+    k_local = check_shard_k(pw.spec, pw.k, n)
+    grouped = pw.scale.ndim != 0
+    plane_specs, scale_spec = _specs(pw, axis, "k")
+    x_spec = P(*([None] * (x_q.ndim - 1) + [axis]))
+    out_spec = P(*([None] * x_q.ndim))
+    s_x = jnp.asarray(s_x, jnp.float32)
+    one = jnp.float32(1.0)
+
+    def local_fn(x, planes, scale, sx):
+        if grouped:
+            # group scales already apply at accumulator granularity inside
+            # the kernel, and no group straddles a shard — psum adds
+            # exactly-scaled group accumulators
+            lpw = PackedWeight(planes, scale, pw.fmt, (pw.m, k_local))
+            return jax.lax.psum(dispatch.mpgemm(x, sx, lpw, plan), axis)
+        # per-tensor: unit scales make the shard output ITS int32 partial
+        # accumulator (exactly representable fp32); reduce first, scale once
+        lpw = PackedWeight(planes, one, pw.fmt, (pw.m, k_local))
+        acc = jax.lax.psum(dispatch.mpgemm(x, one, lpw, plan), axis)
+        return acc * (sx * scale)
+
+    fn = shard_map(local_fn, mesh=mesh,
+                   in_specs=(x_spec, plane_specs, scale_spec, P()),
+                   out_specs=out_spec)
+    return fn(x_q, pw.planes, pw.scale, s_x)

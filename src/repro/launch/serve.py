@@ -90,9 +90,27 @@ def make_draft(args, params, cfg):
     return spec_mod.make_draft(dparams, dcfg, label=args.draft)
 
 
-def make_engine(args, params, cfg, obs=None):
-    if not (args.paged or args.prefill_chunk > 1 or args.bursty
-            or args.prefix_cache or args.speculate > 0):
+def make_tp_mesh(args):
+    """The (data=1, model=tp) serving mesh for --tp N (None when tp == 1).
+
+    On a dev box force the device count first:
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set BEFORE jax
+    first initialises — DESIGN.md §12 quickstart)."""
+    if args.tp <= 1:
+        return None
+    ndev = len(jax.devices())
+    if ndev < args.tp:
+        raise SystemExit(
+            f"[serve] --tp {args.tp} needs {args.tp} devices, found {ndev}; "
+            "on CPU set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{args.tp}")
+    from repro.launch.mesh import make_mesh
+    return make_mesh((1, args.tp), ("data", "model"))
+
+
+def make_engine(args, params, cfg, obs=None, mesh=None):
+    if mesh is None and not (args.paged or args.prefill_chunk > 1 or args.bursty
+                             or args.prefix_cache or args.speculate > 0):
         return Engine(params, cfg, batch_slots=args.slots,
                       max_seq=args.max_seq, obs=obs)
     return ServeEngine(params, cfg, ServeConfig(
@@ -103,7 +121,7 @@ def make_engine(args, params, cfg, obs=None):
         prefill_budget=args.prefill_budget,
         prefix_cache=args.prefix_cache,
         speculate_k=args.speculate), obs=obs,
-        draft=make_draft(args, params, cfg))
+        draft=make_draft(args, params, cfg), mesh=mesh)
 
 
 def _request_qos(args, rng) -> str | None:
@@ -197,6 +215,12 @@ def main():
                     help="QoS class applied to every request ('mixed': "
                          "random per request); also picks the default --fmt "
                          "via the registry objective")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel shards: serve on a (data=1, "
+                         "model=N) mesh with packed planes M-sharded "
+                         "(DESIGN.md §12); tokens stay bit-identical to "
+                         "--tp 1.  Host smoke: XLA_FLAGS=--xla_force_host_"
+                         "platform_device_count=N")
     ap.add_argument("--seed", type=int, default=0,
                     help="workload RNG seed (prompts, priorities, QoS mix)")
     ap.add_argument("--ckpt", default="", help="restore packed params from here")
@@ -278,6 +302,10 @@ def main():
     batch_ns = sorted(set(batch_ns))
     layer_shapes = [(n, k, m) for n in batch_ns
                     for (k, m) in ((d, d), (d, f), (f, d))]
+    if args.tp > 1:
+        # TP dispatches the SHARD-LOCAL contraction (M/tp under the engine's
+        # column-parallel layout) — explain/autotune the shapes that run
+        layer_shapes = dispatch.shard_shapes(layer_shapes, tp=args.tp)
     if args.explain:
         for n, k, m in layer_shapes:
             print(dispatch.explain(args.fmt, n, k, m, plan))
@@ -294,7 +322,8 @@ def main():
         params, _ = store.restore(params, args.ckpt)
 
     obs = make_obs(args)
-    eng = make_engine(args, params, cfg, obs)
+    mesh = make_tp_mesh(args)
+    eng = make_engine(args, params, cfg, obs, mesh)
     rng = np.random.default_rng(args.seed)
     templates = None
     if args.prefix_cache:
@@ -326,6 +355,8 @@ def main():
            (f"+chunk{args.prefill_chunk}" if args.prefill_chunk > 1 else "+token") + \
            (f"+budget{args.prefill_budget}" if args.prefill_budget > 0 else "") + \
            (f"+spec{args.speculate}" if args.speculate > 0 else "")
+    if args.tp > 1:
+        mode += f"+tp{args.tp}"
     print(f"[serve] {args.arch} fmt={args.fmt} {mode}: "
           f"{len(done)} requests, {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s on CPU; see benchmarks for TPU projections)")

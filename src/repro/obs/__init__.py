@@ -23,6 +23,7 @@ import dataclasses
 import time
 
 from repro.core import dispatch
+from repro.distributed import sharding
 from repro.obs import events, kernels, metrics, trace  # noqa: F401
 from repro.obs.events import format_prefix_summary, format_stall  # noqa: F401
 from repro.obs.kernels import InstrumentedFn, KernelProfiler, instrument  # noqa: F401
@@ -68,6 +69,8 @@ def metrics_blob(obs: Obs) -> dict:
         c = reg.counter("dispatch_decisions_dropped")
         c.inc(dispatch.decisions_dropped() - c.value)
         reg.gauge("dispatch_decisions_retained").set(len(dispatch.decisions()))
+        s = reg.counter("sharding_axes_dropped")
+        s.inc(sharding.axes_dropped() - s.value)
     return {
         "metrics": reg.snapshot() if reg.enabled else
             {"counters": {}, "gauges": {}, "histograms": {}},
@@ -75,6 +78,7 @@ def metrics_blob(obs: Obs) -> dict:
             "decisions_dropped": dispatch.decisions_dropped(),
             "decisions": [dataclasses.asdict(d) for d in dispatch.decisions()],
         },
+        "sharding": {"axes_dropped": sharding.axes_dropped()},
         "measured_vs_predicted": obs.kernels.report() if obs.kernels else
             {"rows": [], "unattributed_s": 0.0,
              "note": "kernel profiling disabled"},

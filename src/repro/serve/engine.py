@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.core import dispatch
 from repro.core.dispatch import KernelPlan
+from repro.distributed import sharding
 from repro.models import lm
 from repro.obs import NULL_OBS, Obs, format_stall
 from repro.obs import kernels as obs_kernels
@@ -151,7 +152,8 @@ class ServeEngine:
                  *, pack: bool = True, seed: int = 0,
                  plan: KernelPlan | None = None, clock=time.perf_counter,
                  obs: Obs | None = None,
-                 draft: spec_mod.DraftModel | spec_mod.LookupDraft | None = None):
+                 draft: spec_mod.DraftModel | spec_mod.LookupDraft | None = None,
+                 mesh=None):
         if plan is not None:
             cfg = cfg.with_plan(plan)
         self.cfg = cfg
@@ -161,6 +163,18 @@ class ServeEngine:
         self.scfg = scfg = serve or ServeConfig()
         self.max_seq = scfg.max_seq   # legacy attribute
         self.params = lm.pack(params, cfg) if pack and cfg.quant.mode == "quant" else params
+        self.mesh = mesh
+        if mesh is not None:
+            # TP serving (DESIGN.md §12): install the mesh so bare
+            # PartitionSpec constraints resolve in jit, pin packed planes
+            # M-sharded (scale columns travel with their code rows — the
+            # "scale" rule in sharding.param_spec), and let GSPMD propagate
+            # through the model body.  M-sharded weights keep every kernel's
+            # per-output-row arithmetic identical to unsharded, so serving
+            # stays bit-identical (asserted by the sharded test tier).
+            sharding.set_mesh(mesh)
+            self.params = jax.device_put(
+                self.params, sharding.shard_params(self.params, mesh, "infer"))
         self.slots: list[_Slot | None] = [None] * scfg.batch_slots
         self.sched = AdmissionScheduler()
         self.stats = ServeStats()
@@ -195,6 +209,12 @@ class ServeEngine:
             self.tables = None
             self.state = lm.init_state(cfg, scfg.batch_slots, scfg.max_seq)
             self._dummy_table = jnp.zeros((scfg.batch_slots, 1), jnp.int32)
+        if mesh is not None:
+            # sharded KV pools: paged block pools and dense caches take the
+            # same state_spec rules (KV heads on "model" when they divide)
+            self.state = jax.device_put(
+                self.state,
+                sharding.shard_state(self.state, mesh, batch=scfg.batch_slots))
 
         # Prefix sharing needs paged block identity AND content-addressable
         # layer state: attention KV at position p depends only on tokens
@@ -342,6 +362,10 @@ class ServeEngine:
 
     def metrics_summary(self) -> dict:
         out = self.stats.summary()
+        if self.mesh is not None:
+            out["mesh_axes"] = dict(self.mesh.shape)
+            out["tp"] = int(self.mesh.shape.get("model", 1))
+            out["sharding_axes_dropped"] = sharding.axes_dropped()
         if self.pcfg is not None:
             out["kv_blocks"] = self.pcfg.num_blocks
             out["kv_blocks_free"] = self.allocator.free_count
